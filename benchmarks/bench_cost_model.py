@@ -1,0 +1,83 @@
+"""§6.1 — the placement calculus as a decision engine.
+
+Evaluates decide_placement against a brute-force oracle over randomized
+(T_Q, data size, topology-bandwidth) instances: the paper's rule — move
+compute to data when T_X > T_Q, else move data — should pick the pilot
+minimizing completion-relevant cost.  Also sweeps
+choose_replication_degree's incremental-replication behaviour.
+"""
+
+from __future__ import annotations
+
+import random
+from typing import List
+
+from repro.core import (
+    choose_replication_degree,
+    decide_placement,
+    estimate_tx,
+    make_tpu_fleet_topology,
+)
+
+from .common import GB, emit
+
+
+def run(n_instances: int = 500, seed: int = 7) -> List[str]:
+    rng = random.Random(seed)
+    topo, hosts = make_tpu_fleet_topology(pods=4, hosts_per_pod=4)
+    optimal = 0
+    regrets = []
+    for _ in range(n_instances):
+        data_loc = rng.choice(hosts)
+        nbytes = int(rng.uniform(0.1, 64) * GB)
+        pilots = [
+            (f"p{i}", rng.choice(hosts), rng.uniform(0, 30.0))
+            for i in range(rng.randint(2, 6))
+        ]
+        choices = decide_placement({data_loc: nbytes}, pilots, topo)
+        # oracle: exhaustive min of T_Q + T_X
+        oracle = min(
+            tq + estimate_tx(nbytes, data_loc, loc, topo)
+            for _, loc, tq in pilots
+        )
+        got = choices[0].score
+        if abs(got - oracle) < 1e-9:
+            optimal += 1
+        regrets.append(got - oracle)
+    frac = optimal / n_instances
+    rows = [
+        emit("cost_model.placement.optimal_fraction", 0.0, f"{frac:.3f}"),
+        emit(
+            "cost_model.placement.max_regret_s",
+            0.0,
+            f"{max(regrets):.4f}",
+        ),
+    ]
+    # incremental replication: more tasks → more replicas chosen
+    sites = [(f"cluster:pod{i}", 8) for i in range(4)]
+    degrees = []
+    for tasks in (1, 8, 64, 512):
+        chosen = choose_replication_degree(
+            nbytes=int(4 * GB),
+            src="cluster:pod0",
+            candidate_sites=sites,
+            tasks=tasks,
+            task_compute_s=30.0,
+            topo=topo,
+        )
+        degrees.append(len(chosen))
+        rows.append(
+            emit(f"cost_model.replication_degree.tasks{tasks}", 0.0, str(len(chosen)))
+        )
+    rows.append(
+        emit(
+            "cost_model.claim.degree_monotone_in_demand",
+            0.0,
+            str(all(a <= b for a, b in zip(degrees, degrees[1:]))),
+        )
+    )
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,54 @@
+"""Roofline bench: report the three roofline terms per baselined dry-run
+cell (reads experiments/dryrun artifacts; see EXPERIMENTS.md §Roofline)."""
+
+from __future__ import annotations
+
+from typing import List
+
+from repro.launch.roofline import derive_terms, load_cells
+
+from .common import emit
+
+
+def run(mesh_name: str = None) -> List[str]:
+    if mesh_name is None:
+        # prefer the optimized variant when its artifacts exist
+        mesh_name = (
+            "pod_16x16__opt" if load_cells("pod_16x16__opt") else "pod_16x16"
+        )
+    rows = []
+    cells = load_cells(mesh_name)
+    if not cells:
+        rows.append(
+            emit("roofline.status", 0.0, "no dry-run artifacts yet (run dryrun --all)")
+        )
+        return rows
+    n_ok = n_skip = n_fail = 0
+    for cell in cells:
+        if cell["status"] == "SKIP":
+            n_skip += 1
+            continue
+        if cell["status"] != "OK":
+            n_fail += 1
+            continue
+        t = derive_terms(cell)
+        if not t:
+            continue
+        n_ok += 1
+        step_s = max(t["compute_s"], t["memory_s"], t["collective_s"])
+        rows.append(
+            emit(
+                f"roofline.{t['arch']}.{t['shape']}",
+                step_s * 1e6,
+                f"dom={t['dominant']};useful={t['useful_ratio']:.2f};"
+                f"frac={t['roofline_frac']:.2f};fits={t['fits']}",
+            )
+        )
+    rows.append(
+        emit("roofline.cells", 0.0, f"ok={n_ok};skip={n_skip};fail={n_fail}")
+    )
+    return rows
+
+
+if __name__ == "__main__":
+    run()

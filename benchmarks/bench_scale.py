@@ -1,0 +1,179 @@
+"""Figs. 11–13 — "Large-Scale, Distributed Genome Sequencing on XSEDE":
+a 1024-task ensemble (9 GB input each) across 1–3 machines, with and
+without up-front Data-Unit replication.
+
+Scenarios (paper numbering):
+  1. Lonestar only — I/O contention on one machine (per-task slowdown
+     grows with concurrency, the paper's Fig. 12 observation);
+  2. + Stampede, NO replication — each remote task must move 9 GB first,
+     so the remote machine wins few tasks (paper: ~5 %);
+  3. + Stampede, WITH up-front replication — staging collapses to a link,
+     distribution balances (paper: ~40 % remote) and T improves despite
+     Stampede's 8100 s queue;
+  4. + Trestles over WAN, with replication — more spread, but queue-time
+     variance and the WAN hurt: T lands between scenarios 3 and 1.
+
+Mechanics: Data-Units are staged/replicated through the REAL runtime (real
+PDs, real replica state); task placement + makespan are then replayed with
+a deterministic slot-level discrete-event scheduler driven by the §6.1
+cost calculus — each free slot takes the next task wherever
+(queue + staging + compute) finishes earliest, with staging cost 0 where a
+replica is linkable and T_X otherwise.  (The threaded runtime executes
+tasks in wall-time, which is instant here; sim-time load dynamics need the
+event replay — DESIGN.md §2.)
+"""
+
+from __future__ import annotations
+
+import heapq
+from typing import Dict, List, Tuple
+
+from repro.core import (
+    DataUnitDescription,
+    PilotManager,
+    Topology,
+    estimate_tx,
+    replicate_group,
+)
+
+from .common import GB, MB, emit
+
+SCALE = 1e-4  # 100 KB stands in for 1 GB of DU payload
+TASK_GB = 9.0
+N_TASKS = 1024
+BASE_COMPUTE_S = 3600.0
+LONESTAR, STAMPEDE, TRESTLES = "xsede:lonestar", "xsede:stampede", "xsede:trestles"
+QUEUE_S = {LONESTAR: 400.0, STAMPEDE: 8100.0, TRESTLES: 2500.0}
+SLOTS = {LONESTAR: 512, STAMPEDE: 256, TRESTLES: 128}
+
+
+def _topology() -> Topology:
+    topo = Topology()
+    topo.register(LONESTAR, bandwidth=40 * MB, latency=0.02)
+    topo.register(STAMPEDE, bandwidth=40 * MB, latency=0.02)
+    topo.register(TRESTLES, bandwidth=10 * MB, latency=0.08)
+    return topo
+
+
+def _io_stretch(concurrency: int) -> float:
+    """Fig. 12: per-task runtime grows with concurrent tasks per machine
+    (shared-filesystem contention)."""
+    return 1.0 + 0.002 * concurrency
+
+
+def _des_schedule(
+    n_tasks: int,
+    machines: List[str],
+    stage_cost: Dict[str, float],
+    n_slots: Dict[str, int],
+) -> Tuple[float, Dict[str, int]]:
+    """Slot-level event replay: each task goes wherever it would FINISH
+    earliest (queue wait + staging + contention-stretched compute).
+
+    Remote staging (stage_cost > 0) SERIALIZES on the home machine's
+    outbound uplink — concurrent 9 GB pulls share one link, which is what
+    limited the paper's scenario 2 to ~5 % remote tasks."""
+    per_machine = {m: [QUEUE_S[m]] * n_slots[m] for m in machines}
+    for m in machines:
+        heapq.heapify(per_machine[m])
+    split = {m: 0 for m in machines}
+    uplink_free = 0.0
+    end_times = []
+    for _ in range(n_tasks):
+        best = None
+        for m in machines:
+            t0 = per_machine[m][0]
+            # contention from slots still busy at this task's start time —
+            # waves with fewer concurrent tasks run faster (Fig. 12)
+            busy = sum(1 for t in per_machine[m] if t > t0)
+            stretch = _io_stretch(busy)
+            if stage_cost[m] > 0:
+                start = max(t0, uplink_free)
+                fin = start + stage_cost[m] + BASE_COMPUTE_S * stretch
+            else:
+                fin = t0 + BASE_COMPUTE_S * stretch
+            if best is None or fin < best[0]:
+                best = (fin, m, t0)
+        fin, m, t0 = best
+        heapq.heappop(per_machine[m])
+        heapq.heappush(per_machine[m], fin)
+        if stage_cost[m] > 0:
+            uplink_free = max(t0, uplink_free) + stage_cost[m]
+        split[m] += 1
+        end_times.append(fin)
+    return max(end_times), split
+
+
+def _run_scenario(
+    tag: str, machines: List[str], replicate: bool, n_tasks: int
+) -> Dict:
+    mgr = PilotManager(topology=_topology())
+    pds = {
+        m: mgr.start_pilot_data(service_url=f"mem://{m}/pd-{tag}", affinity=m)
+        for m in machines
+    }
+    home = machines[0]
+    nbytes_real = int(TASK_GB * GB * SCALE)
+    # one representative DU carries the replica state (all task inputs
+    # share placement in these scenarios); T_R measured on the real runtime
+    du = mgr.cds.submit_data_unit(
+        DataUnitDescription(
+            name=f"inputs-{tag}", files={"reads.fq": b"R" * nbytes_real}
+        ),
+        target=pds[home],
+    )
+    t_d = 0.0
+    if replicate and len(machines) > 1:
+        others = [pds[m] for m in machines[1:]]
+        # T_R measured through the real replication machinery; the paper's
+        # replication overlapped with the pilots' batch-queue wait
+        # (scenario 3: "in average the creation of the replica takes 130
+        # sec and is negligible"), so only the non-overlapped part counts.
+        per_du = replicate_group(du, pds[home], others, mgr.ctx) / SCALE
+        t_d = max(0.0, per_du - min(QUEUE_S[m] for m in machines[1:]))
+    topo = mgr.topology
+    stage_cost = {}
+    for m in machines:
+        if pds[m].has_du(du.id):
+            stage_cost[m] = 0.0  # linkable replica
+        else:
+            stage_cost[m] = estimate_tx(
+                int(TASK_GB * GB), home, m, topo
+            )
+    # quick mode scales slot counts with the task count (same ratios)
+    n_slots = {
+        m: max(8, SLOTS[m] * n_tasks // N_TASKS) for m in machines
+    }
+    makespan, split = _des_schedule(n_tasks, machines, stage_cost, n_slots)
+    mgr.shutdown()
+    return {"T": t_d + makespan, "split": split, "t_d": t_d, "stage": stage_cost}
+
+
+def run(n_tasks: int = N_TASKS) -> List[str]:
+    rows = []
+    s1 = _run_scenario("s1", [LONESTAR], False, n_tasks)
+    s2 = _run_scenario("s2", [LONESTAR, STAMPEDE], False, n_tasks)
+    s3 = _run_scenario("s3", [LONESTAR, STAMPEDE], True, n_tasks)
+    s4 = _run_scenario("s4", [LONESTAR, STAMPEDE, TRESTLES], True, n_tasks)
+    for name, s in (("s1_single", s1), ("s2_two_norepl", s2),
+                    ("s3_two_repl", s3), ("s4_three_wan_repl", s4)):
+        rows.append(emit(f"scale.{name}.makespan", s["T"] * 1e6, f"T={s['T']:.0f}s"))
+        rows.append(emit(f"scale.{name}.split", 0.0, str(s["split"])))
+    remote2 = s2["split"].get(STAMPEDE, 0) / max(1, n_tasks)
+    remote3 = s3["split"].get(STAMPEDE, 0) / max(1, n_tasks)
+    rows.append(
+        emit("scale.claim.repl_improves_distribution", 0.0,
+             f"{remote2:.2f}->{remote3:.2f}:{remote3 > remote2}")
+    )
+    rows.append(
+        emit("scale.claim.multi_machine_beats_single", 0.0, str(s3["T"] < s1["T"]))
+    )
+    rows.append(
+        emit("scale.claim.wan_run_completes_and_spreads", 0.0,
+             str(sum(1 for v in s4["split"].values() if v > 0) == 3))
+    )
+    return rows
+
+
+if __name__ == "__main__":
+    run()

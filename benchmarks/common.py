@@ -1,0 +1,67 @@
+"""Shared benchmark infrastructure.
+
+The paper's experiments ran on 2013 production grids (XSEDE/OSG) with
+shared WAN links; this container is one CPU.  Benchmarks therefore run the
+REAL Pilot-Data runtime (real scheduler decisions, real replica caching,
+real bytes through the adaptors) with the **simulated transfer clock**
+(DESIGN.md §2): per-transfer durations follow the topology edge weights and
+backend profiles, calibrated to the paper's measured 2013-era WAN numbers.
+Makespans are replayed from recorded per-CU (stage, compute) durations with
+an m-slot list scheduler.
+"""
+
+from __future__ import annotations
+
+import heapq
+import time
+from typing import Dict, Iterable, List, Tuple
+
+from repro.backends.base import BackendProfile
+
+MB = 1e6
+GB = 1e9
+
+#: Fig.-7-calibrated backend profiles (2013 WAN-era): bandwidth bytes/s,
+#: per-request setup seconds, catalog registration seconds.
+PAPER_PROFILES: Dict[str, BackendProfile] = {
+    # SRM + GridFTP: best bulk throughput, moderate setup
+    "srm": BackendProfile(bandwidth=35 * MB, op_latency=2.0, register_latency=0.2),
+    # plain SSH/scp: cheap setup, modest bandwidth
+    "ssh": BackendProfile(bandwidth=12 * MB, op_latency=0.5),
+    # Globus Online: GridFTP bandwidth behind a managed service層 overhead
+    "globus_online": BackendProfile(
+        bandwidth=30 * MB, op_latency=15.0, register_latency=1.0
+    ),
+    # iRODS: SSH-class transfer + catalog registration
+    "irods": BackendProfile(bandwidth=12 * MB, op_latency=2.0, register_latency=0.5),
+    # S3 over WAN: bandwidth-limited to the remote datacenter
+    "s3": BackendProfile(bandwidth=6 * MB, op_latency=1.0, register_latency=0.1),
+}
+
+
+def modeled_makespan(
+    durations: Iterable[float], slots: int, queue_time: float = 0.0
+) -> float:
+    """List-schedule task durations onto ``slots`` identical slots."""
+    heap = [queue_time] * max(1, slots)
+    heapq.heapify(heap)
+    for d in durations:
+        t = heapq.heappop(heap)
+        heapq.heappush(heap, t + d)
+    return max(heap)
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *exc):
+        self.wall = time.perf_counter() - self.t0
+
+
+def emit(name: str, us_per_call: float, derived: str) -> str:
+    """One CSV row in the harness's required format."""
+    line = f"{name},{us_per_call:.1f},{derived}"
+    print(line, flush=True)
+    return line

@@ -1,0 +1,57 @@
+"""Benchmark harness — one bench per paper table/figure + roofline.
+
+Prints ``name,us_per_call,derived`` CSV (one row per measurement).
+
+  bench_staging      — Fig. 7 (T_S per storage backend × size)
+  bench_replication  — Fig. 8 (T_R group vs sequential, per-host inset)
+  bench_placement    — Figs. 9–10 (five placement strategies, 8-task BWA)
+  bench_scale        — Figs. 11–13 (1024 tasks × 1–3 machines ± replication)
+  bench_cost_model   — §6.1 calculus vs oracle + replication degree
+  bench_roofline     — assignment §Roofline terms from dry-run artifacts
+"""
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true", help="shrink bench_scale")
+    ap.add_argument("--only", default=None, help="run a single bench by name")
+    args = ap.parse_args()
+
+    from . import (
+        bench_cost_model,
+        bench_placement,
+        bench_replication,
+        bench_roofline,
+        bench_scale,
+        bench_staging,
+    )
+
+    benches = {
+        "staging": lambda: bench_staging.run(),
+        "replication": lambda: bench_replication.run(),
+        "placement": lambda: bench_placement.run(),
+        "scale": lambda: bench_scale.run(n_tasks=128 if args.quick else 1024),
+        "cost_model": lambda: bench_cost_model.run(),
+        "roofline": lambda: bench_roofline.run(),
+    }
+    print("name,us_per_call,derived")
+    failed = []
+    for name, fn in benches.items():
+        if args.only and name != args.only:
+            continue
+        try:
+            fn()
+        except Exception as exc:  # noqa: BLE001
+            failed.append(name)
+            print(f"{name}.ERROR,0.0,{type(exc).__name__}:{exc}")
+            traceback.print_exc(file=sys.stderr)
+    if failed:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,97 @@
+"""The paper's §6.4 scenario as a runnable example: a task ensemble over
+multiple sites, first WITHOUT and then WITH up-front DU replication —
+replication unlocks the remote site (Fig. 11/12's lesson, at demo scale).
+
+Run:  PYTHONPATH=src python examples/distributed_ensemble.py
+"""
+
+import collections
+
+from repro.core import (
+    CUState,
+    DataUnitDescription,
+    FUNCTIONS,
+    PilotManager,
+    Topology,
+    replicate_group,
+)
+
+MB = 1e6
+N_TASKS = 32
+TASK_COMPUTE_S = 120.0
+
+
+def build_mgr():
+    # bandwidths scaled so one task's input transfer ≈ one task's compute —
+    # the paper's regime (9 GB at ~40 MB/s ≈ 225 s vs ~30 min tasks).  Real
+    # file bytes stay small; the simulated clock carries the ratio.
+    topo = Topology()
+    topo.register("xsede:lonestar", bandwidth=3.3e3, latency=0.02)  # sim B/s
+    topo.register("xsede:stampede", bandwidth=3.3e3, latency=0.02)
+    mgr = PilotManager(topology=topo)
+    FUNCTIONS.register("analyze", lambda cu_ctx: "done")
+    return mgr
+
+
+def run(replicate: bool):
+    mgr = build_mgr()
+    pd_ls = mgr.start_pilot_data(
+        service_url="mem://xsede:lonestar/pd", affinity="xsede:lonestar"
+    )
+    pd_st = mgr.start_pilot_data(
+        service_url="mem://xsede:stampede/pd", affinity="xsede:stampede"
+    )
+    p_ls = mgr.start_pilot(resource_url="sim://xsede:lonestar", slots=4)
+    p_st = mgr.start_pilot(resource_url="sim://xsede:stampede", slots=4)
+    p_ls.wait_active(), p_st.wait_active()
+
+    dus = [
+        mgr.cds.submit_data_unit(
+            DataUnitDescription(
+                name=f"input{i}", files={"data": b"d" * int(1.2 * MB)}
+            ),
+            target=pd_ls,
+        )
+        for i in range(N_TASKS)
+    ]
+    t_r = 0.0
+    if replicate:
+        for du in dus:
+            t_r += replicate_group(du, pd_ls, [pd_st], mgr.ctx)
+    cus = [
+        mgr.submit_cu(
+            executable="analyze",
+            input_data=[du.id],
+            sim_compute_s=TASK_COMPUTE_S,
+        )
+        for du in dus
+    ]
+    assert mgr.wait(timeout=120)
+    split = collections.Counter()
+    stage_total = 0.0
+    for cu in cus:
+        assert cu.state == CUState.DONE
+        machine = mgr.ctx.lookup(cu.pilot_id).affinity
+        split[machine] += 1
+        stage_total += cu.timings.sim_stage_s
+    mgr.shutdown()
+    return split, t_r, stage_total
+
+
+def main() -> None:
+    split_no, _, stage_no = run(replicate=False)
+    split_yes, t_r, stage_yes = run(replicate=True)
+    print(f"without replication: split {dict(split_no)}, "
+          f"total task staging {stage_no:.0f} sim-s")
+    print(f"with replication   : split {dict(split_yes)}, "
+          f"total task staging {stage_yes:.0f} sim-s (T_R={t_r:.0f} upfront)")
+    # Paper Figs. 10/12: with co-located replicas, per-task download time is
+    # eliminated — tasks link instead of transferring.
+    assert stage_yes == 0.0, "replicated inputs should resolve as links"
+    assert stage_no > 0.0, "non-replicated remote tasks must pay staging"
+    print("distributed_ensemble OK — replication eliminates per-task "
+          "staging (paper Figs. 10/12)")
+
+
+if __name__ == "__main__":
+    main()

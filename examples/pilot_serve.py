@@ -1,0 +1,73 @@
+"""Serving driver: batched greedy decoding where the MODEL CHECKPOINT is a
+replicated Data-Unit and each serving pilot loads it from its nearest
+replica (checkpoint-as-DU is how multi-pod serving fleets warm up without
+hammering one blob store).
+
+Run:  PYTHONPATH=src python examples/pilot_serve.py
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import Checkpointer, load_checkpoint_du
+from repro.configs import get_config
+from repro.core import FUNCTIONS, PilotManager, make_tpu_fleet_topology
+from repro.models import build_model
+from repro.serving import DecodeEngine
+
+
+def main() -> None:
+    cfg = get_config("gemma3-1b-smoke")  # reduced same-family config
+    api = build_model(cfg)
+    topo, _ = make_tpu_fleet_topology(pods=2, hosts_per_pod=1)
+    mgr = PilotManager(topology=topo)
+
+    # "trained" params, checkpointed as a DU on pod0 and replicated to pod1
+    pd0 = mgr.start_pilot_data(
+        service_url="sharedfs://cluster:pod0/ckpt", affinity="cluster:pod0"
+    )
+    pd1 = mgr.start_pilot_data(
+        service_url="sharedfs://cluster:pod1/ckpt", affinity="cluster:pod1"
+    )
+    params = api.init(jax.random.PRNGKey(0))
+    ck = Checkpointer(mgr.ctx, run_name="serve-model", replicate_to=[pd1])
+    du = ck.save(0, params, target=pd0)
+    print(f"model checkpoint {du.url} replicated to {du.locations}")
+
+    # serving CU on each pod: restore from the NEAREST replica, decode
+    @FUNCTIONS.register("serve_batch")
+    def serve_batch(cu_ctx, prompt_tokens, new_tokens):
+        loc = cu_ctx.pilot.affinity
+        _, p, _ = load_checkpoint_du(cu_ctx.ctx, cu_ctx.ctx.lookup(du.id), location=loc)
+        p = jax.tree.map(jnp.asarray, p)
+        engine = DecodeEngine(api, p, batch=len(prompt_tokens), max_len=64)
+        out = engine.generate(jnp.asarray(prompt_tokens, jnp.int32), new_tokens)
+        return np.asarray(out).tolist()
+
+    for pod in (0, 1):
+        mgr.start_pilot(resource_url=f"sim://cluster:pod{pod}:host0", slots=1)
+    prompts = [[1, 5, 9, 2], [3, 3, 7, 1]]
+    t0 = time.time()
+    cus = [
+        mgr.submit_cu(
+            executable="serve_batch",
+            args=(prompts, 8),
+            input_data=[du.id],
+            affinity=f"cluster:pod{pod}",
+        )
+        for pod in (0, 1)
+    ]
+    mgr.wait(timeout=300)
+    for cu in cus:
+        print(f"{cu.url} on {cu.pilot_id}: generated {cu.result}")
+    # both pods must decode identically from their local replicas
+    assert cus[0].result == cus[1].result, "replica divergence!"
+    print(f"served 2 pods in {time.time()-t0:.1f}s — replicas consistent ✓")
+    mgr.shutdown()
+
+
+if __name__ == "__main__":
+    main()

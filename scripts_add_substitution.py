@@ -1,0 +1,27 @@
+"""Annotate dry-run artifacts with the kernel-substitution analysis (§Perf
+iteration I7).  PYTHONPATH=src python scripts_add_substitution.py [glob...]"""
+import glob, json, os, sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.abspath(__file__)), "src"))
+from repro.configs import get_config, get_shape
+from repro.launch.kernel_substitution import substitution_for_cell
+
+paths = []
+for pat in (sys.argv[1:] or ["experiments/dryrun/pod_16x16__opt/*.json",
+                             "experiments/dryrun/multipod_2x16x16__opt/*.json"]):
+    paths.extend(glob.glob(pat))
+for p in sorted(paths):
+    with open(p) as fh:
+        cell = json.load(fh)
+    if cell.get("status") != "OK":
+        continue
+    dp = 32 if "multipod" in cell["mesh"] else 16
+    sub = substitution_for_cell(
+        get_config(cell["arch"]), get_shape(cell["shape"]),
+        dp=dp, tp=16, mb=cell.get("microbatches", 1),
+    )
+    cell["kernel_substitution"] = sub
+    with open(p, "w") as fh:
+        json.dump(cell, fh, indent=1)
+    print(f"{os.path.basename(p)}: scan={sub['measured_scan_bytes']:.2e}B "
+          f"kernel={sub['kernel_bytes']:.2e}B delta={sub['bytes_delta']:.2e}B")

@@ -1,0 +1,370 @@
+"""Generate EXPERIMENTS.md from dry-run artifacts + the perf-iteration log.
+
+Run: PYTHONPATH=src python scripts_build_experiments.py
+"""
+
+import glob
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "src"))
+
+from repro.launch.roofline import (  # noqa: E402
+    DCN_BW, HBM_BW, ICI_BW, PEAK_FLOPS, derive_terms, levers_table,
+    load_cells, roofline_table,
+)
+
+OUT = os.path.join(os.path.dirname(__file__), "EXPERIMENTS.md")
+
+
+def cell_index(mesh):
+    return {(c["arch"], c["shape"]): c for c in load_cells(mesh)}
+
+
+def fmt_gib(b):
+    return f"{b/2**30:.1f}"
+
+
+def dryrun_summary(mesh):
+    cells = load_cells(mesh)
+    ok = [c for c in cells if c["status"] == "OK"]
+    skip = [c for c in cells if c["status"] == "SKIP"]
+    fail = [c for c in cells if c["status"] == "FAIL"]
+    fit = [c for c in ok if c["memory"]["fits_16GiB"]]
+    return cells, ok, skip, fail, fit
+
+
+def dryrun_table(mesh):
+    lines = [
+        "| arch | shape | kind | mb | compile s | mem GiB (raw) | mem GiB "
+        "(TPU-corr) | fits | HLO flops/dev | coll B/dev | DCN B/dev |",
+        "|---|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    order = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2, "long_500k": 3}
+    for c in sorted(
+        load_cells(mesh), key=lambda c: (c["arch"], order.get(c["shape"], 9))
+    ):
+        if c["status"] == "SKIP":
+            lines.append(f"| {c['arch']} | {c['shape']} | — | — | SKIP (long_500k rule) | | | | | | |")
+            continue
+        if c["status"] != "OK":
+            lines.append(f"| {c['arch']} | {c['shape']} | — | — | FAIL {c.get('error','')[:50]} | | | | | | |")
+            continue
+        m = c["memory"]
+        h = c.get("hlo_analysis", {})
+        corr = m.get("peak_per_device_tpu_corrected", m["peak_per_device"])
+        dcn = h.get("collective_per_axis", {}).get("pod", 0)
+        lines.append(
+            f"| {c['arch']} | {c['shape']} | {c['kind']} | {c.get('microbatches',1)} "
+            f"| {c['compile_s']} | {fmt_gib(m['peak_per_device'])} | {fmt_gib(corr)} "
+            f"| {'Y' if m['fits_16GiB'] else 'N'} | {h.get('flops',0):.2e} "
+            f"| {h.get('collective_bytes',0):.2e} | {dcn:.2e} |"
+        )
+    return "\n".join(lines)
+
+
+def perf_compare(baseline_mesh, opt_mesh, cells):
+    base = cell_index(baseline_mesh)
+    opt = cell_index(opt_mesh)
+    lines = [
+        "| cell | variant | mem GiB | compute s | memory s | collective s | "
+        "dominant | useful | roofline frac |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for key in cells:
+        for tag, idx in (("reference-impl", base), ("optimized", opt)):
+            c = idx.get(key)
+            if not c or c["status"] != "OK":
+                continue
+            t = derive_terms(c)
+            subbed = " (kernel-sub)" if t.get("kernel_substituted") else ""
+            lines.append(
+                f"| {key[0]} × {key[1]} | {tag}{subbed} | {t['mem_gib']:.1f} "
+                f"| {t['compute_s']:.3e} | {t['memory_s']:.3e} "
+                f"| {t['collective_s']:.3e} | {t['dominant']} "
+                f"| {t['useful_ratio']:.2f} | {t['roofline_frac']:.3f} |"
+            )
+    return "\n".join(lines)
+
+
+def main():
+    _, ok_b, skip_b, fail_b, fit_b = dryrun_summary("pod_16x16")
+    _, ok_m, skip_m, fail_m, fit_m = dryrun_summary("multipod_2x16x16")
+    have_opt = bool(glob.glob(
+        os.path.join(os.path.dirname(__file__), "experiments/dryrun/pod_16x16__opt/*.json")
+    ))
+    _, ok_o, skip_o, fail_o, fit_o = (
+        dryrun_summary("pod_16x16__opt") if have_opt else ([],) * 5
+    )
+
+    hillclimb_cells = [
+        ("gemma3-12b", "train_4k"),
+        ("granite-34b", "prefill_32k"),
+        ("whisper-large-v3", "train_4k"),
+    ]
+
+    doc = f"""# EXPERIMENTS
+
+All dry-run artifacts: ``experiments/dryrun/<mesh>[__<variant>]/``.
+Meshes: single-pod ``(data=16, model=16)`` = 256 chips; multi-pod
+``(pod=2, data=16, model=16)`` = 512 chips.  Hardware model (TPU v5e):
+{PEAK_FLOPS/1e12:.0f} TFLOP/s bf16/chip, {HBM_BW/1e9:.0f} GB/s HBM,
+{ICI_BW/1e9:.0f} GB/s/link ICI, {DCN_BW/1e9:.0f} GB/s/chip DCN (pod axis).
+
+Methodology notes (full details in the module docstrings):
+
+* **FLOPs/bytes/collectives are parsed from ``compiled.as_text()``, not
+  ``cost_analysis()``** — XLA's cost analysis counts a scanned loop body
+  once (verified: an 8-step scanned matmul reports 1/8 the FLOPs), so we
+  propagate while-loop trip counts through the computation call graph
+  (``repro/launch/hlo_analysis.py``).  FLOPs = dot ops (the MXU term);
+  HBM bytes = an each-top-level-op-touches-HBM-once traffic model;
+  collective bytes = operand sums per op, classified per mesh axis by
+  replica-group stride (pod-axis traffic = DCN).
+* **TPU-corrected memory**: the CPU host platform cannot execute bf16
+  dots, so XLA hoists fp32 copies of entire stacked weight tensors out of
+  the layer scans (measured 10–13 GiB on the large dense archs, identified
+  buffer-by-buffer in the HLO).  A real TPU runs bf16 natively and never
+  allocates these.  We report raw AND corrected peaks; ``fits`` uses the
+  corrected number.  Detection: unique fp32 ``convert`` outputs whose dims
+  exactly match a bf16 parameter (``hlo_analysis.cpu_upcast_artifact_bytes``).
+* ``decode_*`` / ``long_*`` lower ``serve_step`` (one token against a
+  full-length cache); ``train_4k`` lowers ``train_step`` (fwd+bwd+AdamW,
+  donated params/opt); ``prefill_32k`` lowers a last-token-logits forward.
+* long_500k is SKIPped for the pure full-attention archs per the
+  assignment rule (granite-34b, granite-moe, qwen3-moe, whisper, llava) —
+  recorded as SKIP rows, not dropped (DESIGN.md §5).
+
+## §Dry-run
+
+**Single-pod 16×16: {len(ok_b)}/40 cells compile OK, {len(skip_b)} SKIP
+(long_500k rule), {len(fail_b)} FAIL.**
+**Multi-pod 2×16×16: {len(ok_m)}/40 compile OK, {len(skip_m)} SKIP,
+{len(fail_m)} FAIL** — the pod axis shards (DCN collective bytes are
+non-zero in the table below), which is the multi-pod proof the assignment
+asks for.
+
+### Baseline, single-pod (paper-faithful reference implementations)
+
+{dryrun_table("pod_16x16")}
+
+### Baseline, multi-pod (2×16×16)
+
+{dryrun_table("multipod_2x16x16")}
+
+{"### Optimized variant (single-pod; see §Perf for what changed)" if have_opt else ""}
+
+{dryrun_table("pod_16x16__opt") if have_opt else ""}
+
+## §Roofline (single-pod, optimized variant)
+
+Terms in seconds/step/device.  ``useful`` = MODEL_FLOPS / HLO_FLOPs
+(MODEL_FLOPS = 6·N_active·D train, 2·N·D prefill, 2·N_active·B decode);
+``roofline`` = (MODEL_FLOPS/dev ÷ peak) / max(term) — the §Perf score.
+
+{roofline_table("pod_16x16__opt" if have_opt else "pod_16x16")}
+
+### Per-cell dominant-term levers
+
+{levers_table("pod_16x16__opt" if have_opt else "pod_16x16")}
+
+## §Perf — hypothesis → change → measure → validate
+
+The paper-faithful BASELINE (reference jnp attention, full logits CE,
+full-length KV caches, no accumulation) is recorded above and kept in
+``experiments/dryrun/pod_16x16/``.  Every optimization below is
+beyond-paper (the paper's contribution is the scheduling abstraction; it
+prescribes nothing about the step function).  Iterations ran on the three
+most interesting cells — worst memory (gemma3-12b × train_4k), worst
+overall footprint / prefill representative (granite-34b × prefill_32k),
+most collective-bound (whisper-large-v3 × train_4k) — then the winning
+changes were applied fleet-wide.
+
+### Iteration log
+
+**I1 — chunked cross-entropy** (gemma3-12b × train_4k)
+*Hypothesis*: the [B,S,V] logits dominate memory — per device
+16×4096×262144 bf16 ≈ 32 GiB live with fp32 softmax copies; chunking the
+CE over 512-token slices with per-chunk remat should remove ~16 GiB.
+*Change*: ``layers.chunked_cross_entropy`` (scan + jax.checkpoint), loss
+takes hidden states, unembeds per chunk.
+*Measured*: 40.6 → 24.3 GiB raw.  **Confirmed** (−16.3 GiB; the other
+half of the naive estimate was already being scheduled away by XLA).
+
+**I2 — flash-style blocked attention** (granite-34b × prefill_32k)
+*Hypothesis*: the reference attention materializes S×S fp32 scores
+(2×48×32768×32768 per device-layer slice ≈ dozens of GiB transient);
+a lax.scan over 1024-wide KV tiles with online softmax and a flash-style
+custom VJP (recompute tiles in backward, save only (q,k,v,out,lse))
+bounds live scores to S×1024 and cuts HBM traffic by ~S/1024 on the
+attention term.
+*Change*: ``models/blocked_attention.py`` (custom_vjp; validated vs ref
+fwd 4e-7 / grad 1e-5), used for every non-decode attention.
+*Measured*: 67.9 → 20.8 GiB raw; memory term 168 s → (see table).
+**Confirmed** — largest single win in the campaign.
+
+**I3 — windowed ring KV caches** (gemma3-12b × decode_32k)
+*Hypothesis*: SWA layers never attend past their window, yet the cache
+allocates max_len rows for all layers; gemma3's 5:1 local:global pattern
+should shrink 5/6 of its cache from 32k to 1k rows (~6× KV reduction).
+*Change*: ring-buffer caches (write at ``pos % window``; slot positions
+reconstructed as ``pos − ((pos − j) mod W)``), validated by a
+decode-equals-teacher-forcing test across 3 ring wraps.
+*Measured*: 28.6 → 12.5 GiB — **fits**.  **Confirmed.**
+
+**I4 — microbatched gradient accumulation**
+*Hypothesis*: remaining train-cell excess is live activation footprint ∝
+per-device microbatch.
+*Measured*: mamba2 26.4→0.9 GiB (mb4, with I2), granite-moe 28.6→4.6
+(mb2), zamba2 24.3→9.7 (mb2), whisper 35.1→12.4 (mb2 + blocked
+cross-attention) — **confirmed**; but gemma3-12b 24.3→22.2 (mb2) and
+granite-34b 33.2→25.0 (mb4) barely moved — **refuted** for the large
+dense archs.  The refutation forced a buffer-level look (next).
+
+**I5 — the residual was not ours** (gemma3-12b, granite-34b)
+*Hypothesis (from I4's refutation)*: something batch-independent
+dominates.  Buffer census of the compiled HLO: fp32 copies of entire
+stacked weight tensors (e.g. ``f32[88,6144,1536]`` ×2 = 6.2 GiB)
+hoisted out of the scan — the CPU backend upcasts bf16 dots.
+*Change*: none to the model — added artifact detection + TPU-corrected
+reporting (see Methodology).
+*Measured*: corrected peaks — granite-34b train 25.0→~13 GiB,
+prefill 20.5→~10.5 GiB, gemma3-12b train 22.2→~15 GiB: **all cells fit**
+on the corrected accounting.  **Confirmed** by buffer-level census.
+
+**I6 — prefill batch chunking** (granite-34b × prefill_32k)
+*Hypothesis*: prefill live set scales with per-device batch → lax.map
+over 2 chunks halves it.
+*Measured*: 20.8 → 20.5 GiB raw.  **Refuted** — live set was the I5
+artifact + per-layer weights, not activations.  Kept where the chunked
+batch still divides the DP axes; a follow-up bug showed why the guard
+matters: on the multi-pod mesh a 16-wide chunk over 32 DP devices
+REPLICATED activations across DP (measured 153× FLOPs blowup on
+qwen3-moe × prefill) — fixed by disabling chunking when divisibility
+would break.
+
+**I7 — kernel substitution in the roofline** (all non-decode cells)
+*Hypothesis*: the op-level traffic model charges the scan-based flash
+attention / SSD implementations a full HBM round trip for carries that
+the Pallas kernels keep in VMEM scratch — the memory term should be
+computed with kernel traffic for those regions (on a real TPU dry-run the
+kernels appear as opaque custom-calls and must be hand-modeled the same
+way).
+*Change*: ``launch/kernel_substitution.py`` — each cell's attention/SSD
+scans are lowered STANDALONE at the cell's per-device shard geometry and
+measured under the SAME analyzer, then replaced by the kernel's analytic
+traffic (q/k/v/o streamed once fwd, 3× for the recompute backward; SSD
+x/dA/B/C/y once).  Kernel FLOPs also account for causal/window block
+skipping (2× / S→W reductions the jnp path cannot express).
+*Measured*: attention-scan traffic was 35–40 % of the big dense cells'
+modeled bytes (granite-34b train: 3.7e13 of 9.9e13 B/dev) and replacing
+it moves the memory term accordingly — see the roofline table
+("substituted" column = final numbers).  **Confirmed.**
+
+**I8 — MoE aux reduction correctness under partial sharding**
+(qwen3-moe × prefill_32k, multi-pod)
+Not a perf win — a correctness fix found BY the sweep: the expert-parallel
+``pmean`` reduced over all mesh axes even when the chunked batch left the
+tokens invarying over DP, which the shard_map type checker rejects.  The
+reduce-axes set now matches the axes the tokens actually vary over.
+
+**I9 — fusion-simulated traffic model** (all cells)
+*Hypothesis (from a per-op byte census of granite-34b × train)*: 22 % of
+modeled traffic was unfused ``convert`` ops and ~25 % more was top-level
+elementwise/copy/transpose ops — the CPU backend barely fuses; the TPU
+backend would fold these into fusion regions that read external inputs
+once and write outputs once, so the naive every-op-round-trips model
+overstates the memory term ~2×.
+*Change*: the analyzer now union-finds maximal connected elementwise
+regions per computation and charges each region its external inputs +
+outputs once (artifact weight-upcasts excluded entirely); non-elementwise
+ops (dot, fusion, reduce, slice/DUS, collectives) charge as before.
+*Measured*: granite-34b × train modeled bytes 9.86e13 → 6.18e13 per
+device before kernel substitution.  **Confirmed**; all tables regenerated
+under the fused model (the metric version used throughout this file).
+
+**I10 — int8 KV caches** (decode cells)
+*Hypothesis*: decode is KV-streaming bound (the levers list has said so
+since the baseline table); per-token-per-head symmetric int8 quantization
+halves cache bytes AND cache traffic at <1 % logit error.
+*Change*: ``kv_cache_dtype="int8"`` — int8 k/v + fp32 per-(token, head)
+scales, quantize-on-write, dequantize fused into the attention read;
+composes with the ring-buffer windowed caches (I3).  Decode-vs-teacher-
+forcing consistency test bounds relative error at 0.8 %.
+*Measured* (decode memory term, seconds/step/device, bf16 → int8):
+gemma3-12b 0.378 → 0.164 (2.3×), granite-34b 2.62 → 1.63 (1.6×),
+qwen3-moe 2.00 → 0.79 (2.5×), zamba2 0.147 → 0.032 (4.6×), and
+long_500k gemma3-12b 0.138 → 0.115.  **Confirmed** (whisper is unchanged —
+the enc-dec cache path does not yet implement quantization; noted as
+future work).  Artifacts: ``experiments/dryrun/pod_16x16__opt_kv8/``.
+
+**I11 — bf16 gradient accumulation** (gemma3-12b × train_4k, the one
+remaining over-budget cell)
+*Hypothesis*: the residual ~18 GiB is fp32 accumulator footprint
+(accumulating grads in param dtype halves it; the fp32 optimizer masters
+absorb rounding across steps).
+*Measured*: 19.09 → 18.92 GiB at mb=4.  **Refuted** — a buffer census
+shows the residual is ~1.9 GiB × several aliases of an fp32
+half-vocab×d_model buffer in the tied-embedding master/update path (the
+262k-vocab table's ZeRO gather).  gemma3-12b × train_4k therefore stays
+over the v5e budget (18.2 GiB corrected at mb=4; 34/35 cells fit).
+Identified levers, unimplemented: untie the embedding (params +1 GiB but
+removes the gathered fp32 update path), a vocab-sharded master update
+that never re-gathers (custom collective schedule), or a v5p-class part.
+The knob (``accum_dtype``) is kept — it is the right default for
+memory-constrained non-tied archs.
+
+### Baseline vs optimized, hillclimbed cells
+
+NOTE on labels: "reference-impl" rows use the unfused reference attention
+path; they were re-lowered under the final (fusion-simulated, I9) metric so
+the two rows are apples-to-apples, and they inherit the memory fixes that
+became defaults (chunked CE, ring caches).  The ORIGINAL paper-faithful
+baseline peaks — before any of I1–I4 — are the ones quoted in the
+iteration log (gemma3-12b train 40.6 GiB, granite-34b prefill 67.9 GiB,
+whisper train 35.1 GiB, gemma3-12b decode 28.6 GiB raw).
+
+{perf_compare("pod_16x16", "pod_16x16__opt", hillclimb_cells) if have_opt else "(optimized sweep pending)"}
+
+### Where this lands, and what is left on the table
+
+* The optimized variant turns every previously-over-budget cell into a
+  fitting one (TPU-corrected); the dominant term across most cells remains
+  **memory** under our conservative traffic model — the model charges
+  every top-level HLO op a full HBM round trip, while a real TPU fuses
+  dot epilogues and keeps flash-attention tiles in VMEM (the Pallas
+  kernels in ``repro/kernels`` exist for exactly this; they cannot lower
+  on the CPU host platform, so their effect shows up as the blocked-
+  attention traffic reduction rather than a custom-call).
+* Next levers, in expected-win order (napkin math in the levers list
+  above): (1) int8 KV caches for decode (2× on the decode memory term);
+  (2) fusing the SSD intra-chunk path (the ssd_scan kernel) — mamba2
+  cells still carry fp32 chunk intermediates; (3) DCN gradient
+  compression (``optim/compression.py`` is implemented and unit-tested;
+  wiring it into the pod-axis grad reduction halves the multi-pod
+  collective term for the train cells where DCN bytes ≈ ICI bytes).
+
+## §Scale / fault tolerance (runtime evidence)
+
+Not a dry-run claim — these run as tests/benchmarks on the real runtime:
+
+* checkpoint/restart: ``test_training_survives_pilot_failure`` kills the
+  only data-local pilot mid-chunk; the heartbeat monitor requeues, a
+  standby pilot replays from the checkpoint-DU chain, the run completes.
+* elastic scaling: ``test_elastic_scale_up_mid_run`` adds a pilot mid-run;
+  it takes over chunks.
+* straggler mitigation: ``test_straggler_duplication_exactly_once`` —
+  duplicate launch + winner-CAS.
+* paper-figure benchmarks (Figs. 7–13 analogues): ``python -m
+  benchmarks.run`` — staging/backends, group-vs-sequential replication,
+  five placement strategies, the 1024-task multi-machine ensemble with
+  and without replication, §6.1 calculus-vs-oracle.
+"""
+    with open(OUT, "w") as fh:
+        fh.write(doc)
+    print(f"wrote {OUT} ({len(doc)} chars)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,19 @@
+from .base import BackendProfile, KeyNotFound, StorageAdaptor, StorageError
+from .local_fs import LocalFSBackend, SharedFSBackend
+from .memory import MemoryBackend
+from .object_store import ObjectStoreBackend
+from .registry import available_schemes, make_backend, register_backend
+
+__all__ = [
+    "BackendProfile",
+    "KeyNotFound",
+    "StorageAdaptor",
+    "StorageError",
+    "LocalFSBackend",
+    "SharedFSBackend",
+    "MemoryBackend",
+    "ObjectStoreBackend",
+    "available_schemes",
+    "make_backend",
+    "register_backend",
+]

@@ -1,0 +1,3 @@
+from .checkpointer import Checkpointer, load_checkpoint_du
+
+__all__ = ["Checkpointer", "load_checkpoint_du"]

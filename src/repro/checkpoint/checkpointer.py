@@ -1,0 +1,178 @@
+"""Checkpointing as Data-Units.
+
+A checkpoint is an immutable DU whose files are the serialized leaves of
+(params, opt_state, step).  That buys, for free, everything the paper's DU
+semantics give data:
+
+  * location transparency — restart anywhere the DU has (or can get) a
+    replica;
+  * replication — group-replicate checkpoints across pods so a pod loss
+    does not lose the run (Fig. 8 mechanics applied to model state);
+  * affinity scheduling — the workload manager restarts the training CU
+    near a checkpoint replica instead of dragging bytes across the DCN;
+  * catalog — the coordination store maps ``ckpt:<run>`` to the DU chain.
+
+Leaves are stored whole (single-process container); a multi-host deployment
+would store per-shard files keyed by shard index — the DU file namespace
+already accommodates that (``leaf/<path>/shard<k>.npy``).
+
+Restore is *resharding*: arrays come back as numpy and are re-placed by
+whatever sharding the new mesh prescribes, so restarts may change topology
+(elastic restart).
+"""
+
+from __future__ import annotations
+
+import io
+import json
+import threading
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from ..core import (
+    CoordinationStore,
+    DataUnit,
+    DataUnitDescription,
+    PilotData,
+    RuntimeContext,
+    replicate_group,
+)
+
+
+def _flatten(tree: Any, prefix: str = "") -> List[Tuple[str, Any]]:
+    if isinstance(tree, dict):
+        out = []
+        for k in sorted(tree):
+            out.extend(_flatten(tree[k], f"{prefix}{k}/"))
+        return out
+    return [(prefix.rstrip("/"), tree)]
+
+
+def _unflatten(items: Dict[str, Any]) -> Any:
+    root: Dict[str, Any] = {}
+    for path, value in items.items():
+        parts = path.split("/")
+        node = root
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = value
+    return root
+
+
+def _encode(arr) -> bytes:
+    buf = io.BytesIO()
+    np.save(buf, np.asarray(arr), allow_pickle=False)
+    return buf.getvalue()
+
+
+def _decode(data: bytes) -> np.ndarray:
+    return np.load(io.BytesIO(data), allow_pickle=False)
+
+
+class Checkpointer:
+    """Writes/reads checkpoint DUs; optionally async + group-replicated."""
+
+    def __init__(
+        self,
+        ctx: RuntimeContext,
+        run_name: str = "run",
+        replicate_to: Optional[List[PilotData]] = None,
+    ):
+        self.ctx = ctx
+        self.run_name = run_name
+        self.replicate_to = replicate_to or []
+        self._pending: List[threading.Thread] = []
+
+    # ----------------------------------------------------------------- save
+    def save(
+        self,
+        step: int,
+        params: Any,
+        opt_state: Optional[Any] = None,
+        target: Optional[PilotData] = None,
+        asynchronous: bool = False,
+    ) -> DataUnit:
+        du = DataUnit(
+            DataUnitDescription(name=f"{self.run_name}.ckpt{step:08d}"),
+            self.ctx.store,
+        )
+        self.ctx.register(du)
+        meta = {"step": step, "run": self.run_name}
+        du.add_file("meta.json", json.dumps(meta).encode())
+        for path, leaf in _flatten({"params": params}):
+            du.add_file(f"{path}.npy", _encode(leaf))
+        if opt_state is not None:
+            for path, leaf in _flatten({"opt": opt_state}):
+                du.add_file(f"{path}.npy", _encode(leaf))
+
+        def commit():
+            if target is not None:
+                self.ctx.transfer_service.ingest(du, target)
+                if self.replicate_to:
+                    replicate_group(du, target, self.replicate_to, self.ctx)
+            du.seal()
+            self.ctx.store.hset(f"ckpt:{self.run_name}", f"{step:08d}", du.id)
+
+        if asynchronous:
+            t = threading.Thread(target=commit, daemon=True)
+            t.start()
+            self._pending.append(t)
+        else:
+            commit()
+        return du
+
+    def wait(self, timeout: float = 30.0) -> None:
+        for t in self._pending:
+            t.join(timeout)
+        self._pending = [t for t in self._pending if t.is_alive()]
+
+    # -------------------------------------------------------------- restore
+    def latest_step(self) -> Optional[int]:
+        index = self.ctx.store.hgetall(f"ckpt:{self.run_name}")
+        return max((int(k) for k in index), default=None)
+
+    def du_for_step(self, step: int) -> DataUnit:
+        du_id = self.ctx.store.hget(f"ckpt:{self.run_name}", f"{step:08d}")
+        if du_id is None:
+            raise KeyError(f"no checkpoint for step {step}")
+        return self.ctx.lookup(du_id)
+
+    def restore(
+        self, step: Optional[int] = None, location: Optional[str] = None
+    ) -> Tuple[int, Any, Optional[Any]]:
+        """Returns (step, params, opt_state) read from the nearest replica."""
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise KeyError(f"run {self.run_name!r} has no checkpoints")
+        du = self.du_for_step(step)
+        return load_checkpoint_du(self.ctx, du, location=location)
+
+
+def load_checkpoint_du(
+    ctx: RuntimeContext, du: DataUnit, location: Optional[str] = None
+) -> Tuple[int, Any, Optional[Any]]:
+    """Read a checkpoint DU (via the cheapest replica when location given)."""
+    pd = None
+    if du.locations:
+        if location is not None and ctx.transfer_service is not None:
+            pd, _ = ctx.transfer_service.resolve_access(du, location)
+        if pd is None:
+            pd = ctx.lookup(du.locations[0])
+
+    def read(rel: str) -> bytes:
+        return pd.fetch_du_file(du.id, rel) if pd is not None else du.read(rel)
+
+    meta = json.loads(read("meta.json"))
+    params_items, opt_items = {}, {}
+    for rel in du.manifest:
+        if not rel.endswith(".npy"):
+            continue
+        key = rel[: -len(".npy")]
+        if key.startswith("params/"):
+            params_items[key[len("params/") :]] = _decode(read(rel))
+        elif key.startswith("opt/"):
+            opt_items[key[len("opt/") :]] = _decode(read(rel))
+    params = _unflatten(params_items)
+    opt = _unflatten(opt_items) if opt_items else None
+    return meta["step"], params, opt

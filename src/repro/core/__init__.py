@@ -1,0 +1,60 @@
+"""Pilot-Data core: the paper's abstractions as a composable library.
+
+Import surface mirrors the Pilot-API (§4.3): descriptions + services +
+manager.  This package deliberately does NOT import jax — launchers must be
+able to set XLA flags before jax initializes.
+"""
+
+from .affinity import Topology, make_grid_topology, make_tpu_fleet_topology, match_affinity
+from .compute_unit import (
+    ComputeUnit,
+    ComputeUnitDescription,
+    CUState,
+    FUNCTIONS,
+    FunctionRegistry,
+)
+from .coordination import CoordinationStore, CoordinationUnavailable, with_retry
+from .cost_model import (
+    PlacementChoice,
+    cheapest_replica,
+    choose_replication_degree,
+    decide_placement,
+    estimate_td,
+    estimate_tr_group,
+    estimate_tr_sequential,
+    estimate_ts,
+    estimate_tx,
+    straggler_threshold,
+)
+from .data_unit import DataUnit, DataUnitDescription, DUState, merge_dus, partition_du
+from .faults import HeartbeatMonitor, StragglerMitigator, requeue_orphans
+from .manager import PilotManager
+from .pilot import (
+    PilotCompute,
+    PilotComputeDescription,
+    PilotData,
+    PilotDataDescription,
+    PilotState,
+    QuotaExceeded,
+    RuntimeContext,
+)
+from .replication import DemandReplicator, replicate_group, replicate_sequential
+from .services import ComputeDataService, PilotComputeService, PilotDataService
+from .transfer import TransferRecord, TransferService
+
+__all__ = [
+    "Topology", "make_grid_topology", "make_tpu_fleet_topology", "match_affinity",
+    "ComputeUnit", "ComputeUnitDescription", "CUState", "FUNCTIONS", "FunctionRegistry",
+    "CoordinationStore", "CoordinationUnavailable", "with_retry",
+    "PlacementChoice", "cheapest_replica", "choose_replication_degree",
+    "decide_placement", "estimate_td", "estimate_tr_group", "estimate_tr_sequential",
+    "estimate_ts", "estimate_tx", "straggler_threshold",
+    "DataUnit", "DataUnitDescription", "DUState", "merge_dus", "partition_du",
+    "HeartbeatMonitor", "StragglerMitigator", "requeue_orphans",
+    "PilotManager",
+    "PilotCompute", "PilotComputeDescription", "PilotData", "PilotDataDescription",
+    "PilotState", "QuotaExceeded", "RuntimeContext",
+    "DemandReplicator", "replicate_group", "replicate_sequential",
+    "ComputeDataService", "PilotComputeService", "PilotDataService",
+    "TransferRecord", "TransferService",
+]

@@ -1,0 +1,282 @@
+"""Pilot-Agent: the decentralized per-pilot execution loop (§4.2, Fig. 1).
+
+"Each Pilot is represented by a decentral component referred to as the
+Pilot-Agent, which manages the set of resources assigned to it. ... Each
+Pilot-Agent generally pulls from two queues: its agent-specific queue and a
+global queue."
+
+The agent:
+  * waits out the (simulated) batch-queue time, then reports ACTIVE and
+    pushes local resource information to the coordination store (paper: the
+    agent "collects various information about the local resource, which is
+    pushed to the Redis server and used by the Pilot-Manager to conduct e.g.
+    placement decisions");
+  * pulls CU ids from [pilot queue, global queue], claims them with an
+    atomic CAS (exactly-once against racing duplicates), stages input DUs
+    (pull-mode data management), executes the registered executable, stages
+    outputs into DUs, and heartbeats throughout;
+  * honors its walltime: unfinished claimed CUs are re-queued (the paper's
+    observed walltime-limit failures, §6.4, handled instead of lost);
+  * supports hard-kill for fault-injection (heartbeat stops, in-flight work
+    is discarded — the manager's monitor re-queues it).
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+import traceback
+from typing import Any, Dict, List, Optional
+
+from .affinity import match_affinity
+from .compute_unit import CUState, ComputeUnit, FUNCTIONS
+from .data_unit import DataUnit, DUState
+from .pilot import PilotState, RuntimeContext
+
+GLOBAL_QUEUE = "queue:global"
+
+
+class CUContext:
+    """Execution context handed to CU executables (the sandbox view)."""
+
+    def __init__(self, cu: ComputeUnit, pilot, ctx: RuntimeContext):
+        self.cu = cu
+        self.pilot = pilot
+        self.ctx = ctx
+
+    # ------------------------------------------------------------- inputs
+    def input_dus(self) -> List[DataUnit]:
+        return [self.ctx.lookup(d) for d in self.cu.description.input_data]
+
+    def read_input(self, du_id: str, relpath: str) -> bytes:
+        """Read an input file — from the sandbox copy if staged, else via
+        the logical link to a co-located PD."""
+        sandbox = self.pilot.sandbox
+        if sandbox.has_du(du_id):
+            return sandbox.fetch_du_file(du_id, relpath)
+        du = self.ctx.lookup(du_id)
+        pd, linked = self.ctx.transfer_service.resolve_access(
+            du, self.pilot.affinity
+        )
+        if pd is not None:
+            return pd.fetch_du_file(du_id, relpath)
+        return du.read(relpath)  # pre-replica local buffer
+
+    def input_manifest(self, du_id: str) -> Dict[str, int]:
+        return self.ctx.lookup(du_id).manifest
+
+    # ------------------------------------------------------------ outputs
+    def write_output(self, relpath: str, data: bytes, index: int = 0) -> None:
+        """Write a file into the index-th output DU (Fig. 5 data flow)."""
+        out_ids = self.cu.description.output_data
+        if not out_ids:
+            raise RuntimeError(f"{self.cu.url} declares no output_data")
+        du = self.ctx.lookup(out_ids[index])
+        du.add_file(relpath, data)
+
+
+class PilotAgent:
+    def __init__(self, pilot, ctx: RuntimeContext):
+        self.pilot = pilot
+        self.ctx = ctx
+        self._stop = threading.Event()
+        self._dead = threading.Event()  # hard failure: discard everything
+        self._threads: List[threading.Thread] = []
+        self._slots = threading.Semaphore(pilot.description.slots)
+        self._started_at: Optional[float] = None
+        self._lock = threading.Lock()
+        self._running: Dict[str, float] = {}  # cu_id -> start time
+
+    # ------------------------------------------------------------ lifecycle
+    def start(self) -> None:
+        t = threading.Thread(
+            target=self._main, name=f"agent-{self.pilot.id}", daemon=True
+        )
+        self._threads.append(t)
+        t.start()
+
+    def stop(self) -> None:
+        self._stop.set()
+
+    def kill(self) -> None:
+        """Simulated node crash: stop heartbeating immediately, abandon CUs."""
+        self._dead.set()
+        self._stop.set()
+
+    def join(self, timeout: float = 5.0) -> None:
+        for t in self._threads:
+            t.join(timeout)
+
+    @property
+    def alive(self) -> bool:
+        return not self._stop.is_set()
+
+    # ----------------------------------------------------------- main loop
+    def _main(self) -> None:
+        store, pilot = self.ctx.store, self.pilot
+        # Simulated batch-queue wait (T_Q_pilot).
+        self.ctx.sleep_sim(pilot.description.queue_time_s)
+        if self._stop.is_set():
+            return
+        store.hset(f"pilot:{pilot.id}", "state", PilotState.ACTIVE)
+        store.hset(f"pilot:{pilot.id}", "activated_at", time.monotonic())
+        # Resource info push (used by the manager for placement decisions).
+        store.hset(
+            f"pilot:{pilot.id}",
+            "resource_info",
+            {
+                "slots": pilot.description.slots,
+                "affinity": pilot.affinity,
+                "sandbox_pd": pilot.sandbox.id,
+            },
+        )
+        self._started_at = time.monotonic()
+        queues = [pilot.queue_name, GLOBAL_QUEUE]
+        while not self._stop.is_set():
+            self._heartbeat()
+            if self._walltime_exceeded():
+                self._retire()
+                return
+            if not self._slots.acquire(timeout=0.02):
+                continue
+            try:
+                item = store.pop_any(queues, timeout=self.ctx.poll_s)
+            except Exception:
+                self._slots.release()
+                time.sleep(0.02)
+                continue
+            if item is None:
+                self._slots.release()
+                continue
+            cu_id = item["cu"] if isinstance(item, dict) else item
+            is_dup = isinstance(item, dict) and item.get("dup", False)
+            try:
+                cu: ComputeUnit = self.ctx.lookup(cu_id)
+            except KeyError:
+                self._slots.release()
+                continue
+            # Affinity constraint check: a CU pulled from the global queue
+            # may not be runnable here — push it back (step 4 fallthrough).
+            constraint = cu.description.affinity
+            if constraint and not match_affinity(constraint, pilot.affinity):
+                store.push(GLOBAL_QUEUE, item)
+                self._slots.release()
+                time.sleep(0.01)
+                continue
+            if not is_dup and not cu._cas_state(CUState.PENDING, CUState.STAGING):
+                # canceled or already claimed elsewhere
+                self._slots.release()
+                continue
+            worker = threading.Thread(
+                target=self._run_cu,
+                args=(cu, is_dup),
+                name=f"worker-{pilot.id}-{cu.id}",
+                daemon=True,
+            )
+            self._threads.append(worker)
+            worker.start()
+        if not self._dead.is_set():
+            store.hset(f"pilot:{pilot.id}", "state", PilotState.DONE)
+
+    def _heartbeat(self) -> None:
+        if self._dead.is_set():
+            return
+        try:
+            self.ctx.store.hset(
+                f"pilot:{self.pilot.id}", "heartbeat", time.monotonic()
+            )
+            with self._lock:
+                self.ctx.store.hset(
+                    f"pilot:{self.pilot.id}", "running", sorted(self._running)
+                )
+        except Exception:
+            pass  # transient store outage: agents survive (§4.2)
+
+    def _walltime_exceeded(self) -> bool:
+        wt = self.pilot.description.walltime_s
+        return (
+            self._started_at is not None
+            and time.monotonic() - self._started_at > wt
+        )
+
+    def _retire(self) -> None:
+        """Walltime reached: requeue claimed-but-unfinished CUs, shut down."""
+        store = self.ctx.store
+        with self._lock:
+            running = sorted(self._running)
+        for cu_id in running:
+            cu = self.ctx.lookup(cu_id)
+            if store.hget(f"cu:{cu.id}", "winner") is None:
+                cu._set_state(CUState.PENDING)
+                store.push(GLOBAL_QUEUE, {"cu": cu.id, "dup": False})
+        store.hset(f"pilot:{self.pilot.id}", "state", PilotState.DONE)
+
+    # -------------------------------------------------------- CU execution
+    def _run_cu(self, cu: ComputeUnit, is_dup: bool) -> None:
+        store, pilot, ctx = self.ctx.store, self.pilot, self.ctx
+        desc = cu.description
+        try:
+            with self._lock:
+                self._running[cu.id] = time.monotonic()
+            store.hset(f"cu:{cu.id}", "pilot", pilot.id)
+            cu.timings.stage_start = time.monotonic()
+            # ---- stage inputs (pull-mode data management, §4.2) ----
+            sim_stage = 0.0
+            for du_id in desc.input_data:
+                du: DataUnit = ctx.lookup(du_id)
+                sim_stage += ctx.transfer_service.stage_in(
+                    du, pilot.sandbox, pilot.affinity,
+                    use_cache=desc.cache_inputs,
+                )
+            cu.timings.stage_end = time.monotonic()
+            cu.timings.sim_stage_s = sim_stage
+            store.hset(f"cu:{cu.id}", "sim_stage_s", sim_stage)
+            if not is_dup:
+                cu._cas_state(CUState.STAGING, CUState.RUNNING)
+            # ---- execute ----
+            cu.timings.run_start = time.monotonic()
+            fn = FUNCTIONS.resolve(desc.executable)
+            cu_ctx = CUContext(cu, pilot, ctx)
+            result = fn(cu_ctx, *desc.args, **desc.kwargs)
+            ctx.sleep_sim(desc.sim_compute_s)
+            cu.timings.sim_compute_s = desc.sim_compute_s
+            cu.timings.run_end = time.monotonic()
+            if self._dead.is_set():
+                return  # node died mid-flight: results are lost
+            # ---- exactly-once completion (first finisher wins) ----
+            if not store.hcas(f"cu:{cu.id}", "winner", None, pilot.id):
+                return  # a duplicate finished first; discard
+            cu.result = result
+            # ---- stage outputs: seal output DUs into the sandbox PD ----
+            for du_id in desc.output_data:
+                du: DataUnit = ctx.lookup(du_id)
+                if not pilot.sandbox.has_du(du.id):
+                    ctx.transfer_service.ingest(du, pilot.sandbox)
+                du.seal()
+            store.hset(f"cu:{cu.id}", "state", CUState.DONE)
+            store.hset(
+                f"cu:{cu.id}",
+                "timings",
+                {
+                    "t_q_task": cu.timings.t_q_task,
+                    "t_s": cu.timings.t_s,
+                    "t_c": cu.timings.t_c,
+                    "sim_stage_s": cu.timings.sim_stage_s,
+                    "sim_compute_s": cu.timings.sim_compute_s,
+                },
+            )
+        except Exception as exc:  # noqa: BLE001 — CU failures are data
+            cu.error = f"{type(exc).__name__}: {exc}"
+            store.hset(f"cu:{cu.id}", "error", cu.error)
+            store.hset(f"cu:{cu.id}", "traceback", traceback.format_exc())
+            cu.attempts += 1
+            if cu.attempts <= desc.max_retries and not self._dead.is_set():
+                # retry with backoff via the global queue
+                cu._set_state(CUState.PENDING)
+                store.push(GLOBAL_QUEUE, {"cu": cu.id, "dup": False})
+            else:
+                cu._set_state(CUState.FAILED)
+        finally:
+            with self._lock:
+                self._running.pop(cu.id, None)
+            self._slots.release()

@@ -1,0 +1,281 @@
+"""Coordination & control store — the framework's externalized state.
+
+The paper (§4.2, "Distributed Coordination and Control Management") keeps the
+*complete* state of the framework in a shared in-memory data store (Redis):
+pilot/CU/DU descriptions and states, per-pilot and global work queues, and
+resource information pushed by agents.  That externalization is what buys the
+fault-tolerance story: managers and agents can disconnect and reconnect, the
+store can be snapshotted/restarted, and clients survive transient store
+failures.
+
+This module is an embedded, thread-safe re-implementation of exactly that
+protocol.  It is *not* a toy dict: it supports
+
+  * namespaced key/value and hash records (``set/get/hset/hgetall``),
+  * blocking FIFO queues (``push/pop``) — the global CU queue and the
+    per-pilot queues of §4.2 map 1:1 onto these,
+  * atomic compare-and-set on hash fields (used for exactly-once CU state
+    transitions, e.g. straggler-duplicate "first finisher wins"),
+  * durability via a JSON write-ahead log (replayable on restart), and
+  * fault injection (``fail_for``): operations raise
+    :class:`CoordinationUnavailable` for a window, so client retry loops can
+    be tested (the paper: "agent and manager are able to survive transient
+    Redis failures").
+
+The interface is deliberately Redis-shaped so a networked store could be
+substituted without touching managers or agents.
+"""
+
+from __future__ import annotations
+
+import collections
+import json
+import os
+import threading
+import time
+from typing import Any, Callable, Dict, Iterator, List, Optional
+
+
+class CoordinationUnavailable(RuntimeError):
+    """Raised while the store is in an (injected or real) failure window."""
+
+
+def _default(obj: Any) -> Any:
+    if isinstance(obj, (set, frozenset)):
+        return sorted(obj)
+    raise TypeError(f"not JSON serializable: {type(obj)}")
+
+
+class CoordinationStore:
+    """Thread-safe, optionally durable, Redis-like coordination service."""
+
+    def __init__(self, wal_path: Optional[str] = None, replay: bool = True):
+        self._lock = threading.RLock()
+        self._cond = threading.Condition(self._lock)
+        self._kv: Dict[str, Any] = {}
+        self._hashes: Dict[str, Dict[str, Any]] = collections.defaultdict(dict)
+        self._queues: Dict[str, collections.deque] = collections.defaultdict(
+            collections.deque
+        )
+        self._fail_until = 0.0
+        self._wal_path = wal_path
+        self._wal_file = None
+        self._op_count = 0
+        if wal_path:
+            if replay and os.path.exists(wal_path):
+                self._replay(wal_path)
+            self._wal_file = open(wal_path, "a", encoding="utf-8")
+
+    # ------------------------------------------------------------- failure
+    def fail_for(self, seconds: float) -> None:
+        """Inject a transient outage: all ops raise until the window ends."""
+        with self._lock:
+            self._fail_until = time.monotonic() + seconds
+
+    def _check_up(self) -> None:
+        if time.monotonic() < self._fail_until:
+            raise CoordinationUnavailable("coordination store unavailable")
+
+    # ------------------------------------------------------------ durability
+    def _log(self, op: str, *args: Any) -> None:
+        self._op_count += 1
+        if self._wal_file is not None:
+            self._wal_file.write(json.dumps([op, *args], default=_default) + "\n")
+            self._wal_file.flush()
+
+    def _replay(self, path: str) -> None:
+        with open(path, "r", encoding="utf-8") as fh:
+            for line in fh:
+                line = line.strip()
+                if not line:
+                    continue
+                op, *args = json.loads(line)
+                if op == "set":
+                    self._kv[args[0]] = args[1]
+                elif op == "delete":
+                    self._kv.pop(args[0], None)
+                elif op == "hset":
+                    self._hashes[args[0]][args[1]] = args[2]
+                elif op == "hdel":
+                    self._hashes.get(args[0], {}).pop(args[1], None)
+                elif op == "push":
+                    self._queues[args[0]].append(args[1])
+                elif op == "pop":
+                    q = self._queues.get(args[0])
+                    if q:
+                        q.popleft()
+                elif op == "qremove":
+                    q = self._queues.get(args[0])
+                    if q and args[1] in q:
+                        q.remove(args[1])
+
+    def close(self) -> None:
+        if self._wal_file is not None:
+            self._wal_file.close()
+            self._wal_file = None
+
+    # -------------------------------------------------------------- kv ops
+    def set(self, key: str, value: Any) -> None:
+        with self._lock:
+            self._check_up()
+            self._kv[key] = value
+            self._log("set", key, value)
+            self._cond.notify_all()
+
+    def get(self, key: str, default: Any = None) -> Any:
+        with self._lock:
+            self._check_up()
+            return self._kv.get(key, default)
+
+    def delete(self, key: str) -> None:
+        with self._lock:
+            self._check_up()
+            self._kv.pop(key, None)
+            self._log("delete", key)
+
+    def keys(self, prefix: str = "") -> List[str]:
+        with self._lock:
+            self._check_up()
+            return sorted(k for k in self._kv if k.startswith(prefix))
+
+    # ------------------------------------------------------------ hash ops
+    def hset(self, key: str, field: str, value: Any) -> None:
+        with self._lock:
+            self._check_up()
+            self._hashes[key][field] = value
+            self._log("hset", key, field, value)
+            self._cond.notify_all()
+
+    def hget(self, key: str, field: str, default: Any = None) -> Any:
+        with self._lock:
+            self._check_up()
+            return self._hashes.get(key, {}).get(field, default)
+
+    def hgetall(self, key: str) -> Dict[str, Any]:
+        with self._lock:
+            self._check_up()
+            return dict(self._hashes.get(key, {}))
+
+    def hdel(self, key: str, field: str) -> None:
+        with self._lock:
+            self._check_up()
+            self._hashes.get(key, {}).pop(field, None)
+            self._log("hdel", key, field)
+
+    def hcas(self, key: str, field: str, expect: Any, value: Any) -> bool:
+        """Atomic compare-and-set on a hash field.
+
+        Returns True iff the field currently equals ``expect`` (and was set).
+        This is the primitive behind exactly-once CU completion when
+        straggler duplicates race (§ fault tolerance).
+        """
+        with self._lock:
+            self._check_up()
+            cur = self._hashes.get(key, {}).get(field)
+            if cur != expect:
+                return False
+            self._hashes[key][field] = value
+            self._log("hset", key, field, value)
+            self._cond.notify_all()
+            return True
+
+    def hkeys(self, prefix: str = "") -> List[str]:
+        with self._lock:
+            self._check_up()
+            return sorted(k for k in self._hashes if k.startswith(prefix))
+
+    # ----------------------------------------------------------- queue ops
+    def push(self, queue: str, item: Any) -> None:
+        with self._lock:
+            self._check_up()
+            self._queues[queue].append(item)
+            self._log("push", queue, item)
+            self._cond.notify_all()
+
+    def pop(self, queue: str, timeout: float = 0.0) -> Optional[Any]:
+        """Pop from one queue, blocking up to ``timeout`` seconds."""
+        return self.pop_any([queue], timeout)
+
+    def pop_any(self, queues: List[str], timeout: float = 0.0) -> Optional[Any]:
+        """Pop the first available item from an ordered list of queues.
+
+        An agent pulls from (its own pilot queue, the global queue) — §4.2:
+        "Each Pilot-Agent generally pulls from two queues: its agent-specific
+        queue and a global queue."
+        """
+        deadline = time.monotonic() + timeout
+        with self._cond:
+            while True:
+                self._check_up()
+                for q in queues:
+                    dq = self._queues.get(q)
+                    if dq:
+                        item = dq.popleft()
+                        self._log("pop", q)
+                        return item
+                remaining = deadline - time.monotonic()
+                if remaining <= 0:
+                    return None
+                self._cond.wait(min(remaining, 0.05))
+
+    def qlen(self, queue: str) -> int:
+        with self._lock:
+            self._check_up()
+            return len(self._queues.get(queue, ()))
+
+    def qpeek(self, queue: str) -> List[Any]:
+        with self._lock:
+            self._check_up()
+            return list(self._queues.get(queue, ()))
+
+    def qremove(self, queue: str, item: Any) -> bool:
+        with self._lock:
+            self._check_up()
+            dq = self._queues.get(queue)
+            if dq and item in dq:
+                dq.remove(item)
+                self._log("qremove", queue, item)
+                return True
+            return False
+
+    # ----------------------------------------------------------- snapshot
+    def snapshot(self) -> Dict[str, Any]:
+        with self._lock:
+            return {
+                "kv": dict(self._kv),
+                "hashes": {k: dict(v) for k, v in self._hashes.items()},
+                "queues": {k: list(v) for k, v in self._queues.items()},
+            }
+
+    def restore(self, snap: Dict[str, Any]) -> None:
+        with self._lock:
+            self._kv = dict(snap["kv"])
+            self._hashes = collections.defaultdict(dict)
+            for k, v in snap["hashes"].items():
+                self._hashes[k] = dict(v)
+            self._queues = collections.defaultdict(collections.deque)
+            for k, v in snap["queues"].items():
+                self._queues[k] = collections.deque(v)
+            self._cond.notify_all()
+
+
+def with_retry(
+    fn: Callable[[], Any],
+    retries: int = 50,
+    base_delay: float = 0.02,
+    max_delay: float = 0.5,
+) -> Any:
+    """Run ``fn`` retrying across transient :class:`CoordinationUnavailable`.
+
+    Exponential backoff with a cap; this is the client-side half of the
+    paper's "survive transient Redis failures" behaviour.
+    """
+    delay = base_delay
+    for attempt in range(retries):
+        try:
+            return fn()
+        except CoordinationUnavailable:
+            if attempt == retries - 1:
+                raise
+            time.sleep(delay)
+            delay = min(max_delay, delay * 2)

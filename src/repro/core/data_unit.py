@@ -1,0 +1,252 @@
+"""Data-Unit: the paper's primary data abstraction (§4.3.2).
+
+"A DU is defined as an immutable container for a logical group of 'affine'
+data files ... completely decoupled from its physical location and can be
+stored in different kinds of backends ... Replicas of a DU can reside in
+different Pilot-Data."
+
+Key semantics implemented here:
+  * logical identity: a DU has a location-invariant URL ``du://<id>`` that
+    stays valid for its whole lifetime ("a simple and useful notion of
+    distributed logical location that from an application's perspective is
+    invariant over the lifetime");
+  * an application-level hierarchical namespace *within* the DU (relative
+    file paths), independent of the backend's namespace (object stores are
+    flat — the adaptor encodes);
+  * immutability after seal: files can be added while the DU is NEW; once
+    sealed (first successful staging), mutation raises;
+  * replica set: the DU tracks which Pilot-Data hold a full copy; all state
+    is mirrored in the coordination store so any client can resolve the DU
+    from anywhere (the "distributed namespace").
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import threading
+import zlib
+from typing import Callable, Dict, List, Optional
+
+from .coordination import CoordinationStore
+
+
+class DUState:
+    NEW = "New"
+    PENDING = "Pending"  # staging to first PD in flight
+    READY = "Ready"  # >= 1 replica materialized; sealed
+    FAILED = "Failed"
+    DELETED = "Deleted"
+
+
+_ids = itertools.count()
+_ids_lock = threading.Lock()
+
+
+def _next_id(prefix: str) -> str:
+    with _ids_lock:
+        return f"{prefix}-{next(_ids):06d}"
+
+
+@dataclasses.dataclass
+class DataUnitDescription:
+    """JSON-able description (paper: DUD objects 'defined in the JSON
+    format')."""
+
+    name: str = ""
+    #: initial content: relative path -> bytes
+    files: Dict[str, bytes] = dataclasses.field(default_factory=dict)
+    #: affinity constraint label (subtree of the topology) or None
+    affinity: Optional[str] = None
+    #: size hint for placement when content is produced later (output DUs)
+    size_hint: int = 0
+
+    def to_json(self) -> Dict:
+        return {
+            "name": self.name,
+            "files": sorted(self.files),
+            "affinity": self.affinity,
+            "size_hint": self.size_hint,
+        }
+
+
+class DataUnit:
+    """A logical, immutable, replicable group of files."""
+
+    def __init__(
+        self,
+        description: DataUnitDescription,
+        store: CoordinationStore,
+        du_id: Optional[str] = None,
+    ):
+        self.id = du_id or _next_id("du")
+        self.description = description
+        self._store = store
+        self._lock = threading.RLock()
+        self._files: Dict[str, bytes] = dict(description.files)
+        self._sealed = False
+        self._manifest: Dict[str, int] = {
+            k: len(v) for k, v in self._files.items()
+        }
+        self._checksums: Dict[str, int] = {
+            k: zlib.crc32(v) for k, v in self._files.items()
+        }
+        store.hset(f"du:{self.id}", "state", DUState.NEW)
+        store.hset(f"du:{self.id}", "name", description.name)
+        store.hset(f"du:{self.id}", "affinity", description.affinity)
+        store.hset(f"du:{self.id}", "locations", [])
+        store.hset(f"du:{self.id}", "manifest", dict(self._manifest))
+
+    # ------------------------------------------------------------- identity
+    @property
+    def url(self) -> str:
+        """Location-invariant logical URL (single-level namespace, §4 cap. 3)."""
+        return f"du://{self.id}"
+
+    @property
+    def state(self) -> str:
+        return self._store.hget(f"du:{self.id}", "state", DUState.NEW)
+
+    @property
+    def locations(self) -> List[str]:
+        """Pilot-Data ids currently holding a full replica."""
+        return list(self._store.hget(f"du:{self.id}", "locations", []))
+
+    @property
+    def manifest(self) -> Dict[str, int]:
+        return dict(self._manifest)
+
+    @property
+    def size(self) -> int:
+        return sum(self._manifest.values())
+
+    @property
+    def affinity(self) -> Optional[str]:
+        return self.description.affinity
+
+    def checksum(self, relpath: str) -> int:
+        return self._checksums[relpath]
+
+    # ----------------------------------------------------------- mutation
+    def add_file(self, relpath: str, data: bytes) -> None:
+        """Add a file to a not-yet-sealed DU (application-level hierarchical
+        namespace: ``relpath`` may contain '/')."""
+        with self._lock:
+            if self._sealed:
+                raise RuntimeError(
+                    f"{self.url} is immutable (sealed); create a new DU instead"
+                )
+            if relpath.startswith("/") or ".." in relpath.split("/"):
+                raise ValueError(f"bad DU-relative path {relpath!r}")
+            self._files[relpath] = bytes(data)
+            self._manifest[relpath] = len(data)
+            self._checksums[relpath] = zlib.crc32(data)
+            self._store.hset(f"du:{self.id}", "manifest", dict(self._manifest))
+
+    def seal(self) -> None:
+        with self._lock:
+            self._sealed = True
+
+    @property
+    def sealed(self) -> bool:
+        return self._sealed
+
+    # -------------------------------------------------------- content access
+    def read(self, relpath: str) -> bytes:
+        """Read file content from local staging buffer (pre-seal) — replica
+        reads go through PilotData.fetch_du_file."""
+        with self._lock:
+            if relpath not in self._files:
+                raise KeyError(f"{self.url} has no staged copy of {relpath!r}")
+            return self._files[relpath]
+
+    def iter_files(self):
+        with self._lock:
+            return list(self._files.items())
+
+    def drop_local_buffer(self) -> None:
+        """Release the in-process staging buffer once replicas exist (the DU
+        content then lives only in Pilot-Data backends)."""
+        with self._lock:
+            if not self.locations:
+                raise RuntimeError("refusing to drop buffer with no replica")
+            self._files = {}
+
+    # ----------------------------------------------------------- state mgmt
+    def _set_state(self, state: str) -> None:
+        self._store.hset(f"du:{self.id}", "state", state)
+
+    def _add_location(self, pd_id: str) -> None:
+        with self._lock:
+            locs = self.locations
+            if pd_id not in locs:
+                locs.append(pd_id)
+                self._store.hset(f"du:{self.id}", "locations", locs)
+            self._set_state(DUState.READY)
+            self._sealed = True
+
+    def _remove_location(self, pd_id: str) -> None:
+        with self._lock:
+            locs = [l for l in self.locations if l != pd_id]
+            self._store.hset(f"du:{self.id}", "locations", locs)
+
+    def wait(self, timeout: float = 30.0) -> str:
+        """Block until the DU reaches a terminal-or-ready state."""
+        import time
+
+        deadline = time.monotonic() + timeout
+        while time.monotonic() < deadline:
+            s = self.state
+            if s in (DUState.READY, DUState.FAILED, DUState.DELETED):
+                return s
+            time.sleep(0.005)
+        return self.state
+
+    def __repr__(self) -> str:  # pragma: no cover
+        return (
+            f"<DataUnit {self.url} state={self.state} files={len(self._manifest)} "
+            f"bytes={self.size} replicas={len(self.locations)}>"
+        )
+
+
+def partition_du(
+    du: DataUnit,
+    n_parts: int,
+    store: CoordinationStore,
+    name: Optional[str] = None,
+) -> List[DataUnit]:
+    """Partition a DU's files round-robin into ``n_parts`` new DUs.
+
+    Paper §4.1 usage mode 3: "Support common data processing patterns, such
+    as data-partitioning, parallel processing and output gathering" — files
+    are the partitioning granularity, matching the BWA read-file splits of
+    §6.3.
+    """
+    if n_parts <= 0:
+        raise ValueError("n_parts must be positive")
+    files = du.iter_files()
+    if not files:
+        raise RuntimeError(f"{du.url}: no local buffer to partition from")
+    parts: List[DataUnit] = []
+    base = name or du.description.name or du.id
+    for i in range(n_parts):
+        desc = DataUnitDescription(
+            name=f"{base}.part{i}", affinity=du.description.affinity
+        )
+        parts.append(DataUnit(desc, store))
+    for idx, (relpath, data) in enumerate(sorted(files)):
+        parts[idx % n_parts].add_file(relpath, data)
+    return parts
+
+
+def merge_dus(
+    dus: List[DataUnit], store: CoordinationStore, name: str = "merged"
+) -> DataUnit:
+    """Gather pattern: merge several DUs' files into one new DU (output
+    gathering)."""
+    desc = DataUnitDescription(name=name)
+    out = DataUnit(desc, store)
+    for du in dus:
+        for relpath, data in du.iter_files():
+            out.add_file(f"{du.id}/{relpath}", data)
+    return out

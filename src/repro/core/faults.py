@@ -1,0 +1,186 @@
+"""Fault tolerance & straggler mitigation (paper §4.2 "Fault Tolerance" and
+the §6.4 lessons).
+
+The paper's design: all framework state lives in the coordination store, so
+components can crash, reconnect and resume; transfers retry; and the
+evaluation observed "failures due to high loads, wall time limits and file
+transfer errors" plus heavy-tailed stragglers ("CUs started later on a
+machine run longer", "the first resource must not be the best one").
+
+This module supplies the *active* policies on top of that substrate:
+
+  * :class:`HeartbeatMonitor` — detects dead pilots (missed heartbeats) and
+    re-queues their claimed-but-unfinished CUs to the global queue;
+  * :class:`StragglerMitigator` — duplicates long-running idempotent CUs
+    onto other pilots; the exactly-once "winner" CAS in the agent makes the
+    first finisher authoritative;
+  * :func:`requeue_orphans` — the shared recovery primitive.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from typing import Dict, List, Optional
+
+from .agent import GLOBAL_QUEUE
+from .compute_unit import CUState, ComputeUnit
+from .cost_model import straggler_threshold
+from .pilot import PilotCompute, PilotState, RuntimeContext
+
+
+def requeue_orphans(ctx: RuntimeContext, pilot_id: str) -> List[str]:
+    """Re-queue every CU the (dead) pilot had claimed but not won, AND
+    drain its pilot-specific queue back to the global queue (queued-but-
+    unclaimed work must not die with the pilot)."""
+    store = ctx.store
+    requeued = []
+    # drain the dead pilot's queue
+    while True:
+        item = store.pop(f"queue:pilot:{pilot_id}", timeout=0.0)
+        if item is None:
+            break
+        store.push(GLOBAL_QUEUE, item)
+        cu_id = item["cu"] if isinstance(item, dict) else item
+        requeued.append(cu_id)
+    for key in store.hkeys("cu:"):
+        cu_id = key.split(":", 1)[1]
+        rec = store.hgetall(key)
+        if rec.get("pilot") != pilot_id:
+            continue
+        if rec.get("state") in (CUState.STAGING, CUState.RUNNING) and (
+            rec.get("winner") is None
+        ):
+            try:
+                cu: ComputeUnit = ctx.lookup(cu_id)
+                cu.attempts += 1
+                if cu.attempts > cu.description.max_retries:
+                    cu._set_state(CUState.FAILED)
+                    continue
+            except KeyError:
+                pass
+            store.hset(key, "state", CUState.PENDING)
+            store.push(GLOBAL_QUEUE, {"cu": cu_id, "dup": False})
+            requeued.append(cu_id)
+    return requeued
+
+
+class HeartbeatMonitor:
+    """Declares a pilot failed after ``timeout_s`` without a heartbeat and
+    recovers its workload."""
+
+    def __init__(self, ctx: RuntimeContext, timeout_s: float = 0.5, poll_s: float = 0.05):
+        self.ctx = ctx
+        self.timeout_s = timeout_s
+        self.poll_s = poll_s
+        self._stop = threading.Event()
+        self.failures: List[str] = []
+        self._thread = threading.Thread(
+            target=self._loop, name="heartbeat-monitor", daemon=True
+        )
+
+    def start(self) -> "HeartbeatMonitor":
+        self._thread.start()
+        return self
+
+    def stop(self) -> None:
+        self._stop.set()
+        self._thread.join(timeout=2.0)
+
+    def _loop(self) -> None:
+        store = self.ctx.store
+        while not self._stop.is_set():
+            now = time.monotonic()
+            try:
+                keys = store.hkeys("pilot:")
+            except Exception:
+                time.sleep(self.poll_s)
+                continue
+            for key in keys:
+                rec = store.hgetall(key)
+                if rec.get("state") != PilotState.ACTIVE:
+                    continue
+                hb = rec.get("heartbeat", 0.0)
+                if now - hb > self.timeout_s:
+                    pilot_id = key.split(":", 1)[1]
+                    store.hset(key, "state", PilotState.FAILED)
+                    self.failures.append(pilot_id)
+                    requeue_orphans(self.ctx, pilot_id)
+            time.sleep(self.poll_s)
+
+
+class StragglerMitigator:
+    """Duplicate-launches slow CUs (speculative execution).
+
+    Policy: once at least ``min_samples`` CUs of the workload completed, any
+    RUNNING CU older than ``factor`` × median completed duration is pushed
+    (as a duplicate) to the global queue — another pilot races it; the
+    agent's winner-CAS keeps completion exactly-once.  Only CUs marked
+    idempotent are eligible.
+    """
+
+    def __init__(
+        self,
+        ctx: RuntimeContext,
+        factor: float = 2.5,
+        min_samples: int = 3,
+        poll_s: float = 0.05,
+    ):
+        self.ctx = ctx
+        self.factor = factor
+        self.min_samples = min_samples
+        self.poll_s = poll_s
+        self._stop = threading.Event()
+        self._duplicated: Dict[str, float] = {}
+        self.duplicates: List[str] = []
+        self._thread = threading.Thread(
+            target=self._loop, name="straggler-mitigator", daemon=True
+        )
+
+    def start(self) -> "StragglerMitigator":
+        self._thread.start()
+        return self
+
+    def stop(self) -> None:
+        self._stop.set()
+        self._thread.join(timeout=2.0)
+
+    def _completed_durations(self) -> List[float]:
+        out = []
+        for key in self.ctx.store.hkeys("cu:"):
+            rec = self.ctx.store.hgetall(key)
+            t = rec.get("timings")
+            if rec.get("state") == CUState.DONE and t:
+                out.append(t.get("t_c", 0.0))
+        return out
+
+    def _loop(self) -> None:
+        store = self.ctx.store
+        while not self._stop.is_set():
+            time.sleep(self.poll_s)
+            try:
+                durations = self._completed_durations()
+            except Exception:
+                continue
+            if len(durations) < self.min_samples:
+                continue
+            threshold = straggler_threshold(durations, self.factor)
+            now = time.monotonic()
+            for key in store.hkeys("cu:"):
+                cu_id = key.split(":", 1)[1]
+                if cu_id in self._duplicated:
+                    continue
+                rec = store.hgetall(key)
+                if rec.get("state") != CUState.RUNNING or rec.get("winner"):
+                    continue
+                try:
+                    cu: ComputeUnit = self.ctx.lookup(cu_id)
+                except KeyError:
+                    continue
+                if not cu.description.kwargs.get("idempotent", True):
+                    continue
+                started = cu.timings.run_start or cu.timings.stage_start
+                if started and (now - started) > threshold:
+                    store.push(GLOBAL_QUEUE, {"cu": cu_id, "dup": True})
+                    self._duplicated[cu_id] = now
+                    self.duplicates.append(cu_id)

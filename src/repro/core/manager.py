@@ -1,0 +1,128 @@
+"""Pilot-Manager: the central coordinator (paper Fig. 1).
+
+"The Pilot-Manager is the central entity of the framework, which is
+responsible for managing the lifecycle of a set of Pilots (both
+Pilot-Computes and Pilot-Data)."
+
+:class:`PilotManager` is the one-stop construction point: it owns the
+coordination store, the topology, the transfer service, the three Pilot-API
+services, and the fault/straggler monitors.  It also implements the
+reconnect semantics (§4.2): a second manager can attach to an existing
+store (same WAL) and resolve pilots/CUs/DUs by URL.
+"""
+
+from __future__ import annotations
+
+import contextlib
+from typing import Dict, List, Optional
+
+from .affinity import Topology
+from .compute_unit import ComputeUnitDescription, FUNCTIONS
+from .coordination import CoordinationStore
+from .data_unit import DataUnitDescription
+from .faults import HeartbeatMonitor, StragglerMitigator
+from .pilot import (
+    PilotComputeDescription,
+    PilotDataDescription,
+    RuntimeContext,
+)
+from .services import (
+    ComputeDataService,
+    PilotComputeService,
+    PilotDataService,
+)
+from .transfer import TransferService
+
+
+class PilotManager:
+    def __init__(
+        self,
+        topology: Optional[Topology] = None,
+        store: Optional[CoordinationStore] = None,
+        wal_path: Optional[str] = None,
+        time_scale: float = 0.0,
+        data_mode: str = "pull",
+        delayed_scheduling_s: float = 0.0,
+        enable_heartbeat_monitor: bool = False,
+        heartbeat_timeout_s: float = 0.5,
+        enable_straggler_mitigation: bool = False,
+        straggler_factor: float = 2.5,
+    ):
+        self.store = store or CoordinationStore(wal_path=wal_path)
+        self.topology = topology or Topology()
+        self.ctx = RuntimeContext(
+            store=self.store,
+            topology=self.topology,
+            time_scale=time_scale,
+            data_mode=data_mode,
+        )
+        self.transfer = TransferService(self.ctx)
+        self.compute_service = PilotComputeService(self.ctx)
+        self.data_service = PilotDataService(self.ctx)
+        self.cds = ComputeDataService(
+            self.ctx, delayed_scheduling_s=delayed_scheduling_s
+        )
+        self.heartbeat_monitor: Optional[HeartbeatMonitor] = None
+        self.straggler_mitigator: Optional[StragglerMitigator] = None
+        if enable_heartbeat_monitor:
+            self.heartbeat_monitor = HeartbeatMonitor(
+                self.ctx, timeout_s=heartbeat_timeout_s
+            ).start()
+        if enable_straggler_mitigation:
+            self.straggler_mitigator = StragglerMitigator(
+                self.ctx, factor=straggler_factor
+            ).start()
+
+    # ------------------------------------------------------- convenience API
+    def start_pilot(self, **kw) -> "PilotCompute":
+        pilot = self.compute_service.create_pilot(PilotComputeDescription(**kw))
+        self.cds.add_pilot_compute(pilot)
+        return pilot
+
+    def start_pilot_data(self, **kw) -> "PilotData":
+        pd = self.data_service.create_pilot_data(PilotDataDescription(**kw))
+        self.cds.add_pilot_data(pd)
+        return pd
+
+    def submit_du(self, **kw) -> "DataUnit":
+        target = kw.pop("target", None)
+        return self.cds.submit_data_unit(DataUnitDescription(**kw), target=target)
+
+    def submit_cu(self, **kw) -> "ComputeUnit":
+        return self.cds.submit_compute_unit(ComputeUnitDescription(**kw))
+
+    def register_function(self, name: str, fn=None):
+        return FUNCTIONS.register(name, fn)
+
+    def wait(self, timeout: float = 120.0) -> bool:
+        return self.cds.wait(timeout=timeout)
+
+    # ------------------------------------------------------------ reconnect
+    def cu_states(self) -> Dict[str, str]:
+        out = {}
+        for key in self.store.hkeys("cu:"):
+            out[key.split(":", 1)[1]] = self.store.hget(key, "state")
+        return out
+
+    def pilot_states(self) -> Dict[str, str]:
+        out = {}
+        for key in self.store.hkeys("pilot:"):
+            out[key.split(":", 1)[1]] = self.store.hget(key, "state")
+        return out
+
+    def shutdown(self) -> None:
+        with contextlib.suppress(Exception):
+            self.cds.cancel()
+        with contextlib.suppress(Exception):
+            self.compute_service.cancel()
+        if self.heartbeat_monitor:
+            self.heartbeat_monitor.stop()
+        if self.straggler_mitigator:
+            self.straggler_mitigator.stop()
+        self.store.close()
+
+    def __enter__(self) -> "PilotManager":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.shutdown()

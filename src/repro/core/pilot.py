@@ -1,0 +1,339 @@
+"""Pilot-Compute and Pilot-Data (§4.3.1).
+
+"A Pilot-Compute allocates a set of computational resources (e.g. cores).
+A Pilot-Data is conceptually similar and represents a physical storage
+resource that is used as a logical container for dynamic data placement,
+e.g. for compute-local data replicas or for caching intermediate data."
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from typing import Any, Dict, List, Optional
+
+from ..backends import StorageAdaptor, make_backend
+from .affinity import Topology
+from .coordination import CoordinationStore
+from .data_unit import DataUnit, _next_id
+
+
+class PilotState:
+    NEW = "New"
+    PROVISIONING = "Provisioning"  # waiting in the resource's queue (T_Q_pilot)
+    ACTIVE = "Active"
+    DONE = "Done"
+    FAILED = "Failed"
+    CANCELED = "Canceled"
+
+    TERMINAL = (DONE, FAILED, CANCELED)
+
+
+@dataclasses.dataclass
+class RuntimeContext:
+    """Shared runtime plumbing handed to pilots/agents/services."""
+
+    store: CoordinationStore
+    topology: Topology
+    #: scale simulated delays into real sleeps (0.0 = don't sleep at all;
+    #: tests run at 0, demos can use e.g. 1e-3 to watch dynamics)
+    time_scale: float = 0.0
+    #: agent poll interval
+    poll_s: float = 0.01
+    #: in-process object table: id -> live DataUnit/ComputeUnit/Pilot objects
+    #: (authoritative *state* stays in the coordination store; the table is
+    #: how a single-process deployment resolves handles, and is rebuildable
+    #: from the store on reconnect)
+    objects: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    #: attached lazily by services (avoids an import cycle)
+    transfer_service: Optional[Any] = None
+    #: data management mode (§4.2): "pull" = agent stages inputs before the
+    #: CU runs; "push" = the manager pre-stages at scheduling time
+    data_mode: str = "pull"
+    #: topology label of the submission host — ingest transfers (DU local
+    #: buffer → first PD) are costed over this uplink when set
+    submission_label: Optional[str] = None
+
+    def sleep_sim(self, sim_seconds: float) -> None:
+        if self.time_scale > 0 and sim_seconds > 0:
+            time.sleep(sim_seconds * self.time_scale)
+
+    def lookup(self, obj_id: str) -> Any:
+        if obj_id not in self.objects:
+            raise KeyError(f"unknown object id {obj_id!r}")
+        return self.objects[obj_id]
+
+    def register(self, obj: Any) -> Any:
+        self.objects[obj.id] = obj
+        return obj
+
+
+# ---------------------------------------------------------------- Pilot-Data
+@dataclasses.dataclass
+class PilotDataDescription:
+    """JSON-able PD description: where (backend URL + affinity) and how much."""
+
+    service_url: str  # e.g. "sharedfs://cluster:pod0/scratch"
+    affinity: str  # topology label, e.g. "cluster:pod0"
+    size_quota: int = 1 << 40  # bytes
+    name: str = ""
+
+    def to_json(self) -> Dict[str, Any]:
+        return dataclasses.asdict(self)
+
+
+class QuotaExceeded(RuntimeError):
+    pass
+
+
+class PilotData:
+    """An allocated storage container holding DU replicas.
+
+    The PD stores each DU's files under the key prefix ``<du_id>/``; the
+    DU-internal hierarchical namespace is preserved (the adaptor flattens it
+    if the backend namespace is flat).
+    """
+
+    def __init__(
+        self,
+        description: PilotDataDescription,
+        ctx: RuntimeContext,
+        pd_id: Optional[str] = None,
+    ):
+        self.id = pd_id or _next_id("pd")
+        self.description = description
+        self.ctx = ctx
+        self.backend: StorageAdaptor = make_backend(description.service_url)
+        self.affinity = description.affinity
+        ctx.topology.ensure(self.affinity)
+        self._lock = threading.RLock()
+        self._used = 0
+        self._dus: Dict[str, int] = {}  # du_id -> bytes
+        ctx.store.hset(f"pd:{self.id}", "state", PilotState.ACTIVE)
+        ctx.store.hset(f"pd:{self.id}", "affinity", self.affinity)
+        ctx.store.hset(f"pd:{self.id}", "url", description.service_url)
+        ctx.store.hset(f"pd:{self.id}", "dus", [])
+
+    @property
+    def url(self) -> str:
+        return f"pd://{self.id}"
+
+    @property
+    def state(self) -> str:
+        return self.ctx.store.hget(f"pd:{self.id}", "state", PilotState.NEW)
+
+    @property
+    def used_bytes(self) -> int:
+        with self._lock:
+            return self._used
+
+    @property
+    def free_bytes(self) -> int:
+        return self.description.size_quota - self.used_bytes
+
+    def du_ids(self) -> List[str]:
+        with self._lock:
+            return sorted(self._dus)
+
+    def has_du(self, du_id: str) -> bool:
+        with self._lock:
+            return du_id in self._dus
+
+    # ------------------------------------------------------------- content
+    def _register_du(self, du: DataUnit, nbytes: int) -> None:
+        with self._lock:
+            self._dus[du.id] = nbytes
+            self._used += nbytes
+            self.ctx.store.hset(f"pd:{self.id}", "dus", sorted(self._dus))
+        du._add_location(self.id)
+
+    def put_du(self, du: DataUnit, register: bool = True) -> int:
+        """Materialize a DU's in-process buffer into this PD (initial
+        staging).  Returns bytes written.  ``register=False`` stores the
+        files without adding this PD to the DU's replica set (transient
+        per-CU sandbox staging — the paper's PD-less naive mode)."""
+        files = du.iter_files()
+        nbytes = sum(len(d) for _, d in files)
+        if nbytes > self.free_bytes:
+            raise QuotaExceeded(
+                f"{self.url}: need {nbytes}B, free {self.free_bytes}B"
+            )
+        for relpath, data in files:
+            self.backend.put(f"{du.id}/{relpath}", data)
+        if register:
+            self._register_du(du, nbytes)
+        else:
+            with self._lock:
+                if du.id not in self._dus:
+                    self._dus[du.id] = nbytes
+                    self._used += nbytes
+        return nbytes
+
+    def copy_du_from(self, du: DataUnit, src: "PilotData", register: bool = True) -> int:
+        """Replicate a DU from another PD into this one (physical copy)."""
+        if not src.has_du(du.id):
+            raise KeyError(f"{src.url} holds no replica of {du.url}")
+        nbytes = 0
+        for relpath in du.manifest:
+            data = src.backend.get(f"{du.id}/{relpath}")
+            self.backend.put(f"{du.id}/{relpath}", data)
+            nbytes += len(data)
+        if nbytes > self.description.size_quota:
+            raise QuotaExceeded(f"{self.url}: DU {du.id} exceeds quota")
+        if register:
+            self._register_du(du, nbytes)
+        else:
+            with self._lock:
+                if du.id not in self._dus:
+                    self._dus[du.id] = nbytes
+                    self._used += nbytes
+        return nbytes
+
+    def fetch_du_file(self, du_id: str, relpath: str) -> bytes:
+        return self.backend.get(f"{du_id}/{relpath}")
+
+    def verify_du(self, du: DataUnit) -> bool:
+        """Checksum-verify the local replica against the DU manifest."""
+        import zlib
+
+        for relpath in du.manifest:
+            data = self.backend.get(f"{du.id}/{relpath}")
+            if zlib.crc32(data) != du.checksum(relpath):
+                return False
+        return True
+
+    def remove_du(self, du: DataUnit) -> None:
+        with self._lock:
+            nbytes = self._dus.pop(du.id, 0)
+            self._used -= nbytes
+            self.ctx.store.hset(f"pd:{self.id}", "dus", sorted(self._dus))
+        for relpath in du.manifest:
+            self.backend.delete(f"{du.id}/{relpath}")
+        du._remove_location(self.id)
+
+    def cancel(self) -> None:
+        self.ctx.store.hset(f"pd:{self.id}", "state", PilotState.CANCELED)
+
+    def __repr__(self) -> str:  # pragma: no cover
+        return f"<PilotData {self.url} at {self.affinity} dus={len(self._dus)}>"
+
+
+# ------------------------------------------------------------- Pilot-Compute
+@dataclasses.dataclass
+class PilotComputeDescription:
+    """JSON-able PC description (paper: service URL + process count +
+    optional backend-specific attributes)."""
+
+    resource_url: str  # e.g. "sim://cluster:pod0:host0"
+    slots: int = 1
+    affinity: str = ""  # defaults to the resource_url location part
+    #: simulated batch-queue wait before the pilot activates (T_Q_pilot)
+    queue_time_s: float = 0.0
+    walltime_s: float = float("inf")
+    name: str = ""
+
+    def __post_init__(self) -> None:
+        if not self.affinity:
+            import urllib.parse
+
+            self.affinity = urllib.parse.urlparse(self.resource_url).netloc
+
+    def to_json(self) -> Dict[str, Any]:
+        return dataclasses.asdict(self)
+
+
+class PilotCompute:
+    """A placeholder allocation of compute slots, run by a Pilot-Agent.
+
+    The agent itself lives in :mod:`repro.core.agent`; this class manages
+    lifecycle + the pilot's sandbox PD (paper: "For each Pilot instance a
+    sandbox is created").
+    """
+
+    def __init__(
+        self,
+        description: PilotComputeDescription,
+        ctx: RuntimeContext,
+        pilot_id: Optional[str] = None,
+    ):
+        from .agent import PilotAgent  # local import to avoid cycle
+
+        self.id = pilot_id or _next_id("pc")
+        self.description = description
+        self.ctx = ctx
+        ctx.topology.ensure(description.affinity)
+        self.sandbox = PilotData(
+            PilotDataDescription(
+                service_url=f"mem://{description.affinity}/sandbox-{self.id}",
+                affinity=description.affinity,
+                name=f"sandbox-{self.id}",
+            ),
+            ctx,
+        )
+        st = ctx.store
+        st.hset(f"pilot:{self.id}", "state", PilotState.NEW)
+        st.hset(f"pilot:{self.id}", "affinity", description.affinity)
+        st.hset(f"pilot:{self.id}", "slots", description.slots)
+        st.hset(f"pilot:{self.id}", "queue_time_s", description.queue_time_s)
+        st.hset(f"pilot:{self.id}", "heartbeat", time.monotonic())
+        self.agent = PilotAgent(self, ctx)
+
+    @property
+    def url(self) -> str:
+        return f"pc://{self.id}"
+
+    @property
+    def queue_name(self) -> str:
+        """The pilot-specific CU queue (§4.2's two-queue scheme)."""
+        return f"queue:pilot:{self.id}"
+
+    @property
+    def state(self) -> str:
+        return self.ctx.store.hget(f"pilot:{self.id}", "state", PilotState.NEW)
+
+    @property
+    def affinity(self) -> str:
+        return self.description.affinity
+
+    @property
+    def slots(self) -> int:
+        return self.description.slots
+
+    def start(self) -> "PilotCompute":
+        """Submit the placeholder job; the agent activates after the
+        (simulated) queue wait."""
+        self.ctx.store.hset(f"pilot:{self.id}", "state", PilotState.PROVISIONING)
+        self.agent.start()
+        return self
+
+    def cancel(self) -> None:
+        self.agent.stop()
+        self.ctx.store.hset(f"pilot:{self.id}", "state", PilotState.CANCELED)
+
+    def fail(self) -> None:
+        """Simulate a hard node failure (fault-injection tests).
+
+        Deliberately does NOT touch the coordination store: a crashed node
+        cannot report its own death.  The HeartbeatMonitor notices the
+        missed heartbeats, marks the pilot FAILED, and re-queues its
+        orphaned CUs — exactly the recovery path a real failure takes.
+        """
+        self.agent.kill()
+
+    def wait_active(self, timeout: float = 30.0) -> str:
+        deadline = time.monotonic() + timeout
+        while time.monotonic() < deadline:
+            if self.state in (PilotState.ACTIVE, *PilotState.TERMINAL):
+                return self.state
+            time.sleep(0.005)
+        return self.state
+
+    def running_cus(self) -> List[str]:
+        return list(self.ctx.store.hget(f"pilot:{self.id}", "running", []))
+
+    def __repr__(self) -> str:  # pragma: no cover
+        return (
+            f"<PilotCompute {self.url} at {self.affinity} "
+            f"slots={self.slots} state={self.state}>"
+        )

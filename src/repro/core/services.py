@@ -1,0 +1,393 @@
+"""The Pilot-API (§4.3): PilotComputeService, PilotDataService, and the
+Compute-Data Service (the affinity-based workload manager of §5).
+
+Multi-level scheduling, exactly as the paper separates it:
+  * resource allocation — services that start Pilot-Computes / Pilot-Data
+    ("the start of the Pilot") — and
+  * workload management — the Compute-Data Service that late-binds CUs and
+    DUs onto those pilots using the affinity model and the §6.1 calculus.
+
+The CDS scheduler implements the paper's placement loop verbatim (§5):
+
+  1. find the pilot that best fulfills the CU's requested affinity and the
+     location of its input data;
+  2. if a pilot with the same affinity exists and has an empty slot, place
+     the CU in that pilot's queue;
+  3. if delayed scheduling is active, wait n sec and re-check for a free
+     slot;
+  4. otherwise place the CU in the global queue, pulled by the first pilot
+     with an available slot.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from typing import Dict, List, Optional, Sequence
+
+from .agent import GLOBAL_QUEUE
+from .compute_unit import ComputeUnit, ComputeUnitDescription, CUState
+from .cost_model import decide_placement
+from .data_unit import DataUnit, DataUnitDescription
+from .pilot import (
+    PilotCompute,
+    PilotComputeDescription,
+    PilotData,
+    PilotDataDescription,
+    PilotState,
+    RuntimeContext,
+)
+from .transfer import TransferService
+
+
+class PilotComputeService:
+    """Factory for Pilot-Computes (paper §4.3.1)."""
+
+    def __init__(self, ctx: RuntimeContext):
+        self.ctx = ctx
+        if ctx.transfer_service is None:
+            TransferService(ctx)
+        self._pilots: List[PilotCompute] = []
+
+    def create_pilot(self, desc: PilotComputeDescription) -> PilotCompute:
+        pilot = PilotCompute(desc, self.ctx)
+        self.ctx.register(pilot)
+        self.ctx.register(pilot.sandbox)
+        pilot.start()
+        self._pilots.append(pilot)
+        return pilot
+
+    def list_pilots(self) -> List[PilotCompute]:
+        return list(self._pilots)
+
+    def cancel(self) -> None:
+        for p in self._pilots:
+            p.cancel()
+
+
+class PilotDataService:
+    """Factory for Pilot-Data (paper §4.3.1)."""
+
+    def __init__(self, ctx: RuntimeContext):
+        self.ctx = ctx
+        if ctx.transfer_service is None:
+            TransferService(ctx)
+        self._pds: List[PilotData] = []
+
+    def create_pilot_data(self, desc: PilotDataDescription) -> PilotData:
+        pd = PilotData(desc, self.ctx)
+        self.ctx.register(pd)
+        self._pds.append(pd)
+        return pd
+
+    def list_pilot_data(self) -> List[PilotData]:
+        return list(self._pds)
+
+
+class ComputeDataService:
+    """Workload manager: late-binds CUs/DUs to pilots by affinity (§5)."""
+
+    def __init__(
+        self,
+        ctx: RuntimeContext,
+        delayed_scheduling_s: float = 0.0,
+        avg_cu_estimate_s: float = 0.05,
+    ):
+        self.ctx = ctx
+        if ctx.transfer_service is None:
+            TransferService(ctx)
+        self.delayed_scheduling_s = delayed_scheduling_s
+        self.avg_cu_estimate_s = avg_cu_estimate_s
+        self._pilots: List[PilotCompute] = []
+        self._pds: List[PilotData] = []
+        self._cus: List[ComputeUnit] = []
+        self._dus: List[DataUnit] = []
+        self._lock = threading.RLock()
+        self._stop = threading.Event()
+        self._delayed: List[Dict] = []  # {"cu":…, "deadline":…, "pilot":…}
+        self._decisions: List[Dict] = []  # audit log of placement choices
+        self._thread = threading.Thread(
+            target=self._scheduler_loop, name="cds-scheduler", daemon=True
+        )
+        self._thread.start()
+
+    # --------------------------------------------------------- registration
+    def add_pilot_compute(self, pilot: PilotCompute) -> None:
+        with self._lock:
+            self._pilots.append(pilot)
+
+    def add_pilot_data(self, pd: PilotData) -> None:
+        with self._lock:
+            self._pds.append(pd)
+
+    def pilots(self) -> List[PilotCompute]:
+        with self._lock:
+            return list(self._pilots)
+
+    def pilot_data(self) -> List[PilotData]:
+        with self._lock:
+            return list(self._pds)
+
+    # ----------------------------------------------------------- submission
+    def submit_data_unit(
+        self, desc: DataUnitDescription, target: Optional[PilotData] = None
+    ) -> DataUnit:
+        """Create a DU and stage it into an affinity-appropriate PD."""
+        du = DataUnit(desc, self.ctx.store)
+        self.ctx.register(du)
+        with self._lock:
+            self._dus.append(du)
+        pd = target or self._choose_pd(desc)
+        if pd is not None and du.size > 0:
+            from .data_unit import DUState
+
+            self.ctx.store.hset(f"du:{du.id}", "state", DUState.PENDING)
+            self.ctx.transfer_service.ingest(du, pd)
+        return du
+
+    def submit_compute_unit(self, desc: ComputeUnitDescription) -> ComputeUnit:
+        cu = ComputeUnit(desc, self.ctx.store)
+        self.ctx.register(cu)
+        cu.timings.submitted = time.monotonic()
+        cu._set_state(CUState.PENDING)
+        with self._lock:
+            self._cus.append(cu)
+        # Asynchronous interface (§4.2): enqueue and return immediately.
+        self.ctx.store.push("cds:incoming", cu.id)
+        return cu
+
+    def compute_units(self) -> List[ComputeUnit]:
+        with self._lock:
+            return list(self._cus)
+
+    def data_units(self) -> List[DataUnit]:
+        with self._lock:
+            return list(self._dus)
+
+    # ----------------------------------------------------------- scheduling
+    def _choose_pd(self, desc: DataUnitDescription) -> Optional[PilotData]:
+        """Affinity-aware PD selection for a new DU."""
+        from .affinity import match_affinity
+
+        with self._lock:
+            pds = list(self._pds)
+        need = max(desc.size_hint, sum(map(len, desc.files.values())))
+        fits = [pd for pd in pds if pd.free_bytes >= need]
+        candidates = [
+            pd for pd in fits if match_affinity(desc.affinity, pd.affinity)
+        ]
+        if not candidates:
+            candidates = fits  # affinity miss: any PD with space
+        if not candidates:
+            return None  # nowhere fits — DU stays in its local buffer
+        # Prefer the emptiest (simple balance; the cost model handles the
+        # rest at CU-placement time).
+        return max(candidates, key=lambda pd: pd.free_bytes)
+
+    def _pilot_tq_estimate(self, pilot: PilotCompute) -> float:
+        """Expected wait before this pilot could start one more CU.
+
+        Uses the DECLARED per-CU simulated/estimated compute seconds of the
+        work already bound to the pilot (queued + running), so long tasks
+        spread out instead of piling onto the data-local pilot — the T_Q
+        side of the §6.1 trade-off."""
+        st = pilot.state
+        if st in PilotState.TERMINAL:
+            return float("inf")
+        tq = 0.0
+        if st == PilotState.PROVISIONING:
+            tq += pilot.description.queue_time_s
+
+        def cu_cost(cu_id: str) -> float:
+            try:
+                d = self.ctx.lookup(cu_id).description
+                return max(d.sim_compute_s, d.est_compute_s, self.avg_cu_estimate_s)
+            except KeyError:
+                return self.avg_cu_estimate_s
+
+        pending = [
+            item["cu"] if isinstance(item, dict) else item
+            for item in self.ctx.store.qpeek(pilot.queue_name)
+        ]
+        running = pilot.running_cus()
+        total = sum(cu_cost(c) for c in (*pending, *running))
+        free = pilot.slots - len(running) - len(pending)
+        if free <= 0:
+            tq += total / max(1, pilot.slots)
+        return max(tq, 0.0)
+
+    def _input_bytes_by_location(self, cu: ComputeUnit) -> Dict[str, int]:
+        """Cheapest-replica input footprint per location label."""
+        out: Dict[str, int] = {}
+        for du_id in cu.description.input_data:
+            du: DataUnit = self.ctx.lookup(du_id)
+            locs = du.locations
+            if not locs:
+                # not yet staged anywhere: counts as at the submission host
+                out["submission"] = out.get("submission", 0) + du.size
+                continue
+            # a replicated DU contributes at EACH replica location; the
+            # estimator in decide_placement sums cheapest per pilot — so we
+            # pre-reduce here: each DU contributes only its cheapest replica
+            # for each candidate pilot.  We keep per-location totals and let
+            # decide_placement handle the sum; to keep that exact we expose
+            # every replica location annotated with the DU size, and the
+            # pilot-wise reduction happens in _rank_pilots below.
+            for pd_id in locs:
+                pd: PilotData = self.ctx.lookup(pd_id)
+                out.setdefault(pd.affinity, 0)
+        return out
+
+    def _rank_pilots(self, cu: ComputeUnit):
+        """Rank pilots by T_Q + Σ_DU cheapest-replica T_X (the §6.1 score)."""
+        from .cost_model import cheapest_replica, estimate_tx
+
+        with self._lock:
+            pilots = [
+                p for p in self._pilots if p.state not in PilotState.TERMINAL
+            ]
+        from .affinity import match_affinity
+
+        constraint = cu.description.affinity
+        ranked = []
+        for p in pilots:
+            if constraint and not match_affinity(constraint, p.affinity):
+                continue
+            t_q = self._pilot_tq_estimate(p)
+            t_stage = 0.0
+            for du_id in cu.description.input_data:
+                du: DataUnit = self.ctx.lookup(du_id)
+                if p.sandbox.has_du(du.id):
+                    continue  # pilot-level cache hit
+                replica_labels = []
+                linked = False
+                for pd_id in du.locations:
+                    pd: PilotData = self.ctx.lookup(pd_id)
+                    if self.ctx.transfer_service.is_linkable(pd, p.affinity):
+                        linked = True
+                        break
+                    replica_labels.append(pd.affinity)
+                if linked:
+                    continue
+                if replica_labels:
+                    _, t = cheapest_replica(
+                        du.size, replica_labels, p.affinity, self.ctx.topology
+                    )
+                    t_stage += t
+                else:
+                    # ingest from submission host: backend-profile cost
+                    t_stage += self.ctx.transfer_service.simulated_ingest_time(
+                        du.size, p.sandbox
+                    )
+            strategy = (
+                "data-to-compute" if t_q >= t_stage else "compute-to-data"
+            )
+            ranked.append((t_q + t_stage, t_q, t_stage, strategy, p))
+        ranked.sort(key=lambda r: (r[0], r[4].id))
+        return ranked
+
+    def _has_free_slot(self, pilot: PilotCompute) -> bool:
+        depth = self.ctx.store.qlen(pilot.queue_name)
+        running = len(pilot.running_cus())
+        return pilot.state == PilotState.ACTIVE and (
+            running + depth < pilot.slots
+        )
+
+    def _place(self, cu: ComputeUnit) -> None:
+        """One pass of the §5 placement algorithm for one CU."""
+        desc = cu.description
+        if desc.pilot is not None:
+            # Application-level direct binding (§4.3.2 control level (i)).
+            pilot: PilotCompute = self.ctx.lookup(desc.pilot)
+            self._push_to_pilot(cu, pilot)
+            return
+        ranked = self._rank_pilots(cu)
+        if not ranked:
+            self.ctx.store.push(GLOBAL_QUEUE, {"cu": cu.id, "dup": False})
+            return
+        score, t_q, t_stage, strategy, best = ranked[0]
+        self._decisions.append(
+            {
+                "cu": cu.id,
+                "pilot": best.id,
+                "t_q": t_q,
+                "t_stage": t_stage,
+                "strategy": strategy,
+            }
+        )
+        # Step 2: same-affinity pilot with an empty slot → pilot queue.
+        if self._has_free_slot(best):
+            self._push_to_pilot(cu, best)
+            return
+        # Step 3: delayed scheduling — wait n sec, recheck.
+        if self.delayed_scheduling_s > 0:
+            self._delayed.append(
+                {
+                    "cu": cu,
+                    "pilot": best,
+                    "deadline": time.monotonic() + self.delayed_scheduling_s,
+                }
+            )
+            return
+        # Step 4: global queue — first pilot with a slot pulls it.
+        self.ctx.store.push(GLOBAL_QUEUE, {"cu": cu.id, "dup": False})
+
+    def _push_to_pilot(self, cu: ComputeUnit, pilot: PilotCompute) -> None:
+        if self.ctx.data_mode == "push":
+            # Push-mode data management (§4.2): the manager pre-stages the
+            # input DUs into the pilot sandbox before the CU is queued.
+            for du_id in cu.description.input_data:
+                du: DataUnit = self.ctx.lookup(du_id)
+                self.ctx.transfer_service.stage_in(
+                    du, pilot.sandbox, pilot.affinity
+                )
+        self.ctx.store.push(pilot.queue_name, {"cu": cu.id, "dup": False})
+
+    def _scheduler_loop(self) -> None:
+        store = self.ctx.store
+        while not self._stop.is_set():
+            try:
+                cu_id = store.pop("cds:incoming", timeout=0.02)
+            except Exception:
+                time.sleep(0.05)
+                continue
+            if cu_id is not None:
+                try:
+                    cu = self.ctx.lookup(cu_id)
+                    if cu.state == CUState.PENDING:
+                        self._place(cu)
+                except Exception:
+                    pass
+            # Re-check delayed CUs (step 3).
+            now = time.monotonic()
+            still: List[Dict] = []
+            for entry in self._delayed:
+                cu, pilot = entry["cu"], entry["pilot"]
+                if cu.state != CUState.PENDING:
+                    continue
+                if self._has_free_slot(pilot):
+                    self._push_to_pilot(cu, pilot)
+                elif now >= entry["deadline"]:
+                    store.push(GLOBAL_QUEUE, {"cu": cu.id, "dup": False})
+                else:
+                    still.append(entry)
+            self._delayed = still
+
+    # ------------------------------------------------------------- control
+    def decisions(self) -> List[Dict]:
+        return list(self._decisions)
+
+    def wait(self, timeout: float = 120.0) -> bool:
+        """Block until every submitted CU is terminal.  True on success."""
+        deadline = time.monotonic() + timeout
+        while time.monotonic() < deadline:
+            with self._lock:
+                cus = list(self._cus)
+            if all(c.state in CUState.TERMINAL for c in cus):
+                return True
+            time.sleep(0.01)
+        return False
+
+    def cancel(self) -> None:
+        self._stop.set()
+        self._thread.join(timeout=2.0)

@@ -1,0 +1,226 @@
+"""Transfer service: DU movement between Pilot-Data, with a virtual clock.
+
+Every physical transfer is costed against the topology (bottleneck bandwidth
+along the tree path) *and* the two backend profiles (a GridFTP-class backend
+moves bytes faster than an SSH-class one at equal topology distance — that
+is exactly the spread the paper measures in Fig. 7).  Real bytes move
+immediately (container-local); the *simulated* duration is recorded per
+transfer so benchmarks reproduce the paper's timing analysis
+deterministically.
+
+Co-location resolves to a **logical link** (§4.3.2: "In the best case, the
+Pilot-Data of the dependent DUs is co-located on the same resource as the
+CU, i.e. the data can be directly accessed via a logical filesystem link").
+A PD is visible to a pilot when the PD's affinity label is an ancestor of
+(or equal to) the pilot's location — e.g. a shared filesystem registered at
+the site level is linkable from every host in the site.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from typing import List, Optional, Tuple
+
+from .affinity import match_affinity
+from .cost_model import cheapest_replica
+from .data_unit import DataUnit
+from .pilot import PilotData, RuntimeContext
+
+
+@dataclasses.dataclass
+class TransferRecord:
+    du_id: str
+    src_pd: Optional[str]  # None == initial staging from the submission host
+    dst_pd: str
+    nbytes: int
+    sim_seconds: float
+    wall_seconds: float
+    linked: bool = False  # True == logical link, no bytes moved
+    t_submit_sim: float = 0.0
+
+
+class TransferService:
+    """Moves/links DUs between PDs and accounts simulated T_X/T_S/T_R."""
+
+    def __init__(self, ctx: RuntimeContext):
+        self.ctx = ctx
+        ctx.transfer_service = self
+        self._records: List[TransferRecord] = []
+        self._lock = threading.Lock()
+        self._sim_now = 0.0
+
+    # ------------------------------------------------------------- costing
+    def simulated_transfer_time(
+        self, nbytes: int, src: PilotData, dst: PilotData
+    ) -> float:
+        topo = self.ctx.topology
+        lat = (
+            topo.latency(src.affinity, dst.affinity)
+            + src.backend.profile.op_latency
+            + dst.backend.profile.op_latency
+        )
+        bw = min(
+            topo.bandwidth(src.affinity, dst.affinity),
+            src.backend.profile.bandwidth,
+            dst.backend.profile.bandwidth,
+        )
+        xfer = 0.0 if bw == float("inf") else nbytes / bw
+        return lat + xfer + dst.backend.profile.register_latency
+
+    def simulated_ingest_time(self, nbytes: int, dst: PilotData) -> float:
+        """Initial staging from the submission host into a PD (paper Fig. 7:
+        T_S per backend).  When the runtime declares a submission-host
+        topology label, the transfer is additionally bottlenecked by that
+        uplink (a gateway node's WAN link, like the paper's GW68)."""
+        p = dst.backend.profile
+        bw = p.bandwidth
+        lat = p.op_latency
+        sub = self.ctx.submission_label
+        if sub is not None:
+            bw = min(bw, self.ctx.topology.bandwidth(sub, dst.affinity))
+            lat += self.ctx.topology.latency(sub, dst.affinity)
+        return lat + nbytes / bw + p.register_latency
+
+    # ------------------------------------------------------------ mechanics
+    def is_linkable(self, pd: PilotData, location: str) -> bool:
+        """Can a pilot at ``location`` access ``pd`` without a transfer?"""
+        return match_affinity(pd.affinity, location) or pd.affinity == location
+
+    def record(self, rec: TransferRecord) -> None:
+        with self._lock:
+            self._records.append(rec)
+            self._sim_now += rec.sim_seconds
+
+    def records(self) -> List[TransferRecord]:
+        with self._lock:
+            return list(self._records)
+
+    def total_sim_seconds(self) -> float:
+        with self._lock:
+            return sum(r.sim_seconds for r in self._records)
+
+    def reset_records(self) -> None:
+        with self._lock:
+            self._records.clear()
+
+    def ingest(self, du: DataUnit, dst: PilotData) -> float:
+        """Initial staging of a freshly-described DU into its first PD."""
+        t0 = time.monotonic()
+        nbytes = dst.put_du(du)
+        sim = self.simulated_ingest_time(nbytes, dst)
+        self.ctx.sleep_sim(sim)
+        self.record(
+            TransferRecord(
+                du_id=du.id,
+                src_pd=None,
+                dst_pd=dst.id,
+                nbytes=nbytes,
+                sim_seconds=sim,
+                wall_seconds=time.monotonic() - t0,
+            )
+        )
+        return sim
+
+    def replicate(self, du: DataUnit, src: PilotData, dst: PilotData) -> float:
+        """Physically replicate a DU between two PDs; returns simulated T_X."""
+        t0 = time.monotonic()
+        nbytes = dst.copy_du_from(du, src)
+        sim = self.simulated_transfer_time(nbytes, src, dst)
+        self.ctx.sleep_sim(sim)
+        self.record(
+            TransferRecord(
+                du_id=du.id,
+                src_pd=src.id,
+                dst_pd=dst.id,
+                nbytes=nbytes,
+                sim_seconds=sim,
+                wall_seconds=time.monotonic() - t0,
+            )
+        )
+        return sim
+
+    # --------------------------------------------------------- staging API
+    def resolve_access(
+        self, du: DataUnit, location: str
+    ) -> Tuple[Optional[PilotData], bool]:
+        """Find the best replica of ``du`` for a pilot at ``location``.
+
+        Returns (pd, linked): ``linked`` means zero-cost direct access; else
+        ``pd`` is the cheapest replica to transfer from (None if the DU has
+        no replica anywhere — caller falls back to the DU's local buffer).
+        """
+        replicas = [
+            self.ctx.lookup(pd_id)
+            for pd_id in du.locations
+            if pd_id in self.ctx.objects
+        ]
+        for pd in replicas:
+            if self.is_linkable(pd, location):
+                return pd, True
+        if not replicas:
+            return None, False
+        by_label = {pd.affinity: pd for pd in replicas}
+        best_label, _ = cheapest_replica(
+            du.size, list(by_label), location, self.ctx.topology
+        )
+        return by_label[best_label], False
+
+    def stage_in(
+        self,
+        du: DataUnit,
+        sandbox: PilotData,
+        location: str,
+        use_cache: bool = True,
+    ) -> float:
+        """Make ``du`` available to a CU sandbox at ``location``; returns
+        simulated staging seconds (0.0 for a logical link).
+
+        ``use_cache=False`` models the paper's PD-less naive mode: every CU
+        re-stages into its own sandbox — the full transfer cost is charged
+        each time and the sandbox never becomes a replica."""
+        if not use_cache:
+            already = sandbox.has_du(du.id)
+            if du.locations:
+                pd, _ = self.resolve_access(du, location)
+                sim = self.simulated_transfer_time(du.size, pd, sandbox)
+                if not already:
+                    sandbox.copy_du_from(du, pd, register=False)
+            else:
+                sim = self.simulated_ingest_time(du.size, sandbox)
+                if not already:
+                    sandbox.put_du(du, register=False)
+            self.ctx.sleep_sim(sim)
+            self.record(
+                TransferRecord(
+                    du_id=du.id,
+                    src_pd=None,
+                    dst_pd=sandbox.id,
+                    nbytes=du.size,
+                    sim_seconds=sim,
+                    wall_seconds=0.0,
+                )
+            )
+            return sim
+        if sandbox.has_du(du.id):
+            return 0.0  # pilot-level cache hit (data-diffusion-style reuse)
+        pd, linked = self.resolve_access(du, location)
+        if linked:
+            self.record(
+                TransferRecord(
+                    du_id=du.id,
+                    src_pd=pd.id,
+                    dst_pd=sandbox.id,
+                    nbytes=0,
+                    sim_seconds=0.0,
+                    wall_seconds=0.0,
+                    linked=True,
+                )
+            )
+            return 0.0
+        if pd is not None:
+            return self.replicate(du, pd, sandbox)
+        # No replica yet: ingest straight from the DU's local buffer
+        # (submission-machine pull — the paper's "naive" scenarios 1-2).
+        return self.ingest(du, sandbox)

@@ -1,0 +1,17 @@
+from .pipeline import (
+    Prefetcher,
+    ShardReader,
+    decode_tokens,
+    encode_tokens,
+    make_token_shards,
+    shard_dus,
+)
+
+__all__ = [
+    "Prefetcher",
+    "ShardReader",
+    "decode_tokens",
+    "encode_tokens",
+    "make_token_shards",
+    "shard_dus",
+]

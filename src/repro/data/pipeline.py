@@ -1,0 +1,157 @@
+"""DU-based token data pipeline.
+
+Training data is organized exactly the way the paper's BWA workload was
+(§6.3): a large input partitioned into per-task Data-Units ("each task
+consumes a unique part of the data") plus a *shared* DU every task needs
+(the reference-genome analogue — here: tokenizer/eval artifacts).  Shards
+are serialized token arrays; the pipeline reads whichever replica is
+co-located with the executing pilot (via CUContext) and cuts fixed-shape
+next-token-prediction batches with a background prefetcher.
+"""
+
+from __future__ import annotations
+
+import io
+import queue
+import threading
+from typing import Dict, Iterator, List, Optional, Tuple
+
+import numpy as np
+
+from ..core import CoordinationStore, DataUnit, DataUnitDescription
+
+
+def encode_tokens(tokens: np.ndarray) -> bytes:
+    buf = io.BytesIO()
+    np.save(buf, tokens.astype(np.int32), allow_pickle=False)
+    return buf.getvalue()
+
+
+def decode_tokens(data: bytes) -> np.ndarray:
+    return np.load(io.BytesIO(data), allow_pickle=False)
+
+
+def make_token_shards(
+    n_shards: int,
+    tokens_per_shard: int,
+    vocab_size: int,
+    seed: int = 0,
+    files_per_shard: int = 4,
+) -> List[Dict[str, bytes]]:
+    """Synthetic corpus: ``n_shards`` shard file-sets (each a DU's files).
+
+    Tokens follow a Zipf-like unigram distribution (not uniform) so that a
+    few optimizer steps measurably reduce the loss — the e2e training tests
+    assert improvement, and uniform noise has nothing to learn."""
+    rng = np.random.default_rng(seed)
+    ranks = np.arange(1, vocab_size + 1, dtype=np.float64)
+    probs = 1.0 / (ranks + 5.0)
+    probs /= probs.sum()
+    shards = []
+    per_file = tokens_per_shard // files_per_shard
+    for s in range(n_shards):
+        files = {}
+        for f in range(files_per_shard):
+            toks = rng.choice(
+                vocab_size, size=per_file, p=probs
+            ).astype(np.int32)
+            files[f"tokens_{f:03d}.npy"] = encode_tokens(toks)
+        shards.append(files)
+    return shards
+
+
+def shard_dus(
+    shards: List[Dict[str, bytes]],
+    store: CoordinationStore,
+    name: str = "corpus",
+    affinities: Optional[List[Optional[str]]] = None,
+) -> List[DataUnit]:
+    """Wrap shard file-sets into Data-Units (partitioned-data pattern)."""
+    dus = []
+    for i, files in enumerate(shards):
+        aff = affinities[i % len(affinities)] if affinities else None
+        dus.append(
+            DataUnit(
+                DataUnitDescription(
+                    name=f"{name}.shard{i:03d}", files=files, affinity=aff
+                ),
+                store,
+            )
+        )
+    return dus
+
+
+class ShardReader:
+    """Cuts [batch, seq+1] windows from a shard's token stream (wrapping)."""
+
+    def __init__(self, files: Dict[str, bytes], seed: int = 0):
+        arrays = [decode_tokens(files[k]) for k in sorted(files)]
+        self.tokens = np.concatenate(arrays) if arrays else np.zeros(0, np.int32)
+        self.rng = np.random.default_rng(seed)
+
+    @classmethod
+    def from_cu_context(cls, cu_ctx, du_id: str, seed: int = 0) -> "ShardReader":
+        manifest = cu_ctx.input_manifest(du_id)
+        files = {rel: cu_ctx.read_input(du_id, rel) for rel in manifest}
+        return cls(files, seed=seed)
+
+    def batches(
+        self, batch: int, seq: int, start_step: int = 0
+    ) -> Iterator[Dict[str, np.ndarray]]:
+        n = len(self.tokens)
+        need = seq + 1
+        assert n >= need, f"shard too small: {n} < {need}"
+        step = start_step
+        while True:
+            starts = self.rng.integers(0, n - need, size=batch)
+            window = np.stack([self.tokens[s : s + need] for s in starts])
+            yield {
+                "tokens": window[:, :-1].astype(np.int32),
+                "labels": window[:, 1:].astype(np.int32),
+            }
+            step += 1
+
+
+class Prefetcher:
+    """Background-thread prefetch with bounded queue (overlaps host-side
+    batch prep with device compute)."""
+
+    _DONE = object()
+
+    def __init__(self, it: Iterator, depth: int = 2):
+        self._q: "queue.Queue" = queue.Queue(maxsize=depth)
+        self._err: Optional[BaseException] = None
+        self._stop = threading.Event()
+
+        def run():
+            try:
+                for item in it:
+                    if self._stop.is_set():
+                        return
+                    self._q.put(item)
+            except BaseException as e:  # noqa: BLE001
+                self._err = e
+            finally:
+                self._q.put(self._DONE)
+
+        self._thread = threading.Thread(target=run, daemon=True)
+        self._thread.start()
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        item = self._q.get()
+        if item is self._DONE:
+            if self._err is not None:
+                raise self._err
+            raise StopIteration
+        return item
+
+    def close(self):
+        self._stop.set()
+        try:
+            while True:
+                self._q.get_nowait()
+        except queue.Empty:
+            pass

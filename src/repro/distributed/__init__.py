@@ -1,0 +1,7 @@
+from .context import DistContext, constrain, current, distribution
+from .sharding_rules import batch_specs, cache_specs, opt_specs, param_specs
+
+__all__ = [
+    "DistContext", "constrain", "current", "distribution",
+    "batch_specs", "cache_specs", "opt_specs", "param_specs",
+]

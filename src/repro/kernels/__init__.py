@@ -1,0 +1,19 @@
+"""Pallas TPU kernels for the workload's compute hot-spots.
+
+Each kernel package ships three layers:
+  * ``<name>.py``   — ``pl.pallas_call`` + explicit BlockSpec VMEM tiling,
+  * ``ops.py``      — jit'd public wrapper (layout adaptation, padding,
+                      interpret-mode dispatch on CPU),
+  * ``ref.py``      — pure-jnp oracle; tests sweep shapes/dtypes and assert
+                      allclose.
+
+The paper itself (Pilot-Data) has no kernel-level contribution — these
+kernels make the *workload being scheduled* production-grade (DESIGN.md §2).
+"""
+
+from .decode_attention import decode_attention
+from .flash_attention import flash_attention
+from .rmsnorm import rmsnorm
+from .ssd_scan import ssd
+
+__all__ = ["decode_attention", "flash_attention", "rmsnorm", "ssd"]

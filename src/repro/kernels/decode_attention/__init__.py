@@ -1,0 +1,5 @@
+from . import ops, ref
+from .decode_attention import decode_attention_fwd
+from .ops import decode_attention
+
+__all__ = ["decode_attention", "decode_attention_fwd", "ops", "ref"]

@@ -1,0 +1,60 @@
+"""Jit'd wrapper for decode attention (model layout adaptation + padding)."""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .decode_attention import decode_attention_fwd
+
+
+@functools.partial(
+    jax.jit, static_argnames=("window", "block_k", "interpret")
+)
+def decode_attention(
+    q: jnp.ndarray,  # [B, 1, Hq, D] (model layout, single step)
+    k_cache: jnp.ndarray,  # [B, Sk, Hkv, D]
+    v_cache: jnp.ndarray,
+    positions: jnp.ndarray,  # [B] int32 current positions
+    *,
+    window: Optional[int] = None,
+    block_k: int = 256,
+    interpret: Optional[bool] = None,
+) -> jnp.ndarray:
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    b, one, hq, d = q.shape
+    assert one == 1
+    sk = k_cache.shape[1]
+    sm_scale = d**-0.5
+    dpad = (-d) % 128
+    spad = (-sk) % block_k
+
+    def pad(x, dp, sp, s_axis):
+        widths = [(0, 0)] * x.ndim
+        widths[-1] = (0, dp)
+        widths[s_axis] = widths[s_axis][0], widths[s_axis][1] + 0
+        if sp:
+            w = list(widths)
+            w[s_axis] = (0, sp)
+            w[-1] = (0, dp)
+            return jnp.pad(x, w)
+        return jnp.pad(x, widths) if dp else x
+
+    qt = pad(q[:, 0].astype(q.dtype), dpad, 0, 1)  # [B, Hq, D+]
+    kt = pad(k_cache.transpose(0, 2, 1, 3), dpad, spad, 2)  # [B,Hkv,Sk+,D+]
+    vt = pad(v_cache.transpose(0, 2, 1, 3), dpad, spad, 2)
+    out = decode_attention_fwd(
+        qt,
+        kt,
+        vt,
+        positions,
+        window=window,
+        sm_scale=sm_scale,
+        block_k=block_k,
+        interpret=interpret,
+    )
+    return out[:, None, :, :d]

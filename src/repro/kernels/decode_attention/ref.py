@@ -1,0 +1,35 @@
+"""Pure-jnp oracle for decode attention."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -2.0**30
+
+
+def decode_attention_ref(
+    q: jnp.ndarray,  # [B, Hq, D]
+    k: jnp.ndarray,  # [B, Hkv, Sk, D]
+    v: jnp.ndarray,
+    positions: jnp.ndarray,  # [B] int32
+    *,
+    window: Optional[int] = None,
+    sm_scale: Optional[float] = None,
+) -> jnp.ndarray:
+    b, hq, d = q.shape
+    _, hkv, sk, _ = k.shape
+    g = hq // hkv
+    scale = sm_scale if sm_scale is not None else d**-0.5
+    qf = q.astype(jnp.float32).reshape(b, hkv, g, d)
+    s = jnp.einsum("bhgd,bhkd->bhgk", qf, k.astype(jnp.float32)) * scale
+    k_pos = jnp.arange(sk)[None, :]
+    mask = k_pos <= positions[:, None]
+    if window is not None:
+        mask &= k_pos > positions[:, None] - window
+    s = jnp.where(mask[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgk,bhkd->bhgd", p, v.astype(jnp.float32))
+    return o.reshape(b, hq, d).astype(q.dtype)

@@ -1,0 +1,151 @@
+"""Flash-attention Pallas TPU kernel (prefill): blocked online-softmax GQA
+attention with causal and sliding-window masking.
+
+TPU adaptation notes (vs. the CUDA flash-attention formulation):
+  * blocks are sized for VMEM and MXU alignment — (block_q × head_dim) and
+    (block_k × head_dim) tiles with head_dim padded to a multiple of 128 by
+    the wrapper, block sizes multiples of the 8×128 VPU lane layout;
+  * the grid is (batch, q_heads, q_blocks, k_blocks) with the K dimension
+    innermost: TPU Pallas iterates the grid sequentially per core, so the
+    online-softmax running state (m, l, acc) lives in VMEM scratch that
+    persists across the k_block loop — no atomics, no shared-memory
+    reductions as on GPU;
+  * GQA is expressed through the BlockSpec index_map (q head h reads kv head
+    h // group), so no materialized head replication.
+
+Numerics: fp32 running max/denominator/accumulator regardless of input
+dtype; output cast back to the query dtype.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -2.0**30
+
+
+def _attn_kernel(
+    q_ref,  # [1, 1, bq, D]
+    k_ref,  # [1, 1, bk, D]
+    v_ref,  # [1, 1, bk, D]
+    o_ref,  # [1, 1, bq, D]
+    m_scr,  # VMEM [bq, 1] fp32
+    l_scr,  # VMEM [bq, 1] fp32
+    acc_scr,  # VMEM [bq, D] fp32
+    *,
+    scale: float,
+    causal: bool,
+    window: Optional[int],
+    block_q: int,
+    block_k: int,
+    seq_q: int,
+    seq_k: int,
+    num_k_blocks: int,
+):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32)  # [bq, D]
+    k = k_ref[0, 0].astype(jnp.float32)  # [bk, D]
+    v = v_ref[0, 0].astype(jnp.float32)
+
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale  # [bq, bk]
+
+    q_pos = iq * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+    k_pos = ik * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+    mask = (q_pos < seq_q) & (k_pos < seq_k)
+    if causal:
+        mask &= q_pos >= k_pos
+    if window is not None:
+        mask &= (q_pos - k_pos) < window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scr[...]  # [bq, 1]
+    m_cur = jnp.max(s, axis=1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new)  # [bq, bk]
+    l_scr[...] = alpha * l_scr[...] + jnp.sum(p, axis=1, keepdims=True)
+    acc_scr[...] = alpha * acc_scr[...] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    m_scr[...] = m_new
+
+    @pl.when(ik == num_k_blocks - 1)
+    def _finish():
+        denom = jnp.maximum(l_scr[...], 1e-30)  # fully-masked rows stay 0
+        o_ref[0, 0] = (acc_scr[...] / denom).astype(o_ref.dtype)
+
+
+def flash_attention_fwd(
+    q: jnp.ndarray,  # [B, Hq, Sq, D]  (D multiple of 128, S multiples of blocks)
+    k: jnp.ndarray,  # [B, Hkv, Sk, D]
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    seq_q: Optional[int] = None,
+    seq_k: Optional[int] = None,
+    sm_scale: Optional[float] = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    b, hq, sq, d = q.shape
+    _, hkv, sk, _ = k.shape
+    assert hq % hkv == 0, (hq, hkv)
+    g = hq // hkv
+    assert sq % block_q == 0 and sk % block_k == 0, (sq, sk, block_q, block_k)
+    seq_q = seq_q if seq_q is not None else sq
+    seq_k = seq_k if seq_k is not None else sk
+    nq, nk = sq // block_q, sk // block_k
+    grid = (b, hq, nq, nk)
+
+    kernel = functools.partial(
+        _attn_kernel,
+        scale=sm_scale if sm_scale is not None else d**-0.5,
+        causal=causal,
+        window=window,
+        block_q=block_q,
+        block_k=block_k,
+        seq_q=seq_q,
+        seq_k=seq_k,
+        num_k_blocks=nk,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, d), lambda b_, h, iq, ik: (b_, h, iq, 0)),
+            pl.BlockSpec(
+                (1, 1, block_k, d), lambda b_, h, iq, ik, g_=g: (b_, h // g_, ik, 0)
+            ),
+            pl.BlockSpec(
+                (1, 1, block_k, d), lambda b_, h, iq, ik, g_=g: (b_, h // g_, ik, 0)
+            ),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, 1, block_q, d), lambda b_, h, iq, ik: (b_, h, iq, 0)
+        ),
+        out_shape=jax.ShapeDtypeStruct((b, hq, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,66 @@
+"""Jit'd public wrapper: layout adaptation, padding, backend dispatch.
+
+Model code passes [B, S, H, D] activations; the kernel wants [B, H, S, D]
+with D padded to a 128 multiple and S padded to block multiples (masked via
+seq_q/seq_k).  On CPU the kernel body runs in interpret mode (correctness
+validation); on TPU it compiles to Mosaic.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .flash_attention import flash_attention_fwd
+
+
+def _pad_to(x: jnp.ndarray, axis: int, mult: int) -> jnp.ndarray:
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "block_q", "block_k", "interpret"),
+)
+def flash_attention(
+    q: jnp.ndarray,  # [B, Sq, Hq, D] (model layout)
+    k: jnp.ndarray,  # [B, Sk, Hkv, D]
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: Optional[bool] = None,
+) -> jnp.ndarray:
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    b, sq, hq, d = q.shape
+    sk = k.shape[1]
+    sm_scale = d**-0.5
+    qt = _pad_to(_pad_to(q.transpose(0, 2, 1, 3), 3, 128), 2, block_q)
+    kt = _pad_to(_pad_to(k.transpose(0, 2, 1, 3), 3, 128), 2, block_k)
+    vt = _pad_to(_pad_to(v.transpose(0, 2, 1, 3), 3, 128), 2, block_k)
+    out = flash_attention_fwd(
+        qt,
+        kt,
+        vt,
+        causal=causal,
+        window=window,
+        seq_q=sq,
+        seq_k=sk,
+        sm_scale=sm_scale,
+        block_q=block_q,
+        block_k=block_k,
+        interpret=interpret,
+    )
+    return out[:, :, :sq, :d].transpose(0, 2, 1, 3)

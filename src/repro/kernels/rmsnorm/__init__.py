@@ -1,0 +1,5 @@
+from . import ops, ref
+from .ops import rmsnorm
+from .rmsnorm import rmsnorm_fwd
+
+__all__ = ["rmsnorm", "rmsnorm_fwd", "ops", "ref"]

@@ -1,0 +1,45 @@
+"""Jit'd wrapper for the fused RMSNorm kernel."""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+
+from .rmsnorm import rmsnorm_fwd
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "block_rows", "interpret"))
+def rmsnorm(
+    x: jnp.ndarray,  # [..., D]
+    w: jnp.ndarray,  # [D]
+    *,
+    eps: float = 1e-6,
+    residual: Optional[jnp.ndarray] = None,
+    block_rows: int = 256,
+    interpret: Optional[bool] = None,
+) -> Union[jnp.ndarray, Tuple[jnp.ndarray, jnp.ndarray]]:
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    shape = x.shape
+    d = shape[-1]
+    r = 1
+    for s in shape[:-1]:
+        r *= s
+    br = min(block_rows, r)
+    while r % br:
+        br //= 2
+    br = max(br, 1)
+    x2 = x.reshape(r, d)
+    if residual is None:
+        out = rmsnorm_fwd(
+            x2, w, eps=eps, block_rows=br, interpret=interpret
+        )
+        return out.reshape(shape)
+    r2 = residual.reshape(r, d)
+    out, res = rmsnorm_fwd(
+        x2, w, eps=eps, residual=r2, block_rows=br, interpret=interpret
+    )
+    return out.reshape(shape), res.reshape(shape)

@@ -1,0 +1,25 @@
+"""Oracle: the model zoo's rms_norm is the reference."""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def rmsnorm_ref(
+    x: jnp.ndarray, w: jnp.ndarray, eps: float = 1e-6
+) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * (1.0 + w.astype(jnp.float32))).astype(
+        x.dtype
+    )
+
+
+def rmsnorm_residual_ref(
+    x: jnp.ndarray, residual: jnp.ndarray, w: jnp.ndarray, eps: float = 1e-6
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    s = (x.astype(jnp.float32) + residual.astype(jnp.float32)).astype(x.dtype)
+    return rmsnorm_ref(s, w, eps), s

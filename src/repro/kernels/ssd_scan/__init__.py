@@ -1,0 +1,5 @@
+from . import ops, ref
+from .ops import ssd
+from .ssd_scan import ssd_scan_fwd
+
+__all__ = ["ssd", "ssd_scan_fwd", "ops", "ref"]

@@ -1,0 +1,5 @@
+"""Oracle: the pure-jnp chunked SSD from the model zoo is the reference."""
+
+from repro.models.mamba2 import segsum, ssd_chunked  # noqa: F401
+
+__all__ = ["ssd_chunked", "segsum"]

@@ -1,0 +1,124 @@
+"""Mamba2 SSD (state-space duality) Pallas TPU kernel.
+
+The SSD computation per (batch, head) is: within a chunk of length Q, a
+decay-masked quadratic form (MXU-friendly — this is the "duality" with
+attention); across chunks, a linear state recurrence.
+
+TPU mapping:
+  * grid = (B, H, n_chunks) with the chunk dimension innermost; TPU Pallas
+    executes the grid sequentially per core, so the running state [P, N]
+    lives in VMEM scratch and is carried across chunk steps — the
+    recurrence costs no HBM traffic at all (on GPU this is a separate
+    inter-block scan kernel);
+  * each chunk step loads x[Q,P], dA[Q], B[Q,N], C[Q,N] into VMEM, runs
+    three MXU matmuls (C·Bᵀ, (L∘S)·X, B̃ᵀ·X) and one state update;
+  * everything accumulates in fp32.
+
+The wrapper in ops.py reshapes the model's [B, S, H, ...] layout into the
+kernel's head-major chunked layout and pads N/P to lane multiples.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(
+    x_ref,  # [1, 1, 1, Q, P]
+    da_ref,  # [1, 1, 1, Q]
+    b_ref,  # [1, 1, 1, Q, N]
+    c_ref,  # [1, 1, 1, Q, N]
+    y_ref,  # [1, 1, 1, Q, P]
+    state_out_ref,  # [1, 1, P, N] — final state per (b, h)
+    state_scr,  # VMEM [P, N] fp32
+    *,
+    chunk: int,
+    num_chunks: int,
+):
+    ic = pl.program_id(2)
+
+    @pl.when(ic == 0)
+    def _init():
+        state_scr[...] = jnp.zeros_like(state_scr)
+
+    x = x_ref[0, 0, 0].astype(jnp.float32)  # [Q, P]
+    da = da_ref[0, 0, 0].astype(jnp.float32)  # [Q]
+    b = b_ref[0, 0, 0].astype(jnp.float32)  # [Q, N]
+    c = c_ref[0, 0, 0].astype(jnp.float32)  # [Q, N]
+
+    cum = jnp.cumsum(da)  # [Q]
+    # decay matrix L[i,j] = exp(cum_i - cum_j) for i >= j else 0
+    li = cum[:, None] - cum[None, :]
+    tri = (
+        jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+        >= jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    )
+    L = jnp.where(tri, jnp.exp(li), 0.0)
+    # intra-chunk: y_diag = (C Bᵀ ∘ L) X
+    scores = (
+        jax.lax.dot_general(
+            c, b, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        * L
+    )  # [Q, Q]
+    y = jax.lax.dot_general(
+        scores, x, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )  # [Q, P]
+    # carried-in state: y_off = (C state^T) ∘ exp(cum)
+    state = state_scr[...]  # [P, N]
+    y_off = jax.lax.dot_general(
+        c, state, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )  # [Q, P]
+    y = y + y_off * jnp.exp(cum)[:, None]
+    y_ref[0, 0, 0] = y.astype(y_ref.dtype)
+    # state update: state' = state * exp(cum_last) + Σ_q exp(cum_last-cum_q) x_q ⊗ b_q
+    decay_states = jnp.exp(cum[-1] - cum)  # [Q]
+    xw = x * decay_states[:, None]  # [Q, P]
+    chunk_state = jax.lax.dot_general(
+        xw, b, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )  # [P, N]
+    new_state = state * jnp.exp(cum[-1]) + chunk_state
+    state_scr[...] = new_state
+
+    @pl.when(ic == num_chunks - 1)
+    def _finish():
+        state_out_ref[0, 0] = new_state
+
+
+def ssd_scan_fwd(
+    x: jnp.ndarray,  # [B, H, C, Q, P] (dt-weighted inputs)
+    da: jnp.ndarray,  # [B, H, C, Q]   (dt * A)
+    b: jnp.ndarray,  # [B, H, C, Q, N]
+    c: jnp.ndarray,  # [B, H, C, Q, N]
+    *,
+    interpret: bool = False,
+):
+    bsz, h, nc, q, p = x.shape
+    n = b.shape[-1]
+    grid = (bsz, h, nc)
+    kernel = functools.partial(_ssd_kernel, chunk=q, num_chunks=nc)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, q, p), lambda i, j, k_: (i, j, k_, 0, 0)),
+            pl.BlockSpec((1, 1, 1, q), lambda i, j, k_: (i, j, k_, 0)),
+            pl.BlockSpec((1, 1, 1, q, n), lambda i, j, k_: (i, j, k_, 0, 0)),
+            pl.BlockSpec((1, 1, 1, q, n), lambda i, j, k_: (i, j, k_, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, 1, q, p), lambda i, j, k_: (i, j, k_, 0, 0)),
+            pl.BlockSpec((1, 1, p, n), lambda i, j, k_: (i, j, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bsz, h, nc, q, p), x.dtype),
+            jax.ShapeDtypeStruct((bsz, h, p, n), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((p, n), jnp.float32)],
+        interpret=interpret,
+    )(x, da, b, c)

@@ -1,0 +1,9 @@
+"""Launchers: mesh construction, multi-pod dry-run, roofline, train/serve
+drivers.  NOTE: dryrun must be run as a module entry point (it sets
+XLA_FLAGS before importing jax); importing it from an already-initialized
+process will not re-seat the device count.
+"""
+
+from .mesh import make_debug_mesh, make_production_mesh, mesh_batch_axes
+
+__all__ = ["make_debug_mesh", "make_production_mesh", "mesh_batch_axes"]

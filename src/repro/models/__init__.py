@@ -1,0 +1,3 @@
+from .registry import ModelApi, build_model, make_fake_batch
+
+__all__ = ["ModelApi", "build_model", "make_fake_batch"]

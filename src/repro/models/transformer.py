@@ -1,0 +1,415 @@
+"""Generic pattern-based LM covering the dense / moe / hybrid / ssm / vlm
+families.
+
+Depth is organized as ``n_groups`` repetitions of ``cfg.pattern`` (plus an
+unrolled tail when depth % pattern ≠ 0) and executed with ``lax.scan`` over
+stacked per-group parameters — one pattern body in the HLO regardless of
+depth, which keeps 512-device SPMD compiles tractable and is also what makes
+per-layer remat policies cheap.
+
+"shared_attn" blocks (zamba2) use ONE parameter set closed over by the scan
+body — the weights are shared across occurrences while each occurrence keeps
+its own KV cache slice.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from .attention import attention_block, init_attention, init_kv_cache
+from .layers import (
+    chunked_cross_entropy,
+    dt,
+    embed,
+    init_embedding,
+    init_mlp,
+    init_rmsnorm,
+    mlp,
+    rms_norm,
+    softmax_cross_entropy,
+    unembed,
+)
+from .mamba2 import (
+    init_mamba_block,
+    init_mamba_cache,
+    mamba_block,
+    mamba_decode_step,
+    mamba_dims,
+)
+from .moe import init_moe, moe_mlp_ep, moe_mlp_local
+
+ATTN_KINDS = ("attn", "global", "swa", "moe", "swa_moe", "shared_attn")
+
+
+def _kind_window(kind: str, cfg: ModelConfig) -> Optional[int]:
+    return cfg.sliding_window if kind in ("swa", "swa_moe") else None
+
+
+def _kind_theta(kind: str, cfg: ModelConfig) -> float:
+    if kind in ("swa", "swa_moe") and cfg.rope_theta_local:
+        return cfg.rope_theta_local
+    return cfg.rope_theta
+
+
+# ------------------------------------------------------------------- init
+def init_block(rng, kind: str, cfg: ModelConfig, ep: int = 1) -> Dict:
+    ks = jax.random.split(rng, 4)
+    pdt = dt(cfg.param_dtype)
+    if kind == "mamba":
+        return {
+            "ln1": init_rmsnorm(cfg.d_model, pdt),
+            "mamba": init_mamba_block(ks[0], cfg),
+        }
+    block = {
+        "ln1": init_rmsnorm(cfg.d_model, pdt),
+        "attn": init_attention(ks[0], cfg),
+        "ln2": init_rmsnorm(cfg.d_model, pdt),
+    }
+    if kind in ("moe", "swa_moe"):
+        block["moe"] = init_moe(ks[1], cfg, ep=ep)
+    else:
+        block["mlp"] = init_mlp(ks[1], cfg)
+    return block
+
+
+def init_lm(rng, cfg: ModelConfig, ep: int = 1) -> Dict:
+    pat = cfg.pattern
+    g = cfg.n_layers // len(pat)
+    tail_kinds = cfg.layer_kinds()[g * len(pat) :]
+    params: Dict[str, Any] = {
+        "embed": init_embedding(jax.random.fold_in(rng, 0), cfg),
+        "final_norm": init_rmsnorm(cfg.d_model, dt(cfg.param_dtype)),
+    }
+    if g > 0:
+        groups = {}
+        for i, kind in enumerate(pat):
+            if kind == "shared_attn":
+                continue  # lives in params["shared"], not per-group
+            keys = jax.random.split(jax.random.fold_in(rng, 100 + i), g)
+            groups[f"pos{i}"] = jax.vmap(
+                lambda k, kd=kind: init_block(k, kd, cfg, ep)
+            )(keys)
+        params["groups"] = groups
+    if "shared_attn" in pat:
+        params["shared"] = init_block(
+            jax.random.fold_in(rng, 999), "shared_attn", cfg, ep
+        )
+    if tail_kinds:
+        params["tail"] = {
+            f"pos{i}": init_block(
+                jax.random.fold_in(rng, 200 + i), kind, cfg, ep
+            )
+            for i, kind in enumerate(tail_kinds)
+        }
+    return params
+
+
+# ----------------------------------------------------------------- blocks
+def apply_block(
+    kind: str,
+    bp: Dict,
+    x: jnp.ndarray,
+    positions: jnp.ndarray,
+    cfg: ModelConfig,
+    shared: Optional[Dict] = None,
+    impl: str = "ref",
+    ep_axis: Optional[str] = None,
+    cache: Optional[Dict] = None,
+    cache_index: Optional[jnp.ndarray] = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray, Optional[Dict]]:
+    """One block; returns (x, aux_loss, new_cache_slice)."""
+    aux = jnp.zeros((), dtype=jnp.float32)
+    if kind == "shared_attn":
+        bp = shared
+    if kind == "mamba":
+        h = rms_norm(x, bp["ln1"], cfg.norm_eps)
+        if cache is not None:
+            out, new_state = mamba_decode_step(bp["mamba"], h, cache, cfg)
+            return x + out, aux, new_state
+        out, _ = mamba_block(bp["mamba"], h, cfg, impl=impl)
+        return x + out, aux, None
+
+    window = _kind_window(kind, cfg)
+    theta = _kind_theta(kind, cfg)
+    h = rms_norm(x, bp["ln1"], cfg.norm_eps)
+    attn_out, new_cache = attention_block(
+        bp["attn"],
+        h,
+        positions,
+        cfg,
+        causal=True,
+        window=window,
+        rope_theta=theta,
+        cache=cache,
+        cache_index=cache_index,
+        impl=impl,
+    )
+    x = x + attn_out
+    h = rms_norm(x, bp["ln2"], cfg.norm_eps)
+    if kind in ("moe", "swa_moe"):
+        from ..distributed.moe_parallel import moe_maybe_parallel
+
+        ff, aux = moe_maybe_parallel(bp["moe"], h, cfg)
+    else:
+        ff = mlp(h, bp["mlp"], cfg)
+    return x + ff, aux, new_cache
+
+
+def _apply_pattern(
+    x: jnp.ndarray,
+    gp: Dict,
+    kinds: Tuple[str, ...],
+    positions: jnp.ndarray,
+    cfg: ModelConfig,
+    shared: Optional[Dict],
+    impl: str,
+    ep_axis: Optional[str],
+    caches: Optional[Dict] = None,
+    cache_index: Optional[jnp.ndarray] = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray, Optional[Dict]]:
+    aux = jnp.zeros((), dtype=jnp.float32)
+    new_caches = {} if caches is not None else None
+    for i, kind in enumerate(kinds):
+        bp = gp.get(f"pos{i}") if kind != "shared_attn" else None
+        cache_i = caches.get(f"pos{i}") if caches is not None else None
+        x, a, nc = apply_block(
+            kind,
+            bp,
+            x,
+            positions,
+            cfg,
+            shared=shared,
+            impl=impl,
+            ep_axis=ep_axis,
+            cache=cache_i,
+            cache_index=cache_index,
+        )
+        aux = aux + a
+        if new_caches is not None:
+            new_caches[f"pos{i}"] = nc
+    return x, aux, new_caches
+
+
+# ---------------------------------------------------------------- forward
+def forward(
+    params: Dict,
+    tokens: jnp.ndarray,  # [B, S_text]
+    cfg: ModelConfig,
+    prefix_embeds: Optional[jnp.ndarray] = None,  # [B, P, d] (vlm stub)
+    impl: str = "ref",
+    ep_axis: Optional[str] = None,
+    remat: bool = False,
+    last_only: bool = False,
+    return_hidden: bool = False,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Teacher-forced forward; returns (logits [B, S_total, V], aux).
+
+    ``last_only`` (prefill): unembed only the final position — avoids
+    materializing [B, S, V] logits when only the next token matters.
+    ``return_hidden``: skip unembedding, return the final-norm hidden
+    states (the chunked-CE loss unembeds per chunk itself)."""
+    from ..distributed.context import constrain
+
+    x = embed(tokens, params["embed"], cfg)
+    if prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(x.dtype), x], axis=1)
+    x = constrain(x, "residual")
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    pat = cfg.pattern
+    g = cfg.n_layers // len(pat)
+    shared = params.get("shared")
+    aux_total = jnp.zeros((), dtype=jnp.float32)
+
+    if g > 0:
+        def body(carry, gp):
+            x, aux = carry
+            x, a, _ = _apply_pattern(
+                x, gp, pat, positions, cfg, shared, impl, ep_axis
+            )
+            return (constrain(x, "residual"), aux + a), None
+
+        if remat:
+            body = jax.checkpoint(
+                body, policy=jax.checkpoint_policies.nothing_saveable
+            )
+        (x, aux_total), _ = jax.lax.scan(body, (x, aux_total), params["groups"])
+
+    tail_kinds = cfg.layer_kinds()[g * len(pat) :]
+    if tail_kinds:
+        x, a, _ = _apply_pattern(
+            x, params["tail"], tuple(tail_kinds), positions, cfg, shared, impl, ep_axis
+        )
+        aux_total = aux_total + a
+
+    if last_only:
+        x = x[:, -1:, :]
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    if return_hidden:
+        return x, aux_total
+    logits = constrain(unembed(x, params["embed"], cfg), "logits")
+    return logits, aux_total
+
+
+def loss_fn(
+    params: Dict,
+    batch: Dict[str, jnp.ndarray],
+    cfg: ModelConfig,
+    impl: str = "ref",
+    ep_axis: Optional[str] = None,
+    remat: bool = True,
+    ce_chunk: int = 512,
+) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """Next-token CE + MoE aux; batch: tokens/labels [B, S] (+ optional
+    prefix_embeds, loss_mask).
+
+    The CE is computed CHUNKED over the sequence (never materializing
+    [B, S, V] logits) — with V up to 262k this is the difference between
+    fitting HBM and not (EXPERIMENTS.md §Perf)."""
+    hidden, aux = forward(
+        params,
+        batch["tokens"],
+        cfg,
+        prefix_embeds=batch.get("prefix_embeds"),
+        impl=impl,
+        ep_axis=ep_axis,
+        remat=remat,
+        return_hidden=True,
+    )
+    labels = batch["labels"]
+    if hidden.shape[1] != labels.shape[1]:  # vlm: loss only on text positions
+        hidden = hidden[:, hidden.shape[1] - labels.shape[1] :]
+    ce = chunked_cross_entropy(
+        hidden, params["embed"], cfg, labels, batch.get("loss_mask"), ce_chunk
+    )
+    coef = cfg.moe.router_aux_coef if cfg.moe is not None else 0.0
+    loss = ce + coef * aux
+    return loss, {"ce": ce, "aux": aux, "loss": loss}
+
+
+# ----------------------------------------------------------------- decode
+def _init_block_cache(
+    kind: str, cfg: ModelConfig, batch: int, max_len: int
+) -> Dict:
+    if kind == "mamba":
+        dims = mamba_dims(cfg)
+        gn2 = 2 * dims["n_groups"] * dims["d_state"]
+        return {
+            "ssm": jnp.zeros(
+                (batch, dims["n_heads"], dims["head_dim"], dims["d_state"]),
+                dtype=jnp.float32,
+            ),
+            "conv_x": jnp.zeros(
+                (batch, dims["conv_width"] - 1, dims["d_inner"]),
+                dtype=jnp.float32,
+            ),
+            "conv_bc": jnp.zeros(
+                (batch, dims["conv_width"] - 1, gn2), dtype=jnp.float32
+            ),
+        }
+    cdt = dt(cfg.compute_dtype)
+    # SWA blocks never attend beyond their window → ring buffer of window
+    # length (5/6 of gemma3's layers: 32k → 1k cache rows)
+    length = max_len
+    if kind in ("swa", "swa_moe"):
+        length = min(max_len, cfg.sliding_window)
+    shape = (batch, length, cfg.n_kv_heads, cfg.head_dim_)
+    if cfg.kv_cache_dtype == "int8":
+        sshape = (batch, length, cfg.n_kv_heads)
+        return {
+            "k": jnp.zeros(shape, dtype=jnp.int8),
+            "v": jnp.zeros(shape, dtype=jnp.int8),
+            "k_scale": jnp.zeros(sshape, dtype=jnp.float32),
+            "v_scale": jnp.zeros(sshape, dtype=jnp.float32),
+        }
+    return {"k": jnp.zeros(shape, dtype=cdt), "v": jnp.zeros(shape, dtype=cdt)}
+
+
+def init_lm_cache(cfg: ModelConfig, batch: int, max_len: int) -> Dict:
+    pat = cfg.pattern
+    g = cfg.n_layers // len(pat)
+    cache: Dict[str, Any] = {}
+    if g > 0:
+        groups = {}
+        for i, kind in enumerate(pat):
+            one = _init_block_cache(kind, cfg, batch, max_len)
+            groups[f"pos{i}"] = jax.tree.map(
+                lambda l: jnp.broadcast_to(l[None], (g, *l.shape)).copy(), one
+            )
+        cache["groups"] = groups
+    tail_kinds = cfg.layer_kinds()[g * len(pat) :]
+    if tail_kinds:
+        cache["tail"] = {
+            f"pos{i}": _init_block_cache(kind, cfg, batch, max_len)
+            for i, kind in enumerate(tail_kinds)
+        }
+    return cache
+
+
+def decode_step(
+    params: Dict,
+    cache: Dict,
+    tokens: jnp.ndarray,  # [B, 1]
+    pos_index: jnp.ndarray,  # scalar int32: write position in the cache
+    cfg: ModelConfig,
+    impl: str = "ref",
+    ep_axis: Optional[str] = None,
+) -> Tuple[jnp.ndarray, Dict]:
+    """One-token decode against a KV/SSM cache; returns (logits [B,1,V],
+    new cache)."""
+    x = embed(tokens, params["embed"], cfg)
+    b = x.shape[0]
+    positions = jnp.broadcast_to(
+        pos_index.astype(jnp.int32)[None, None], (b, 1)
+    )
+    pat = cfg.pattern
+    g = cfg.n_layers // len(pat)
+    shared = params.get("shared")
+    new_cache: Dict[str, Any] = {}
+
+    if g > 0:
+        def body(x, xs):
+            gp, gc = xs
+            x, _, nc = _apply_pattern(
+                x,
+                gp,
+                pat,
+                positions,
+                cfg,
+                shared,
+                impl,
+                ep_axis,
+                caches=gc,
+                cache_index=pos_index,
+            )
+            return x, nc
+
+        x, new_groups = jax.lax.scan(
+            body, x, (params["groups"], cache["groups"])
+        )
+        new_cache["groups"] = new_groups
+
+    tail_kinds = cfg.layer_kinds()[g * len(pat) :]
+    if tail_kinds:
+        x, _, nt = _apply_pattern(
+            x,
+            params.get("tail", {}),
+            tuple(tail_kinds),
+            positions,
+            cfg,
+            shared,
+            impl,
+            ep_axis,
+            caches=cache["tail"],
+            cache_index=pos_index,
+        )
+        new_cache["tail"] = nt
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = unembed(x, params["embed"], cfg)
+    return logits, new_cache

@@ -1,0 +1,29 @@
+from .adamw import (
+    AdamWConfig,
+    adamw_update,
+    clip_by_global_norm,
+    global_norm,
+    init_adamw,
+)
+from .compression import (
+    compress_tree_psum,
+    compressed_psum,
+    dequantize_int8,
+    quantize_int8,
+)
+from .schedules import constant, linear_decay, warmup_cosine
+
+__all__ = [
+    "AdamWConfig",
+    "adamw_update",
+    "clip_by_global_norm",
+    "global_norm",
+    "init_adamw",
+    "compress_tree_psum",
+    "compressed_psum",
+    "dequantize_int8",
+    "quantize_int8",
+    "constant",
+    "linear_decay",
+    "warmup_cosine",
+]

@@ -1,0 +1,42 @@
+"""Learning-rate schedules (pure functions of the step)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def warmup_cosine(
+    step: jnp.ndarray,
+    peak_lr: float,
+    warmup_steps: int,
+    total_steps: int,
+    final_frac: float = 0.1,
+) -> jnp.ndarray:
+    step = step.astype(jnp.float32)
+    warm = peak_lr * step / jnp.maximum(1.0, warmup_steps)
+    progress = jnp.clip(
+        (step - warmup_steps) / jnp.maximum(1.0, total_steps - warmup_steps),
+        0.0,
+        1.0,
+    )
+    cos = peak_lr * (
+        final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * progress))
+    )
+    return jnp.where(step < warmup_steps, warm, cos)
+
+
+def constant(step: jnp.ndarray, lr: float) -> jnp.ndarray:
+    return jnp.full_like(step, lr, dtype=jnp.float32)
+
+
+def linear_decay(
+    step: jnp.ndarray, peak_lr: float, warmup_steps: int, total_steps: int
+) -> jnp.ndarray:
+    step = step.astype(jnp.float32)
+    warm = peak_lr * step / jnp.maximum(1.0, warmup_steps)
+    decay = peak_lr * jnp.clip(
+        (total_steps - step) / jnp.maximum(1.0, total_steps - warmup_steps),
+        0.0,
+        1.0,
+    )
+    return jnp.where(step < warmup_steps, warm, decay)

@@ -1,0 +1,3 @@
+from .engine import DecodeEngine, DecodeRequest, make_serve_step
+
+__all__ = ["DecodeEngine", "DecodeRequest", "make_serve_step"]

@@ -1,0 +1,79 @@
+"""Batched decode engine: prefill + greedy/temperature decode over a KV (or
+SSM-state) cache.
+
+``serve_step`` — one new token for every sequence in the batch against a
+cache of ``max_len`` — is the function the decode_* and long_500k dry-run
+cells lower (assignment: "``decode_*`` / ``long_*`` lower ``serve_step``,
+NOT ``train_step``").
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..models.registry import ModelApi
+
+
+def make_serve_step(api: ModelApi) -> Callable:
+    """serve_step(params, cache, tokens [B,1], pos) → (next_tokens, cache)."""
+
+    def serve_step(params, cache, tokens, pos_index):
+        logits, cache = api.decode_step(params, cache, tokens, pos_index)
+        next_tokens = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return next_tokens[:, None], cache
+
+    return serve_step
+
+
+@dataclasses.dataclass
+class DecodeRequest:
+    prompt: jnp.ndarray  # [S] int32
+    max_new_tokens: int = 16
+
+
+class DecodeEngine:
+    """Minimal batched engine: static batch, greedy sampling.
+
+    Serving-side Pilot-Data integration (KV segments as DUs, prefix-cache
+    affinity) lives in ``repro.training.trainer`` / examples; this class is
+    the pure-compute layer.
+    """
+
+    def __init__(self, api: ModelApi, params: Any, batch: int, max_len: int):
+        self.api = api
+        self.params = params
+        self.batch = batch
+        self.max_len = max_len
+        self.cache = api.init_cache(batch, max_len)
+        self._step = jax.jit(make_serve_step(api))
+        self._pos = 0
+
+    def prefill(self, tokens: jnp.ndarray) -> jnp.ndarray:
+        """Feed prompt tokens (teacher-forced, one step at a time — a
+        production engine would batch this; CPU tests keep prompts short)."""
+        b, s = tokens.shape
+        assert b == self.batch
+        last = None
+        for i in range(s):
+            last, self.cache = self._step(
+                self.params, self.cache, tokens[:, i : i + 1], jnp.int32(self._pos)
+            )
+            self._pos += 1
+        return last
+
+    def generate(self, tokens: jnp.ndarray, max_new_tokens: int) -> jnp.ndarray:
+        """Greedy-decode continuation; returns [B, max_new_tokens]."""
+        cur = self.prefill(tokens)
+        out = [cur]
+        for _ in range(max_new_tokens - 1):
+            cur, self.cache = self._step(
+                self.params, self.cache, cur, jnp.int32(self._pos)
+            )
+            self._pos += 1
+            out.append(cur)
+        return jnp.concatenate(out, axis=1)

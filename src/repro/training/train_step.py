@@ -1,0 +1,89 @@
+"""Train-step factory: loss → grads → clip → AdamW, with optional
+microbatch gradient accumulation (scanned, so the HLO stays compact and the
+live activation set is one microbatch).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..models.registry import ModelApi
+from ..optim import AdamWConfig, adamw_update, clip_by_global_norm
+from ..optim.schedules import warmup_cosine
+
+
+def make_train_step(
+    api: ModelApi,
+    opt_cfg: AdamWConfig = AdamWConfig(),
+    peak_lr: float = 3e-4,
+    warmup_steps: int = 100,
+    total_steps: int = 10_000,
+    max_grad_norm: float = 1.0,
+    microbatches: int = 1,
+    remat: bool = True,
+    accum_dtype: Optional[Any] = None,
+) -> Callable:
+    """Returns train_step(params, opt_state, batch) → (params, opt_state,
+    metrics).  ``batch`` leaves have the GLOBAL batch leading dim; with
+    microbatches > 1 it must divide evenly."""
+
+    def loss_of(params, mb):
+        loss, metrics = api.loss_fn(params, mb, remat=remat)
+        return loss, metrics
+
+    grad_fn = jax.value_and_grad(loss_of, has_aux=True)
+
+    def accumulate(params, batch):
+        if microbatches == 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+            return loss, metrics, grads
+
+        def to_micro(x):
+            b = x.shape[0]
+            assert b % microbatches == 0, (b, microbatches)
+            return x.reshape(microbatches, b // microbatches, *x.shape[1:])
+
+        micro = jax.tree.map(to_micro, batch)
+
+        def body(carry, mb):
+            acc_grads, acc_loss = carry
+            (loss, metrics), grads = grad_fn(params, mb)
+            acc_grads = jax.tree.map(jnp.add, acc_grads, grads)
+            return (acc_grads, acc_loss + loss), metrics
+
+        # accumulate in fp32 by default; param-dtype (bf16) accumulation
+        # halves the accumulator footprint — the fp32 optimizer masters
+        # still absorb rounding across steps (§Perf memory lever)
+        adt = accum_dtype or jnp.float32
+        zero_grads = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, adt), params
+        )
+        (grads, loss_sum), metrics = jax.lax.scan(
+            body, (zero_grads, jnp.zeros((), jnp.float32)), micro
+        )
+        grads = jax.tree.map(lambda g: g / microbatches, grads)
+        last_metrics = jax.tree.map(lambda m: m[-1], metrics)
+        return loss_sum / microbatches, last_metrics, grads
+
+    def train_step(params, opt_state, batch):
+        loss, metrics, grads = accumulate(params, batch)
+        grads, gnorm = clip_by_global_norm(grads, max_grad_norm)
+        lr = warmup_cosine(opt_state["step"], peak_lr, warmup_steps, total_steps)
+        params, opt_state = adamw_update(grads, opt_state, params, lr, opt_cfg)
+        metrics = dict(metrics)
+        metrics.update({"grad_norm": gnorm, "lr": lr, "loss": loss})
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_eval_step(api: ModelApi) -> Callable:
+    def eval_step(params, batch):
+        loss, metrics = api.loss_fn(params, batch, remat=False)
+        return metrics
+
+    return eval_step

@@ -1,0 +1,268 @@
+"""PilotTrainer: training as a Pilot-Data dataflow.
+
+The run is expressed EXACTLY in the paper's nouns (§4.3.2, Fig. 5):
+
+  * the corpus is partitioned into shard DUs (partitioned data) placed by
+    affinity across Pilot-Data;
+  * model state moves through the run as a chain of immutable checkpoint
+    DUs;
+  * each training chunk (N optimizer steps) is a Compute-Unit with
+    ``input_data = [shard_du, ckpt_{i-1}]`` and ``output_data = [ckpt_i]``;
+  * the Compute-Data Service late-binds each chunk to a pilot co-located
+    with its inputs (compute-to-data), re-queues it if a pilot dies
+    (restart from ckpt_{i-1} — checkpoint/restart for free), and new pilots
+    added mid-run simply start pulling chunks (elastic scaling).
+
+The chunk executable holds the jitted train_step; all cross-chunk state is
+in DUs, so a chunk can run anywhere — which is the whole point.
+"""
+
+from __future__ import annotations
+
+import functools
+import io
+import json
+import threading
+import time
+from typing import Any, Dict, List, Optional
+
+import numpy as np
+
+from ..configs.base import ModelConfig
+from ..core import (
+    ComputeUnitDescription,
+    CUState,
+    DataUnit,
+    DataUnitDescription,
+    FUNCTIONS,
+    PilotManager,
+)
+from ..data import Prefetcher, ShardReader, make_token_shards
+from ..models import build_model
+from ..optim import init_adamw
+from .train_step import make_train_step
+
+
+def _encode(arr) -> bytes:
+    buf = io.BytesIO()
+    np.save(buf, np.asarray(arr), allow_pickle=False)
+    return buf.getvalue()
+
+
+def _decode(data: bytes) -> np.ndarray:
+    return np.load(io.BytesIO(data), allow_pickle=False)
+
+
+def _flatten(tree: Any, prefix: str = "") -> List:
+    if isinstance(tree, dict):
+        out = []
+        for k in sorted(tree):
+            out.extend(_flatten(tree[k], f"{prefix}{k}/"))
+        return out
+    return [(prefix.rstrip("/"), tree)]
+
+
+def _unflatten(items: Dict[str, Any]) -> Any:
+    root: Dict[str, Any] = {}
+    for path, value in items.items():
+        parts = path.split("/")
+        node = root
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = value
+    return root
+
+
+class PilotTrainer:
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        manager: PilotManager,
+        total_steps: int = 20,
+        chunk_steps: int = 5,
+        batch: int = 4,
+        seq: int = 64,
+        peak_lr: float = 1e-3,
+        n_shards: int = 2,
+        tokens_per_shard: int = 50_000,
+        seed: int = 0,
+        run_name: str = "pilot-train",
+    ):
+        self.cfg = cfg
+        self.mgr = manager
+        self.total_steps = total_steps
+        self.chunk_steps = chunk_steps
+        self.batch = batch
+        self.seq = seq
+        self.peak_lr = peak_lr
+        self.n_shards = n_shards
+        self.tokens_per_shard = tokens_per_shard
+        self.seed = seed
+        self.run_name = run_name
+        self.api = build_model(cfg)
+        self.shard_dus: List[DataUnit] = []
+        self.ckpt_dus: List[DataUnit] = []
+        self.history: List[Dict] = []
+        self._register_executable()
+
+    # ------------------------------------------------------------ plumbing
+    def _register_executable(self) -> None:
+        cfg = self.cfg
+        api = self.api
+        me = self
+
+        @functools.lru_cache(maxsize=4)
+        def jitted_step(mb: int):
+            import jax
+
+            return jax.jit(
+                make_train_step(
+                    api,
+                    peak_lr=me.peak_lr,
+                    warmup_steps=max(2, me.total_steps // 10),
+                    total_steps=me.total_steps,
+                )
+            )
+
+        def train_chunk(cu_ctx, shard_du, ckpt_du, start_step, n_steps, batch, seq):
+            import jax
+
+            # --- restore model state from the previous checkpoint DU ---
+            manifest = cu_ctx.input_manifest(ckpt_du)
+            items_p, items_o = {}, {}
+            for rel in manifest:
+                if rel.startswith("params/") and rel.endswith(".npy"):
+                    items_p[rel[7:-4]] = _decode(cu_ctx.read_input(ckpt_du, rel))
+                elif rel.startswith("opt/") and rel.endswith(".npy"):
+                    items_o[rel[4:-4]] = _decode(cu_ctx.read_input(ckpt_du, rel))
+            params = _unflatten(items_p)
+            opt_state = _unflatten(items_o)
+            # --- data from the co-located shard DU ---
+            reader = ShardReader.from_cu_context(
+                cu_ctx, shard_du, seed=me.seed + start_step
+            )
+            batches = Prefetcher(reader.batches(batch, seq), depth=2)
+            step_fn = jitted_step(1)
+            losses = []
+            for i, b in zip(range(n_steps), batches):
+                params, opt_state, metrics = step_fn(params, opt_state, b)
+                losses.append(float(metrics["loss"]))
+            batches.close()
+            # --- emit the next checkpoint DU ---
+            cu_ctx.write_output(
+                "meta.json",
+                json.dumps(
+                    {"step": start_step + n_steps, "run": me.run_name}
+                ).encode(),
+            )
+            for path, leaf in _flatten({"params": params}):
+                cu_ctx.write_output(f"{path}.npy", _encode(leaf))
+            for path, leaf in _flatten({"opt": opt_state}):
+                cu_ctx.write_output(f"{path}.npy", _encode(leaf))
+            return {"losses": losses, "final_loss": losses[-1] if losses else None}
+
+        FUNCTIONS.register(f"train_chunk:{self.run_name}", train_chunk)
+
+    # ---------------------------------------------------------------- setup
+    def stage_data(self, affinities: Optional[List[Optional[str]]] = None) -> None:
+        """Create + place the shard DUs (partitioned-data pattern)."""
+        shards = make_token_shards(
+            self.n_shards,
+            self.tokens_per_shard,
+            self.cfg.vocab_size,
+            seed=self.seed,
+        )
+        for i, files in enumerate(shards):
+            aff = affinities[i % len(affinities)] if affinities else None
+            du = self.mgr.cds.submit_data_unit(
+                DataUnitDescription(
+                    name=f"{self.run_name}.shard{i}", files=files, affinity=aff
+                )
+            )
+            self.shard_dus.append(du)
+
+    def initial_checkpoint(self) -> DataUnit:
+        """ckpt_0 from fresh init (also a DU, so chunk 0 is uniform)."""
+        import jax
+
+        params = self.api.init(jax.random.PRNGKey(self.seed))
+        opt_state = init_adamw(params)
+        files = {"meta.json": json.dumps({"step": 0, "run": self.run_name}).encode()}
+        for path, leaf in _flatten({"params": params}):
+            files[f"{path}.npy"] = _encode(leaf)
+        for path, leaf in _flatten({"opt": opt_state}):
+            files[f"{path}.npy"] = _encode(leaf)
+        du = self.mgr.cds.submit_data_unit(
+            DataUnitDescription(name=f"{self.run_name}.ckpt0", files=files)
+        )
+        self.ckpt_dus.append(du)
+        return du
+
+    # ----------------------------------------------------------------- run
+    def run(self, timeout_per_chunk: float = 300.0) -> Dict[str, Any]:
+        """Drive the chunk chain; returns summary with loss history."""
+        if not self.shard_dus:
+            self.stage_data()
+        ckpt = self.ckpt_dus[-1] if self.ckpt_dus else self.initial_checkpoint()
+        step = 0
+        chunk_idx = 0
+        while step < self.total_steps:
+            n = min(self.chunk_steps, self.total_steps - step)
+            shard = self.shard_dus[chunk_idx % len(self.shard_dus)]
+            out_du = self.mgr.cds.submit_data_unit(
+                DataUnitDescription(
+                    name=f"{self.run_name}.ckpt{step + n}",
+                )
+            )
+            # NOTE: no hard affinity constraint — data locality is a SOFT
+            # preference expressed through the CDS's input-data scoring
+            # (§6.1); a hard constraint would pin chunks to a site even
+            # after its pilots die, defeating failover.
+            cu = self.mgr.cds.submit_compute_unit(
+                ComputeUnitDescription(
+                    executable=f"train_chunk:{self.run_name}",
+                    args=(shard.id, ckpt.id, step, n, self.batch, self.seq),
+                    input_data=[shard.id, ckpt.id],
+                    output_data=[out_du.id],
+                    max_retries=4,
+                )
+            )
+            state = cu.wait(timeout=timeout_per_chunk)
+            if state != CUState.DONE:
+                raise RuntimeError(
+                    f"chunk {chunk_idx} failed: {state} ({cu.error})"
+                )
+            self.history.append(
+                {
+                    "chunk": chunk_idx,
+                    "steps": (step, step + n),
+                    "pilot": cu.pilot_id,
+                    "losses": cu.result["losses"],
+                    "t_s_sim": cu.timings.sim_stage_s,
+                }
+            )
+            self.ckpt_dus.append(out_du)
+            ckpt = out_du
+            step += n
+            chunk_idx += 1
+        first = self.history[0]["losses"][0]
+        last = self.history[-1]["losses"][-1]
+        return {
+            "steps": step,
+            "chunks": chunk_idx,
+            "first_loss": first,
+            "final_loss": last,
+            "improved": last < first,
+            "pilots_used": sorted({h["pilot"] for h in self.history}),
+            "history": self.history,
+        }
+
+    def restore_params(self) -> Any:
+        """Load params from the latest checkpoint DU (resharding restore)."""
+        du = self.ckpt_dus[-1]
+        pd = self.mgr.ctx.lookup(du.locations[0])
+        items = {}
+        for rel in du.manifest:
+            if rel.startswith("params/") and rel.endswith(".npy"):
+                items[rel[7:-4]] = _decode(pd.fetch_du_file(du.id, rel))
+        return _unflatten(items)

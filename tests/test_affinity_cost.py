@@ -1,0 +1,191 @@
+"""Affinity topology + the §6.1 cost calculus, incl. property tests."""
+
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    Topology,
+    cheapest_replica,
+    choose_replication_degree,
+    decide_placement,
+    estimate_td,
+    estimate_tr_group,
+    estimate_tr_sequential,
+    estimate_tx,
+    make_tpu_fleet_topology,
+    match_affinity,
+    straggler_threshold,
+)
+
+GB = 1e9
+
+
+@pytest.fixture()
+def topo():
+    t, _ = make_tpu_fleet_topology(pods=2, hosts_per_pod=4)
+    return t
+
+
+def test_distance_and_affinity(topo):
+    a = "cluster:pod0:host0"
+    assert topo.distance(a, a) == 0
+    assert topo.affinity(a, a) == 1.0
+    # same pod: up to pod0, down to host1 = 2 edges
+    assert topo.distance(a, "cluster:pod0:host1") == 2
+    # cross-pod: host->pod->cluster->pod->host = 4 edges
+    assert topo.distance(a, "cluster:pod1:host0") == 4
+    assert topo.affinity(a, "cluster:pod0:host1") > topo.affinity(
+        a, "cluster:pod1:host0"
+    )
+
+
+def test_bandwidth_bottleneck(topo):
+    # Cross-pod path is bottlenecked by the DCN uplink (25 GB/s default).
+    assert topo.bandwidth("cluster:pod0:host0", "cluster:pod1:host0") == 25 * GB
+    # Intra-pod is ICI-class.
+    assert topo.bandwidth("cluster:pod0:host0", "cluster:pod0:host1") == 50 * GB
+    assert topo.bandwidth("cluster:pod0:host0", "cluster:pod0:host0") == math.inf
+
+
+def test_dynamic_edge_reweighting(topo):
+    before = estimate_tx(10 * GB, "cluster:pod0:host0", "cluster:pod1:host0", topo)
+    topo.set_edge_weight("cluster:pod1", bandwidth=1 * GB)  # congested DCN
+    after = estimate_tx(10 * GB, "cluster:pod0:host0", "cluster:pod1:host0", topo)
+    assert after > before
+
+
+def test_match_affinity():
+    assert match_affinity(None, "anything")
+    assert match_affinity("cluster:pod0", "cluster:pod0")
+    assert match_affinity("cluster:pod0", "cluster:pod0:host3")
+    assert not match_affinity("cluster:pod0", "cluster:pod1:host0")
+    assert not match_affinity("cluster:pod0", "cluster:pod00")  # no prefix-string trap
+
+
+def test_tx_zero_when_colocated(topo):
+    assert estimate_tx(1 << 30, "cluster:pod0:host0", "cluster:pod0:host0", topo) == 0.0
+
+
+def test_group_beats_sequential(topo):
+    targets = [f"cluster:pod1:host{h}" for h in range(4)]
+    seq = estimate_tr_sequential(4 * GB, "cluster:pod0", targets, topo)
+    grp = estimate_tr_group(4 * GB, "cluster:pod0", targets, topo)
+    assert grp < seq  # Fig. 8's headline result
+
+
+def test_estimate_td_modes(topo):
+    targets = [f"cluster:pod1:host{h}" for h in range(3)]
+    td_g = estimate_td(1 * GB, "cluster:pod0", targets, topo, mode="group")
+    td_s = estimate_td(1 * GB, "cluster:pod0", targets, topo, mode="sequential")
+    assert td_g <= td_s
+    with pytest.raises(ValueError):
+        estimate_td(1, "cluster:pod0", targets, topo, mode="bogus")
+
+
+def test_decide_placement_prefers_colocated(topo):
+    # DU of 8 GB at pod0; pilot A at pod0 (busy: T_Q=5s), pilot B at pod1 (idle).
+    choices = decide_placement(
+        {"cluster:pod0:host0": 8 * int(GB)},
+        [("A", "cluster:pod0:host0", 5.0), ("B", "cluster:pod1:host0", 0.0)],
+        topo,
+    )
+    # Staging 8 GB cross-pod ~ 0.32s < 5s queue → B wins (data-to-compute).
+    assert choices[0].pilot_id == "B"
+    assert choices[0].strategy == "compute-to-data"  # t_q(0) < t_stage
+    # Crank B's queue to 50s: now co-located A wins despite its queue.
+    choices = decide_placement(
+        {"cluster:pod0:host0": 8 * int(GB)},
+        [("A", "cluster:pod0:host0", 5.0), ("B", "cluster:pod1:host0", 50.0)],
+        topo,
+    )
+    assert choices[0].pilot_id == "A"
+
+
+def test_decide_placement_affinity_constraint(topo):
+    choices = decide_placement(
+        {},
+        [("A", "cluster:pod0:host0", 0.0), ("B", "cluster:pod1:host0", 0.0)],
+        topo,
+        affinity_constraint="cluster:pod1",
+    )
+    assert [c.pilot_id for c in choices] == ["B"]
+
+
+def test_cheapest_replica(topo):
+    label, t = cheapest_replica(
+        1 * GB,
+        ["cluster:pod0:host0", "cluster:pod1:host0"],
+        "cluster:pod1:host3",
+        topo,
+    )
+    assert label == "cluster:pod1:host0"
+    assert t < estimate_tx(1 * GB, "cluster:pod0:host0", "cluster:pod1:host3", topo)
+
+
+def test_choose_replication_degree_grows_until_marginal(topo):
+    # Many small tasks, expensive compute: replicating to the 2nd site pays.
+    sites = [("cluster:pod0", 8), ("cluster:pod1", 8)]
+    chosen = choose_replication_degree(
+        nbytes=1 * int(GB),
+        src="cluster:pod0",
+        candidate_sites=sites,
+        tasks=64,
+        task_compute_s=10.0,
+        topo=topo,
+    )
+    assert chosen == ["cluster:pod0", "cluster:pod1"]
+    # Tiny workload: one (co-located, free) replica suffices.
+    chosen = choose_replication_degree(
+        nbytes=100 * int(GB),
+        src="cluster:pod0",
+        candidate_sites=sites,
+        tasks=2,
+        task_compute_s=0.1,
+        topo=topo,
+    )
+    assert chosen == ["cluster:pod0"]
+
+
+def test_straggler_threshold():
+    assert straggler_threshold([]) == math.inf
+    assert straggler_threshold([1.0, 2.0, 3.0], factor=2.0) == 4.0
+    assert straggler_threshold([1.0, 3.0], factor=2.0) == 4.0
+
+
+# --------------------------------------------------------------- properties
+@settings(max_examples=50, deadline=None)
+@given(
+    nbytes=st.integers(min_value=1, max_value=1 << 40),
+    n_targets=st.integers(min_value=0, max_value=8),
+)
+def test_prop_group_never_slower_than_sequential(nbytes, n_targets):
+    topo, hosts = make_tpu_fleet_topology(pods=2, hosts_per_pod=4)
+    targets = hosts[:n_targets]
+    seq = estimate_tr_sequential(nbytes, "cluster:pod0", targets, topo)
+    grp = estimate_tr_group(nbytes, "cluster:pod0", targets, topo)
+    assert grp <= seq + 1e-9
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    pa=st.integers(0, 1),
+    ha=st.integers(0, 3),
+    pb=st.integers(0, 1),
+    hb=st.integers(0, 3),
+)
+def test_prop_affinity_symmetric_and_bounded(pa, ha, pb, hb):
+    topo, _ = make_tpu_fleet_topology(pods=2, hosts_per_pod=4)
+    a, b = f"cluster:pod{pa}:host{ha}", f"cluster:pod{pb}:host{hb}"
+    assert topo.affinity(a, b) == topo.affinity(b, a)
+    assert 0 < topo.affinity(a, b) <= 1
+    assert (topo.affinity(a, b) == 1) == (a == b)
+
+
+@settings(max_examples=50, deadline=None)
+@given(nbytes=st.integers(min_value=0, max_value=1 << 42))
+def test_prop_tx_monotone_in_bytes(nbytes):
+    topo, _ = make_tpu_fleet_topology()
+    a, b = "cluster:pod0:host0", "cluster:pod1:host0"
+    assert estimate_tx(nbytes, a, b, topo) <= estimate_tx(nbytes + 1024, a, b, topo)

@@ -1,0 +1,39 @@
+"""The runnable examples are part of the public API surface — run them."""
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+
+def _run(script, timeout=600):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    proc = subprocess.run(
+        [sys.executable, os.path.join(ROOT, "examples", script)],
+        capture_output=True,
+        text=True,
+        env=env,
+        timeout=timeout,
+    )
+    assert proc.returncode == 0, f"{script}:\n{proc.stdout[-2000:]}\n{proc.stderr[-2000:]}"
+    return proc.stdout
+
+
+def test_quickstart():
+    out = _run("quickstart.py")
+    assert "quickstart OK" in out
+
+
+def test_distributed_ensemble():
+    out = _run("distributed_ensemble.py")
+    assert "distributed_ensemble OK" in out
+
+
+@pytest.mark.slow
+def test_pilot_serve():
+    out = _run("pilot_serve.py", timeout=900)
+    assert "replicas consistent" in out

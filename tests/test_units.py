@@ -1,0 +1,100 @@
+"""Data-Unit / Compute-Unit semantics: immutability, namespaces,
+partition/merge, lifecycle."""
+
+import pytest
+
+from repro.core import (
+    CoordinationStore,
+    CUState,
+    ComputeUnit,
+    ComputeUnitDescription,
+    DataUnit,
+    DataUnitDescription,
+    DUState,
+    merge_dus,
+    partition_du,
+)
+
+
+@pytest.fixture()
+def store():
+    return CoordinationStore()
+
+
+def test_du_logical_url_and_manifest(store):
+    du = DataUnit(DataUnitDescription(name="d", files={"a": b"123"}), store)
+    assert du.url == f"du://{du.id}"
+    du.add_file("dir/b", b"4567")
+    assert du.manifest == {"a": 3, "dir/b": 4}
+    assert du.size == 7
+    assert du.state == DUState.NEW
+    assert du.locations == []
+
+
+def test_du_immutable_after_seal(store):
+    du = DataUnit(DataUnitDescription(files={"a": b"1"}), store)
+    du.seal()
+    with pytest.raises(RuntimeError, match="immutable"):
+        du.add_file("b", b"2")
+
+
+def test_du_path_validation(store):
+    du = DataUnit(DataUnitDescription(), store)
+    with pytest.raises(ValueError):
+        du.add_file("/abs", b"")
+    with pytest.raises(ValueError):
+        du.add_file("a/../b", b"")
+
+
+def test_du_drop_buffer_requires_replica(store):
+    du = DataUnit(DataUnitDescription(files={"a": b"1"}), store)
+    with pytest.raises(RuntimeError):
+        du.drop_local_buffer()
+
+
+def test_partition_round_robin(store):
+    files = {f"f{i:02d}": bytes([i]) * (i + 1) for i in range(7)}
+    du = DataUnit(DataUnitDescription(name="big", files=files), store)
+    parts = partition_du(du, 3, store)
+    assert len(parts) == 3
+    got = {}
+    for p in parts:
+        for rel, data in p.iter_files():
+            got[rel] = data
+    assert got == files  # exact cover, no loss, no dup
+    sizes = [len(p.manifest) for p in parts]
+    assert max(sizes) - min(sizes) <= 1  # balanced
+
+
+def test_merge_gathers_with_namespacing(store):
+    d1 = DataUnit(DataUnitDescription(files={"r": b"1"}), store)
+    d2 = DataUnit(DataUnitDescription(files={"r": b"2"}), store)
+    merged = merge_dus([d1, d2], store)
+    assert len(merged.manifest) == 2  # no collision: namespaced by DU id
+
+
+def test_partition_validation(store):
+    du = DataUnit(DataUnitDescription(files={"a": b"1"}), store)
+    with pytest.raises(ValueError):
+        partition_du(du, 0, store)
+
+
+def test_cu_description_json_and_lifecycle(store):
+    desc = ComputeUnitDescription(
+        executable="fn", args=(1, 2), input_data=["du-1"], affinity="cluster:pod0"
+    )
+    d = desc.to_json()
+    assert d["executable"] == "fn" and d["args"] == [1, 2]
+    cu = ComputeUnit(desc, store)
+    assert cu.state == CUState.NEW
+    assert cu.url.startswith("cu://")
+    cu._set_state(CUState.PENDING)
+    cu.cancel()
+    assert cu.state == CUState.CANCELED
+
+
+def test_cu_cancel_only_before_running(store):
+    cu = ComputeUnit(ComputeUnitDescription(executable="fn"), store)
+    cu._set_state(CUState.RUNNING)
+    cu.cancel()  # no-op once running
+    assert cu.state == CUState.RUNNING
