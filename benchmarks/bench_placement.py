@@ -23,6 +23,7 @@ when PDs are co-located; in scenario 5 data-local pilots get most tasks.
 
 from __future__ import annotations
 
+import time
 from typing import Dict, List, Optional
 
 from repro.core import (
@@ -31,10 +32,15 @@ from repro.core import (
     FUNCTIONS,
     PilotManager,
     Topology,
+    list_strategies,
     replicate_group,
 )
 
 from .common import MB, emit, modeled_makespan
+
+#: the five registered placement plugins this bench exercises in both
+#: scheduler modes (acceptance: identical decisions sync vs async)
+STRATEGIES = ("cost", "data-local", "queue-depth", "round-robin", "random")
 
 SCALE = 1e-3  # real bytes per simulated byte (1 MB : 1 GB)
 REF_BYTES = int(8 * 1e9 * SCALE)  # 8 GB shared reference
@@ -135,10 +141,78 @@ def _makespan(
     return t_d + max(spans)
 
 
+def _strategy_decisions(strategy: str, mode: str, n_cus: int = 8) -> List[str]:
+    """Placement sequence (pilot indices) for one strategy in one scheduler
+    mode, on a frozen workload: pilots accept no work (slots=0), so the
+    decision stream depends only on the submissions and the strategy."""
+    mgr = PilotManager(
+        topology=_topology(),
+        scheduler_mode=mode,
+        placement_strategy=strategy,
+    )
+    mgr.ctx.submission_label = SUBMISSION
+    try:
+        pd = mgr.start_pilot_data(
+            service_url=f"sharedfs://{LONESTAR}/pd-eq", affinity=LONESTAR
+        )
+        pilots = [
+            mgr.start_pilot(resource_url=f"sim://{s}", slots=0)
+            for s in (LONESTAR, *OSG_SITES[:3])
+        ]
+        [p.wait_active() for p in pilots]
+        index = {p.id: str(i) for i, p in enumerate(pilots)}
+        FUNCTIONS.register(f"eq:{strategy}:{mode}", lambda cu_ctx: "ok")
+        du = mgr.cds.submit_data_unit(
+            DataUnitDescription(name="eq-in", files={"x": b"e" * (1 << 20)}),
+            target=pd,
+        )
+        du.wait()
+        for i in range(n_cus):
+            mgr.submit_cu(
+                executable=f"eq:{strategy}:{mode}",
+                input_data=[du.id] if i % 2 == 0 else [],
+            )
+        deadline = time.monotonic() + 15
+        while (
+            len(mgr.cds.decisions()) < n_cus and time.monotonic() < deadline
+        ):
+            time.sleep(0.005)
+        ds = mgr.cds.decisions()
+        assert len(ds) == n_cus, f"{strategy}/{mode}: {len(ds)} decisions"
+        return [index[d["pilot"]] for d in ds]
+    finally:
+        mgr.shutdown()
+
+
+def _strategy_equivalence(rows: List[str]) -> None:
+    """The five registered plugins, sync vs async: decisions must match."""
+    registered = set(list_strategies())
+    assert set(STRATEGIES) <= registered, registered
+    all_agree = True
+    for strat in STRATEGIES:
+        sync_seq = _strategy_decisions(strat, "sync")
+        async_seq = _strategy_decisions(strat, "async")
+        agree = sync_seq == async_seq
+        all_agree &= agree
+        rows.append(
+            emit(
+                f"placement.strategy.{strat}.modes_agree",
+                0.0,
+                f"{agree};seq={''.join(sync_seq)}",
+            )
+        )
+    rows.append(
+        emit("placement.claim.strategies_sync_async_agree", 0.0, str(all_agree))
+    )
+
+
 def run() -> List[str]:
     rows = []
     results = {}
     task_split: Dict[str, Dict[str, int]] = {}
+
+    # ---- placement plugins: five strategies × two scheduler modes ------
+    _strategy_equivalence(rows)
 
     # ---- scenario 1: naive pulls, 8 OSG pilots -------------------------
     mgr = PilotManager(topology=_topology())

@@ -1,24 +1,42 @@
 """Benchmark harness — one bench per paper table/figure + roofline.
 
-Prints ``name,us_per_call,derived`` CSV (one row per measurement).
+Prints ``name,us_per_call,derived`` CSV (one row per measurement), and with
+``--json PATH`` additionally writes the same rows machine-readably so CI
+can archive a perf trajectory artifact per run.
 
   bench_staging      — Fig. 7 (T_S per storage backend × size)
   bench_replication  — Fig. 8 (T_R group vs sequential, per-host inset)
   bench_placement    — Figs. 9–10 (five placement strategies, 8-task BWA)
+                       + placement-plugin sync/async equivalence
   bench_scale        — Figs. 11–13 (1024 tasks × 1–3 machines ± replication)
+                       + async-vs-sync pipelined staging comparison
   bench_cost_model   — §6.1 calculus vs oracle + replication degree
   bench_roofline     — assignment §Roofline terms from dry-run artifacts
 """
 
 import argparse
+import json
+import platform
 import sys
 import traceback
+from typing import Dict, List
+
+
+def _row_to_json(row: str) -> Dict[str, object]:
+    name, us, derived = row.split(",", 2)
+    return {"name": name, "us_per_call": float(us), "derived": derived}
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true", help="shrink bench_scale")
     ap.add_argument("--only", default=None, help="run a single bench by name")
+    ap.add_argument(
+        "--json",
+        default=None,
+        metavar="PATH",
+        help="also write rows as a JSON artifact (for CI perf trajectories)",
+    )
     args = ap.parse_args()
 
     from . import (
@@ -38,17 +56,38 @@ def main() -> None:
         "cost_model": lambda: bench_cost_model.run(),
         "roofline": lambda: bench_roofline.run(),
     }
+    if args.only and args.only not in benches:
+        print(
+            f"unknown bench {args.only!r} (known: {', '.join(benches)})",
+            file=sys.stderr,
+        )
+        sys.exit(2)
     print("name,us_per_call,derived")
+    all_rows: List[str] = []
     failed = []
     for name, fn in benches.items():
         if args.only and name != args.only:
             continue
         try:
-            fn()
+            all_rows.extend(fn() or [])
         except Exception as exc:  # noqa: BLE001
             failed.append(name)
-            print(f"{name}.ERROR,0.0,{type(exc).__name__}:{exc}")
+            row = f"{name}.ERROR,0.0,{type(exc).__name__}:{exc}"
+            print(row)
+            all_rows.append(row)
             traceback.print_exc(file=sys.stderr)
+    if args.json:
+        payload = {
+            "schema": "bench-rows/v1",
+            "quick": args.quick,
+            "only": args.only,
+            "python": platform.python_version(),
+            "rows": [_row_to_json(r) for r in all_rows],
+            "failed": failed,
+        }
+        with open(args.json, "w", encoding="utf-8") as fh:
+            json.dump(payload, fh, indent=2)
+        print(f"# wrote {len(all_rows)} rows to {args.json}", file=sys.stderr)
     if failed:
         sys.exit(1)
 

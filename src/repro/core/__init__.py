@@ -13,7 +13,12 @@ from .compute_unit import (
     FUNCTIONS,
     FunctionRegistry,
 )
-from .coordination import CoordinationStore, CoordinationUnavailable, with_retry
+from .coordination import (
+    CoordinationStore,
+    CoordinationUnavailable,
+    StoreEvent,
+    with_retry,
+)
 from .cost_model import (
     PlacementChoice,
     cheapest_replica,
@@ -29,6 +34,14 @@ from .cost_model import (
 from .data_unit import DataUnit, DataUnitDescription, DUState, merge_dus, partition_du
 from .faults import HeartbeatMonitor, StragglerMitigator, requeue_orphans
 from .manager import PilotManager
+from .placement import (
+    Candidate,
+    PlacementEngine,
+    PlacementStrategy,
+    list_strategies,
+    make_strategy,
+    register_strategy,
+)
 from .pilot import (
     PilotCompute,
     PilotComputeDescription,
@@ -39,13 +52,17 @@ from .pilot import (
     RuntimeContext,
 )
 from .replication import DemandReplicator, replicate_group, replicate_sequential
+from .scheduler import AsyncScheduler, SchedulerEvent
 from .services import ComputeDataService, PilotComputeService, PilotDataService
 from .transfer import TransferRecord, TransferService
 
 __all__ = [
     "Topology", "make_grid_topology", "make_tpu_fleet_topology", "match_affinity",
     "ComputeUnit", "ComputeUnitDescription", "CUState", "FUNCTIONS", "FunctionRegistry",
-    "CoordinationStore", "CoordinationUnavailable", "with_retry",
+    "CoordinationStore", "CoordinationUnavailable", "StoreEvent", "with_retry",
+    "AsyncScheduler", "SchedulerEvent",
+    "Candidate", "PlacementEngine", "PlacementStrategy",
+    "list_strategies", "make_strategy", "register_strategy",
     "PlacementChoice", "cheapest_replica", "choose_replication_degree",
     "decide_placement", "estimate_td", "estimate_tr_group", "estimate_tr_sequential",
     "estimate_ts", "estimate_tx", "straggler_threshold",

@@ -230,6 +230,9 @@ class PilotAgent:
                 )
             cu.timings.stage_end = time.monotonic()
             cu.timings.sim_stage_s = sim_stage
+            cu.timings.sim_prefetch_s = (
+                store.hget(f"cu:{cu.id}", "sim_prefetch_s", 0.0) or 0.0
+            )
             store.hset(f"cu:{cu.id}", "sim_stage_s", sim_stage)
             if not is_dup:
                 cu._cas_state(CUState.STAGING, CUState.RUNNING)
@@ -263,6 +266,7 @@ class PilotAgent:
                     "t_c": cu.timings.t_c,
                     "sim_stage_s": cu.timings.sim_stage_s,
                     "sim_compute_s": cu.timings.sim_compute_s,
+                    "sim_prefetch_s": cu.timings.sim_prefetch_s,
                 },
             )
         except Exception as exc:  # noqa: BLE001 — CU failures are data

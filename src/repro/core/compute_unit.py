@@ -109,6 +109,9 @@ class CUTimings:
     run_end: float = 0.0
     sim_stage_s: float = 0.0  # simulated T_S (virtual clock)
     sim_compute_s: float = 0.0
+    #: simulated staging done AHEAD of execution by the async scheduler's
+    #: prefetch pipeline (off the CU's critical path — overlapped)
+    sim_prefetch_s: float = 0.0
 
     @property
     def t_q_task(self) -> float:  # pilot-internal queue time

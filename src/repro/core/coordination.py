@@ -16,11 +16,19 @@ protocol.  It is *not* a toy dict: it supports
     per-pilot queues of §4.2 map 1:1 onto these,
   * atomic compare-and-set on hash fields (used for exactly-once CU state
     transitions, e.g. straggler-duplicate "first finisher wins"),
-  * durability via a JSON write-ahead log (replayable on restart), and
+  * durability via a JSON write-ahead log (replayable on restart),
   * fault injection (``fail_for``): operations raise
     :class:`CoordinationUnavailable` for a window, so client retry loops can
     be tested (the paper: "agent and manager are able to survive transient
-    Redis failures").
+    Redis failures"), and
+  * keyspace notifications (``subscribe``/``unsubscribe``): mutating ops
+    (``hset``/``hcas``/``push``) publish :class:`StoreEvent` records to
+    registered callbacks — the Redis-keyspace-notification analogue that the
+    event-driven scheduler reacts to instead of polling.  Events carry a
+    store-wide monotonic sequence number, so a single consumer observes a
+    total order over state transitions (the determinism anchor for the
+    async scheduler's event log).  Notifications are transient (not WAL'd);
+    replay reconstructs state, not the event stream.
 
 The interface is deliberately Redis-shaped so a networked store could be
 substituted without touching managers or agents.
@@ -29,15 +37,32 @@ substituted without touching managers or agents.
 from __future__ import annotations
 
 import collections
+import dataclasses
 import json
 import os
 import threading
 import time
-from typing import Any, Callable, Dict, Iterator, List, Optional
+from typing import Any, Callable, Dict, Iterator, List, Optional, Tuple
 
 
 class CoordinationUnavailable(RuntimeError):
     """Raised while the store is in an (injected or real) failure window."""
+
+
+@dataclasses.dataclass(frozen=True)
+class StoreEvent:
+    """One published keyspace notification.
+
+    ``op`` is "hset" (covers hcas winners too) or "push"; ``key`` is the
+    hash key or queue name; ``field`` is the hash field (None for pushes);
+    ``value`` the new value / pushed item.
+    """
+
+    seq: int
+    op: str
+    key: str
+    field: Optional[str]
+    value: Any
 
 
 def _default(obj: Any) -> Any:
@@ -61,6 +86,9 @@ class CoordinationStore:
         self._wal_path = wal_path
         self._wal_file = None
         self._op_count = 0
+        self._seq = 0
+        self._subs: Dict[int, Tuple[str, Callable[[StoreEvent], None]]] = {}
+        self._sub_next = 0
         if wal_path:
             if replay and os.path.exists(wal_path):
                 self._replay(wal_path)
@@ -114,6 +142,52 @@ class CoordinationStore:
             self._wal_file.close()
             self._wal_file = None
 
+    # -------------------------------------------------------- notifications
+    def subscribe(
+        self, callback: Callable[[StoreEvent], None], prefix: str = ""
+    ) -> int:
+        """Register ``callback`` for mutations on keys starting with
+        ``prefix``.  Callbacks run on the mutating thread while it still
+        holds the store lock — that is what makes delivery match the
+        sequence-number total order when writers race.  They must be fast
+        and non-blocking (typically: enqueue into the consumer's own event
+        queue); store re-entry from a callback is safe (RLock) but other
+        locks must not be taken."""
+        with self._lock:
+            token = self._sub_next
+            self._sub_next += 1
+            self._subs[token] = (prefix, callback)
+            return token
+
+    def unsubscribe(self, token: int) -> None:
+        with self._lock:
+            self._subs.pop(token, None)
+
+    def _collect(
+        self, op: str, key: str, field: Optional[str], value: Any
+    ) -> List[Tuple[Callable[[StoreEvent], None], StoreEvent]]:
+        """Build the dispatch list for one mutation (called under the lock;
+        dispatch also happens under the lock so subscribers observe events
+        in exact sequence order even when writers race)."""
+        if not self._subs:
+            return []
+        self._seq += 1
+        ev = StoreEvent(seq=self._seq, op=op, key=key, field=field, value=value)
+        return [
+            (cb, ev) for prefix, cb in self._subs.values()
+            if key.startswith(prefix)
+        ]
+
+    @staticmethod
+    def _dispatch(
+        pending: List[Tuple[Callable[[StoreEvent], None], StoreEvent]]
+    ) -> None:
+        for cb, ev in pending:
+            try:
+                cb(ev)
+            except Exception:
+                pass  # a broken subscriber must not poison writers
+
     # -------------------------------------------------------------- kv ops
     def set(self, key: str, value: Any) -> None:
         with self._lock:
@@ -145,6 +219,7 @@ class CoordinationStore:
             self._hashes[key][field] = value
             self._log("hset", key, field, value)
             self._cond.notify_all()
+            self._dispatch(self._collect("hset", key, field, value))
 
     def hget(self, key: str, field: str, default: Any = None) -> Any:
         with self._lock:
@@ -177,6 +252,7 @@ class CoordinationStore:
             self._hashes[key][field] = value
             self._log("hset", key, field, value)
             self._cond.notify_all()
+            self._dispatch(self._collect("hset", key, field, value))
             return True
 
     def hkeys(self, prefix: str = "") -> List[str]:
@@ -191,6 +267,7 @@ class CoordinationStore:
             self._queues[queue].append(item)
             self._log("push", queue, item)
             self._cond.notify_all()
+            self._dispatch(self._collect("push", queue, None, item))
 
     def pop(self, queue: str, timeout: float = 0.0) -> Optional[Any]:
         """Pop from one queue, blocking up to ``timeout`` seconds."""

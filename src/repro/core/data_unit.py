@@ -91,6 +91,9 @@ class DataUnit:
         self._checksums: Dict[str, int] = {
             k: zlib.crc32(v) for k, v in self._files.items()
         }
+        #: bumped on every replica-set change; replica-resolution caches key
+        #: their entries on (du id, this counter) and so self-invalidate
+        self._loc_version = 0
         store.hset(f"du:{self.id}", "state", DUState.NEW)
         store.hset(f"du:{self.id}", "name", description.name)
         store.hset(f"du:{self.id}", "affinity", description.affinity)
@@ -123,6 +126,11 @@ class DataUnit:
     @property
     def affinity(self) -> Optional[str]:
         return self.description.affinity
+
+    @property
+    def locations_version(self) -> int:
+        with self._lock:
+            return self._loc_version
 
     def checksum(self, relpath: str) -> int:
         return self._checksums[relpath]
@@ -181,6 +189,7 @@ class DataUnit:
             locs = self.locations
             if pd_id not in locs:
                 locs.append(pd_id)
+                self._loc_version += 1
                 self._store.hset(f"du:{self.id}", "locations", locs)
             self._set_state(DUState.READY)
             self._sealed = True
@@ -188,6 +197,7 @@ class DataUnit:
     def _remove_location(self, pd_id: str) -> None:
         with self._lock:
             locs = [l for l in self.locations if l != pd_id]
+            self._loc_version += 1
             self._store.hset(f"du:{self.id}", "locations", locs)
 
     def wait(self, timeout: float = 30.0) -> str:

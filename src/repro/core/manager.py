@@ -26,6 +26,7 @@ from .pilot import (
     PilotDataDescription,
     RuntimeContext,
 )
+from .scheduler import AsyncScheduler
 from .services import (
     ComputeDataService,
     PilotComputeService,
@@ -47,7 +48,14 @@ class PilotManager:
         heartbeat_timeout_s: float = 0.5,
         enable_straggler_mitigation: bool = False,
         straggler_factor: float = 2.5,
+        scheduler_mode: str = "sync",
+        placement_strategy: str = "cost",
+        stage_workers: int = 4,
     ):
+        if scheduler_mode not in ("sync", "async"):
+            raise ValueError(
+                f"scheduler_mode must be 'sync' or 'async', got {scheduler_mode!r}"
+            )
         self.store = store or CoordinationStore(wal_path=wal_path)
         self.topology = topology or Topology()
         self.ctx = RuntimeContext(
@@ -56,12 +64,21 @@ class PilotManager:
             time_scale=time_scale,
             data_mode=data_mode,
         )
+        self.scheduler_mode = scheduler_mode
         self.transfer = TransferService(self.ctx)
         self.compute_service = PilotComputeService(self.ctx)
         self.data_service = PilotDataService(self.ctx)
         self.cds = ComputeDataService(
-            self.ctx, delayed_scheduling_s=delayed_scheduling_s
+            self.ctx,
+            delayed_scheduling_s=delayed_scheduling_s,
+            strategy=placement_strategy,
+            start_loop=(scheduler_mode == "sync"),
         )
+        self.scheduler: Optional[AsyncScheduler] = None
+        if scheduler_mode == "async":
+            self.scheduler = AsyncScheduler(
+                self.cds, stage_workers=stage_workers
+            )
         self.heartbeat_monitor: Optional[HeartbeatMonitor] = None
         self.straggler_mitigator: Optional[StragglerMitigator] = None
         if enable_heartbeat_monitor:
@@ -111,6 +128,9 @@ class PilotManager:
         return out
 
     def shutdown(self) -> None:
+        if self.scheduler is not None:
+            with contextlib.suppress(Exception):
+                self.scheduler.stop()
         with contextlib.suppress(Exception):
             self.cds.cancel()
         with contextlib.suppress(Exception):

@@ -1,0 +1,237 @@
+"""Pluggable placement strategies + the shared candidate estimator.
+
+The §6.1 calculus produces, for every (CU, pilot) pair, the two numbers the
+paper trades off — expected queue wait T_Q and expected staging cost T_X.
+*How those numbers turn into a placement* is policy, and this module makes
+policy pluggable: a :class:`PlacementStrategy` ranks the candidate list,
+and strategies register by name so schedulers (sync and async alike) and
+benchmarks select them from one registry.
+
+Both execution modes share :class:`PlacementEngine` for the estimates and a
+strategy instance for the ranking, which is what guarantees the two modes
+reproduce identical placement decisions for identical store state.
+
+Built-in strategies (the five benchmarked in ``bench_placement``):
+
+  * ``cost``        — minimize T_Q + T_X (the paper's §6.1 rule; default);
+  * ``data-local``  — compute-to-data: minimize staging first, queue second;
+  * ``queue-depth`` — load-balance on T_Q only (data-blind);
+  * ``round-robin`` — deterministic rotation over pilots (baseline);
+  * ``random``      — seeded uniform choice (baseline / tie-break probe).
+"""
+
+from __future__ import annotations
+
+import abc
+import dataclasses
+import random
+import threading
+from typing import Callable, Dict, List, Optional, Sequence
+
+from .affinity import match_affinity
+from .compute_unit import ComputeUnit
+from .pilot import PilotCompute, PilotState, RuntimeContext
+
+
+@dataclasses.dataclass(frozen=True)
+class Candidate:
+    """One (CU, pilot) pairing with its §6.1 cost terms."""
+
+    pilot: PilotCompute
+    t_queue: float
+    t_stage: float
+
+    @property
+    def score(self) -> float:
+        return self.t_queue + self.t_stage
+
+    @property
+    def strategy(self) -> str:
+        """Which direction §6.1 says this pairing moves: data or compute."""
+        return (
+            "data-to-compute" if self.t_queue >= self.t_stage
+            else "compute-to-data"
+        )
+
+
+class PlacementEngine:
+    """Computes strategy-independent candidate costs for a CU.
+
+    Estimates are the same math the sync scheduler has always used:
+    T_Q from declared per-CU compute seconds of work already bound to the
+    pilot, T_X as the cheapest-replica staging cost of each input DU (via
+    the transfer service's replica-aware cache)."""
+
+    def __init__(self, ctx: RuntimeContext, avg_cu_estimate_s: float = 0.05):
+        self.ctx = ctx
+        self.avg_cu_estimate_s = avg_cu_estimate_s
+
+    def pilot_tq_estimate(self, pilot: PilotCompute) -> float:
+        """Expected wait before ``pilot`` could start one more CU."""
+        st = pilot.state
+        if st in PilotState.TERMINAL:
+            return float("inf")
+        tq = 0.0
+        if st == PilotState.PROVISIONING:
+            tq += pilot.description.queue_time_s
+
+        def cu_cost(cu_id: str) -> float:
+            try:
+                d = self.ctx.lookup(cu_id).description
+                return max(
+                    d.sim_compute_s, d.est_compute_s, self.avg_cu_estimate_s
+                )
+            except KeyError:
+                return self.avg_cu_estimate_s
+
+        pending = [
+            item["cu"] if isinstance(item, dict) else item
+            for item in self.ctx.store.qpeek(pilot.queue_name)
+        ]
+        running = pilot.running_cus()
+        total = sum(cu_cost(c) for c in (*pending, *running))
+        free = pilot.slots - len(running) - len(pending)
+        if free <= 0:
+            tq += total / max(1, pilot.slots)
+        return max(tq, 0.0)
+
+    def stage_estimate(self, cu: ComputeUnit, pilot: PilotCompute) -> float:
+        """Σ over input DUs of the cheapest-replica staging cost to
+        ``pilot`` (0 for sandbox cache hits and linkable replicas)."""
+        t_stage = 0.0
+        ts = self.ctx.transfer_service
+        for du_id in cu.description.input_data:
+            du = self.ctx.lookup(du_id)
+            if pilot.sandbox.has_du(du.id):
+                continue  # pilot-level cache hit
+            t_stage += ts.estimate_stage_cost(du, pilot.affinity, pilot.sandbox)
+        return t_stage
+
+    def candidates(
+        self, cu: ComputeUnit, pilots: Sequence[PilotCompute]
+    ) -> List[Candidate]:
+        """All affinity-admissible, non-terminal pilots with their costs."""
+        constraint = cu.description.affinity
+        out: List[Candidate] = []
+        for p in pilots:
+            if p.state in PilotState.TERMINAL:
+                continue
+            if constraint and not match_affinity(constraint, p.affinity):
+                continue
+            out.append(
+                Candidate(
+                    pilot=p,
+                    t_queue=self.pilot_tq_estimate(p),
+                    t_stage=self.stage_estimate(cu, p),
+                )
+            )
+        return out
+
+
+class PlacementStrategy(abc.ABC):
+    """Ranks candidates best-first.  Implementations must be deterministic
+    given their construction arguments and the submission order (stateful
+    strategies like round-robin/random advance exactly once per ``rank``)."""
+
+    #: registry key; subclasses override
+    name: str = "?"
+
+    @abc.abstractmethod
+    def rank(
+        self, cu: ComputeUnit, candidates: Sequence[Candidate]
+    ) -> List[Candidate]:
+        ...
+
+
+_REGISTRY: Dict[str, Callable[..., PlacementStrategy]] = {}
+_registry_lock = threading.Lock()
+
+
+def register_strategy(name: str):
+    """Class decorator: register a strategy factory under ``name``."""
+
+    def deco(cls):
+        cls.name = name
+        with _registry_lock:
+            _REGISTRY[name] = cls
+        return cls
+
+    return deco
+
+
+def make_strategy(name: str, **kwargs) -> PlacementStrategy:
+    with _registry_lock:
+        if name not in _REGISTRY:
+            raise KeyError(
+                f"unknown placement strategy {name!r} "
+                f"(registered: {sorted(_REGISTRY)})"
+            )
+        factory = _REGISTRY[name]
+    return factory(**kwargs)
+
+
+def list_strategies() -> List[str]:
+    with _registry_lock:
+        return sorted(_REGISTRY)
+
+
+@register_strategy("cost")
+class CostStrategy(PlacementStrategy):
+    """§6.1: minimize T_Q + T_X; pilot id breaks ties deterministically."""
+
+    def rank(self, cu, candidates):
+        return sorted(candidates, key=lambda c: (c.score, c.pilot.id))
+
+
+@register_strategy("data-local")
+class DataLocalStrategy(PlacementStrategy):
+    """Compute-to-data: staging cost dominates the ordering."""
+
+    def rank(self, cu, candidates):
+        return sorted(
+            candidates, key=lambda c: (c.t_stage, c.t_queue, c.pilot.id)
+        )
+
+
+@register_strategy("queue-depth")
+class QueueDepthStrategy(PlacementStrategy):
+    """Data-blind load balancing on expected queue wait."""
+
+    def rank(self, cu, candidates):
+        return sorted(
+            candidates, key=lambda c: (c.t_queue, c.t_stage, c.pilot.id)
+        )
+
+
+@register_strategy("round-robin")
+class RoundRobinStrategy(PlacementStrategy):
+    """Rotate over pilots in id order; one advance per ranked CU."""
+
+    def __init__(self) -> None:
+        self._next = 0
+        self._lock = threading.Lock()
+
+    def rank(self, cu, candidates):
+        if not candidates:
+            return []
+        ordered = sorted(candidates, key=lambda c: c.pilot.id)
+        with self._lock:
+            start = self._next % len(ordered)
+            self._next += 1
+        return ordered[start:] + ordered[:start]
+
+
+@register_strategy("random")
+class RandomStrategy(PlacementStrategy):
+    """Seeded uniform choice — deterministic under a fixed seed and
+    submission order."""
+
+    def __init__(self, seed: int = 0) -> None:
+        self._rng = random.Random(seed)
+        self._lock = threading.Lock()
+
+    def rank(self, cu, candidates):
+        ordered = sorted(candidates, key=lambda c: c.pilot.id)
+        with self._lock:
+            self._rng.shuffle(ordered)
+        return ordered

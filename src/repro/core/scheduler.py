@@ -1,0 +1,195 @@
+"""Event-driven async scheduler with pipelined data staging.
+
+The sync :class:`~repro.core.services.ComputeDataService` loop polls its
+incoming queue; this module replaces the polling with a **reactor**: the
+coordination store publishes keyspace notifications for every CU/DU/pilot
+state transition (P*'s pilot lifecycle as an event-driven state machine,
+arXiv:1207.6644), and a single scheduler thread consumes them in sequence
+order.  Placement itself is the *same* code path as sync mode
+(``ComputeDataService.place`` → shared :class:`PlacementEngine` + the
+selected :class:`PlacementStrategy` plugin), so the two modes make
+identical decisions; what the async mode adds is **transfer pipelining**:
+
+  * the moment a CU is bound to a pilot, its input DUs are bulk-staged
+    into the pilot's sandbox on a staging thread-pool — staging of CU B
+    overlaps execution of already-ready CU A instead of serializing in the
+    agent's slot;
+  * multi-DU inputs from one source Pilot-Data coalesce into a single
+    costed bulk transfer (one setup latency + one registration);
+  * the transfer service's in-flight dedup makes the agent's own
+    ``stage_in`` wait on (not repeat) a prefetch already moving the bytes.
+
+Determinism: events carry the store's monotonic sequence number and the
+scheduler processes them strictly in arrival order.  With ``autostart=
+False`` and ``stage_workers=0`` the reactor runs only when :meth:`step` is
+called and stages inline — two identically-scripted runs then produce
+identical event logs and decisions (see tests/test_scheduler_async.py).
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+import queue
+import threading
+from concurrent.futures import ThreadPoolExecutor
+from typing import Any, Deque, List, Optional
+
+from .compute_unit import CUState
+from .coordination import StoreEvent
+from .services import ComputeDataService
+
+
+@dataclasses.dataclass(frozen=True)
+class SchedulerEvent:
+    """One reactor-relevant occurrence, in store-sequence order."""
+
+    seq: int
+    kind: str  # "cu-submitted" | "cu-state" | "du-state" | "pilot-state"
+    subject: str  # cu/du/pilot id
+    value: Any  # new state (or queue item for submissions)
+
+
+class AsyncScheduler:
+    """Reactor over coordination-store events; owns async-mode placement.
+
+    Subscribes to the store, filters the firehose down to scheduler-
+    relevant transitions, and reacts:
+
+      * CU submission  → place (shared CDS path) + prefetch pipeline;
+      * CU terminal    → re-check delayed CUs (a slot freed up);
+      * pilot Active   → re-check delayed CUs (capacity appeared).
+    """
+
+    def __init__(
+        self,
+        cds: ComputeDataService,
+        stage_workers: int = 4,
+        autostart: bool = True,
+        tick_s: float = 0.02,
+        event_log_size: int = 10_000,
+    ):
+        self.cds = cds
+        self.ctx = cds.ctx
+        self.tick_s = tick_s
+        self._queue: "queue.Queue[SchedulerEvent]" = queue.Queue()
+        self._stop = threading.Event()
+        #: bounded trace of handled events (oldest evicted) — enough for
+        #: determinism tests and debugging without growing with the workload
+        self.event_log: Deque[SchedulerEvent] = collections.deque(
+            maxlen=event_log_size
+        )
+        self._log_lock = threading.Lock()
+        self._pool: Optional[ThreadPoolExecutor] = (
+            ThreadPoolExecutor(
+                max_workers=stage_workers, thread_name_prefix="stage"
+            )
+            if stage_workers > 0
+            else None
+        )
+        self._token = self.ctx.store.subscribe(self._on_store_event)
+        # Claim staging BEFORE the CU becomes visible on a pilot queue:
+        # agents then dedup onto the prefetch instead of re-staging.
+        cds.pre_push_hook = self._begin_prefetch
+        self._thread: Optional[threading.Thread] = None
+        if autostart:
+            self._thread = threading.Thread(
+                target=self._run, name="async-scheduler", daemon=True
+            )
+            self._thread.start()
+
+    # ---------------------------------------------------------- event intake
+    def _on_store_event(self, ev: StoreEvent) -> None:
+        """Store callback (mutating thread): filter + enqueue, nothing else."""
+        if ev.op == "push" and ev.key == "cds:incoming":
+            self._queue.put(
+                SchedulerEvent(ev.seq, "cu-submitted", str(ev.value), ev.value)
+            )
+        elif ev.op == "hset" and ev.field == "state":
+            for prefix, kind in (
+                ("cu:", "cu-state"),
+                ("du:", "du-state"),
+                ("pilot:", "pilot-state"),
+            ):
+                if ev.key.startswith(prefix):
+                    self._queue.put(
+                        SchedulerEvent(
+                            ev.seq, kind, ev.key.split(":", 1)[1], ev.value
+                        )
+                    )
+                    break
+
+    # -------------------------------------------------------------- reactor
+    def _run(self) -> None:
+        while not self._stop.is_set():
+            self.step(timeout=self.tick_s)
+
+    def step(self, timeout: float = 0.0) -> bool:
+        """Process one pending event (or time out re-checking delayed CUs).
+        Returns True if an event was handled — the manual-stepping hook the
+        determinism tests drive."""
+        try:
+            ev = self._queue.get(timeout=timeout) if timeout else self._queue.get_nowait()
+        except queue.Empty:
+            self.cds.recheck_delayed()
+            return False
+        with self._log_lock:
+            self.event_log.append(ev)
+        try:
+            self._react(ev)
+        except Exception:
+            pass  # scheduler must survive misbehaving CUs/agents
+        return True
+
+    def drain(self, max_events: int = 10_000) -> int:
+        """Synchronously process everything queued (manual-stepping mode)."""
+        n = 0
+        while n < max_events and self.step():
+            n += 1
+        return n
+
+    def _react(self, ev: SchedulerEvent) -> None:
+        if ev.kind == "cu-submitted":
+            cu_id = self.ctx.store.pop("cds:incoming", timeout=0.0)
+            if cu_id is None:
+                return  # sync loop (or a prior event) already took it
+            cu = self.ctx.lookup(cu_id)
+            if cu.state != CUState.PENDING:
+                return
+            self.cds.place(cu)  # prefetch rides the pre-push hook
+        elif ev.kind == "cu-state" and ev.value in CUState.TERMINAL:
+            self.cds.recheck_delayed()
+        elif ev.kind == "pilot-state" and ev.value == "Active":
+            self.cds.recheck_delayed()
+
+    def _begin_prefetch(self, cu, pilot) -> None:
+        """Pre-push hook (pipeline entry): claim the input transfers NOW —
+        before the CU is visible to agents — then move the bytes on the
+        staging pool so they overlap whatever the pilot is executing."""
+        if not cu.description.input_data:
+            return
+        ts = self.ctx.transfer_service
+        claimed = ts.claim_bulk(ts.lookup_dus(cu), pilot.sandbox)
+        if not claimed:
+            return
+        if self._pool is not None:
+            try:
+                self._pool.submit(ts.prefetch_inputs, cu, pilot, claimed)
+                return
+            except RuntimeError:
+                pass  # pool shut down mid-flight: fall back to inline
+        ts.prefetch_inputs(cu, pilot, claimed=claimed)
+
+    # -------------------------------------------------------------- control
+    def decisions(self) -> List[dict]:
+        return self.cds.decisions()
+
+    def stop(self) -> None:
+        self._stop.set()
+        self.ctx.store.unsubscribe(self._token)
+        if self.cds.pre_push_hook is self._begin_prefetch:
+            self.cds.pre_push_hook = None
+        if self._thread is not None:
+            self._thread.join(timeout=2.0)
+        if self._pool is not None:
+            self._pool.shutdown(wait=False)

@@ -23,11 +23,11 @@ from __future__ import annotations
 
 import threading
 import time
-from typing import Dict, List, Optional, Sequence
+from typing import Callable, Dict, List, Optional, Sequence
 
 from .agent import GLOBAL_QUEUE
 from .compute_unit import ComputeUnit, ComputeUnitDescription, CUState
-from .cost_model import decide_placement
+from .placement import PlacementEngine, PlacementStrategy, make_strategy
 from .data_unit import DataUnit, DataUnitDescription
 from .pilot import (
     PilotCompute,
@@ -92,12 +92,19 @@ class ComputeDataService:
         ctx: RuntimeContext,
         delayed_scheduling_s: float = 0.0,
         avg_cu_estimate_s: float = 0.05,
+        strategy: str = "cost",
+        start_loop: bool = True,
     ):
         self.ctx = ctx
         if ctx.transfer_service is None:
             TransferService(ctx)
         self.delayed_scheduling_s = delayed_scheduling_s
         self.avg_cu_estimate_s = avg_cu_estimate_s
+        self.engine = PlacementEngine(ctx, avg_cu_estimate_s=avg_cu_estimate_s)
+        self.strategy: PlacementStrategy = (
+            strategy if isinstance(strategy, PlacementStrategy)
+            else make_strategy(strategy)
+        )
         self._pilots: List[PilotCompute] = []
         self._pds: List[PilotData] = []
         self._cus: List[ComputeUnit] = []
@@ -106,10 +113,19 @@ class ComputeDataService:
         self._stop = threading.Event()
         self._delayed: List[Dict] = []  # {"cu":…, "deadline":…, "pilot":…}
         self._decisions: List[Dict] = []  # audit log of placement choices
-        self._thread = threading.Thread(
-            target=self._scheduler_loop, name="cds-scheduler", daemon=True
-        )
-        self._thread.start()
+        #: invoked with (cu, pilot) just before a CU lands on a pilot queue
+        #: — the async scheduler hangs its prefetch pipeline here so the
+        #: staging claim exists before any agent can see the CU
+        self.pre_push_hook: Optional[Callable] = None
+        self._thread: Optional[threading.Thread] = None
+        if start_loop:
+            # Legacy sync mode: a polling loop owns placement.  In async
+            # mode the AsyncScheduler drains the incoming queue instead
+            # (event-driven), so no thread is started here.
+            self._thread = threading.Thread(
+                target=self._scheduler_loop, name="cds-scheduler", daemon=True
+            )
+            self._thread.start()
 
     # --------------------------------------------------------- registration
     def add_pilot_compute(self, pilot: PilotCompute) -> None:
@@ -184,108 +200,6 @@ class ComputeDataService:
         # rest at CU-placement time).
         return max(candidates, key=lambda pd: pd.free_bytes)
 
-    def _pilot_tq_estimate(self, pilot: PilotCompute) -> float:
-        """Expected wait before this pilot could start one more CU.
-
-        Uses the DECLARED per-CU simulated/estimated compute seconds of the
-        work already bound to the pilot (queued + running), so long tasks
-        spread out instead of piling onto the data-local pilot — the T_Q
-        side of the §6.1 trade-off."""
-        st = pilot.state
-        if st in PilotState.TERMINAL:
-            return float("inf")
-        tq = 0.0
-        if st == PilotState.PROVISIONING:
-            tq += pilot.description.queue_time_s
-
-        def cu_cost(cu_id: str) -> float:
-            try:
-                d = self.ctx.lookup(cu_id).description
-                return max(d.sim_compute_s, d.est_compute_s, self.avg_cu_estimate_s)
-            except KeyError:
-                return self.avg_cu_estimate_s
-
-        pending = [
-            item["cu"] if isinstance(item, dict) else item
-            for item in self.ctx.store.qpeek(pilot.queue_name)
-        ]
-        running = pilot.running_cus()
-        total = sum(cu_cost(c) for c in (*pending, *running))
-        free = pilot.slots - len(running) - len(pending)
-        if free <= 0:
-            tq += total / max(1, pilot.slots)
-        return max(tq, 0.0)
-
-    def _input_bytes_by_location(self, cu: ComputeUnit) -> Dict[str, int]:
-        """Cheapest-replica input footprint per location label."""
-        out: Dict[str, int] = {}
-        for du_id in cu.description.input_data:
-            du: DataUnit = self.ctx.lookup(du_id)
-            locs = du.locations
-            if not locs:
-                # not yet staged anywhere: counts as at the submission host
-                out["submission"] = out.get("submission", 0) + du.size
-                continue
-            # a replicated DU contributes at EACH replica location; the
-            # estimator in decide_placement sums cheapest per pilot — so we
-            # pre-reduce here: each DU contributes only its cheapest replica
-            # for each candidate pilot.  We keep per-location totals and let
-            # decide_placement handle the sum; to keep that exact we expose
-            # every replica location annotated with the DU size, and the
-            # pilot-wise reduction happens in _rank_pilots below.
-            for pd_id in locs:
-                pd: PilotData = self.ctx.lookup(pd_id)
-                out.setdefault(pd.affinity, 0)
-        return out
-
-    def _rank_pilots(self, cu: ComputeUnit):
-        """Rank pilots by T_Q + Σ_DU cheapest-replica T_X (the §6.1 score)."""
-        from .cost_model import cheapest_replica, estimate_tx
-
-        with self._lock:
-            pilots = [
-                p for p in self._pilots if p.state not in PilotState.TERMINAL
-            ]
-        from .affinity import match_affinity
-
-        constraint = cu.description.affinity
-        ranked = []
-        for p in pilots:
-            if constraint and not match_affinity(constraint, p.affinity):
-                continue
-            t_q = self._pilot_tq_estimate(p)
-            t_stage = 0.0
-            for du_id in cu.description.input_data:
-                du: DataUnit = self.ctx.lookup(du_id)
-                if p.sandbox.has_du(du.id):
-                    continue  # pilot-level cache hit
-                replica_labels = []
-                linked = False
-                for pd_id in du.locations:
-                    pd: PilotData = self.ctx.lookup(pd_id)
-                    if self.ctx.transfer_service.is_linkable(pd, p.affinity):
-                        linked = True
-                        break
-                    replica_labels.append(pd.affinity)
-                if linked:
-                    continue
-                if replica_labels:
-                    _, t = cheapest_replica(
-                        du.size, replica_labels, p.affinity, self.ctx.topology
-                    )
-                    t_stage += t
-                else:
-                    # ingest from submission host: backend-profile cost
-                    t_stage += self.ctx.transfer_service.simulated_ingest_time(
-                        du.size, p.sandbox
-                    )
-            strategy = (
-                "data-to-compute" if t_q >= t_stage else "compute-to-data"
-            )
-            ranked.append((t_q + t_stage, t_q, t_stage, strategy, p))
-        ranked.sort(key=lambda r: (r[0], r[4].id))
-        return ranked
-
     def _has_free_slot(self, pilot: PilotCompute) -> bool:
         depth = self.ctx.store.qlen(pilot.queue_name)
         running = len(pilot.running_cus())
@@ -293,46 +207,72 @@ class ComputeDataService:
             running + depth < pilot.slots
         )
 
-    def _place(self, cu: ComputeUnit) -> None:
-        """One pass of the §5 placement algorithm for one CU."""
+    def place(self, cu: ComputeUnit) -> Optional[PilotCompute]:
+        """One pass of the §5 placement algorithm for one CU.
+
+        Shared by both execution modes (the sync polling loop and the
+        event-driven AsyncScheduler call exactly this), which is what keeps
+        their placement decisions identical.  Returns the pilot whose queue
+        received the CU, or None (global queue / delayed)."""
         desc = cu.description
         if desc.pilot is not None:
             # Application-level direct binding (§4.3.2 control level (i)).
             pilot: PilotCompute = self.ctx.lookup(desc.pilot)
             self._push_to_pilot(cu, pilot)
-            return
-        ranked = self._rank_pilots(cu)
+            return pilot
+        with self._lock:
+            pilots = list(self._pilots)
+        ranked = self.strategy.rank(cu, self.engine.candidates(cu, pilots))
         if not ranked:
             self.ctx.store.push(GLOBAL_QUEUE, {"cu": cu.id, "dup": False})
-            return
-        score, t_q, t_stage, strategy, best = ranked[0]
+            return None
+        best = ranked[0]
         self._decisions.append(
             {
                 "cu": cu.id,
-                "pilot": best.id,
-                "t_q": t_q,
-                "t_stage": t_stage,
-                "strategy": strategy,
+                "pilot": best.pilot.id,
+                "t_q": best.t_queue,
+                "t_stage": best.t_stage,
+                "strategy": best.strategy,
+                "policy": self.strategy.name,
             }
         )
         # Step 2: same-affinity pilot with an empty slot → pilot queue.
-        if self._has_free_slot(best):
-            self._push_to_pilot(cu, best)
-            return
+        if self._has_free_slot(best.pilot):
+            self._push_to_pilot(cu, best.pilot)
+            return best.pilot
+        # Steps 3/4 leave the CU off the winner's queue for now — but the
+        # winner is still where it will most likely run, so the async
+        # pipeline prefetches its inputs there speculatively (staging
+        # overlaps the work the pilot is currently busy with; a sandbox
+        # replica also helps any other pilot via cheapest-replica).
+        if self.pre_push_hook is not None:
+            try:
+                self.pre_push_hook(cu, best.pilot)
+            except Exception:
+                pass
         # Step 3: delayed scheduling — wait n sec, recheck.
         if self.delayed_scheduling_s > 0:
-            self._delayed.append(
-                {
-                    "cu": cu,
-                    "pilot": best,
-                    "deadline": time.monotonic() + self.delayed_scheduling_s,
-                }
-            )
-            return
+            with self._lock:
+                self._delayed.append(
+                    {
+                        "cu": cu,
+                        "pilot": best.pilot,
+                        "deadline": time.monotonic()
+                        + self.delayed_scheduling_s,
+                    }
+                )
+            return None
         # Step 4: global queue — first pilot with a slot pulls it.
         self.ctx.store.push(GLOBAL_QUEUE, {"cu": cu.id, "dup": False})
+        return None
 
     def _push_to_pilot(self, cu: ComputeUnit, pilot: PilotCompute) -> None:
+        if self.pre_push_hook is not None:
+            try:
+                self.pre_push_hook(cu, pilot)
+            except Exception:
+                pass
         if self.ctx.data_mode == "push":
             # Push-mode data management (§4.2): the manager pre-stages the
             # input DUs into the pilot sandbox before the CU is queued.
@@ -342,6 +282,30 @@ class ComputeDataService:
                     du, pilot.sandbox, pilot.affinity
                 )
         self.ctx.store.push(pilot.queue_name, {"cu": cu.id, "dup": False})
+
+    def recheck_delayed(self) -> List[tuple]:
+        """Re-check delayed CUs (step 3); returns [(cu, pilot)] placed onto
+        a pilot queue this pass (the async scheduler prefetches those)."""
+        store = self.ctx.store
+        now = time.monotonic()
+        placed: List[tuple] = []
+        with self._lock:
+            entries, self._delayed = self._delayed, []
+        still: List[Dict] = []
+        for entry in entries:
+            cu, pilot = entry["cu"], entry["pilot"]
+            if cu.state != CUState.PENDING:
+                continue
+            if self._has_free_slot(pilot):
+                self._push_to_pilot(cu, pilot)
+                placed.append((cu, pilot))
+            elif now >= entry["deadline"]:
+                store.push(GLOBAL_QUEUE, {"cu": cu.id, "dup": False})
+            else:
+                still.append(entry)
+        with self._lock:
+            self._delayed.extend(still)
+        return placed
 
     def _scheduler_loop(self) -> None:
         store = self.ctx.store
@@ -355,23 +319,10 @@ class ComputeDataService:
                 try:
                     cu = self.ctx.lookup(cu_id)
                     if cu.state == CUState.PENDING:
-                        self._place(cu)
+                        self.place(cu)
                 except Exception:
                     pass
-            # Re-check delayed CUs (step 3).
-            now = time.monotonic()
-            still: List[Dict] = []
-            for entry in self._delayed:
-                cu, pilot = entry["cu"], entry["pilot"]
-                if cu.state != CUState.PENDING:
-                    continue
-                if self._has_free_slot(pilot):
-                    self._push_to_pilot(cu, pilot)
-                elif now >= entry["deadline"]:
-                    store.push(GLOBAL_QUEUE, {"cu": cu.id, "dup": False})
-                else:
-                    still.append(entry)
-            self._delayed = still
+            self.recheck_delayed()
 
     # ------------------------------------------------------------- control
     def decisions(self) -> List[Dict]:
@@ -390,4 +341,5 @@ class ComputeDataService:
 
     def cancel(self) -> None:
         self._stop.set()
-        self._thread.join(timeout=2.0)
+        if self._thread is not None:
+            self._thread.join(timeout=2.0)

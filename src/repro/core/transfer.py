@@ -19,9 +19,10 @@ the site level is linkable from every host in the site.
 from __future__ import annotations
 
 import dataclasses
+import itertools
 import threading
 import time
-from typing import List, Optional, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 from .affinity import match_affinity
 from .cost_model import cheapest_replica
@@ -39,6 +40,13 @@ class TransferRecord:
     wall_seconds: float
     linked: bool = False  # True == logical link, no bytes moved
     t_submit_sim: float = 0.0
+    #: wall clock (time.monotonic) at transfer start — the pipelining
+    #: overlap proof reads these against CU run windows
+    wall_start: float = 0.0
+    #: True when issued by the async scheduler's prefetch pipeline
+    pipelined: bool = False
+    #: shared id for the per-DU shares of one batched bulk transfer
+    batch_id: Optional[str] = None
 
 
 class TransferService:
@@ -50,6 +58,15 @@ class TransferService:
         self._records: List[TransferRecord] = []
         self._lock = threading.Lock()
         self._sim_now = 0.0
+        #: (du_id, dst_pd_id) -> Event for the transfer currently moving
+        #: that DU there; concurrent stagers wait instead of re-paying
+        self._inflight: Dict[Tuple[str, str], threading.Event] = {}
+        #: replica-resolution caches: (du_id, location) -> (loc_version, …)
+        self._resolve_cache: Dict[Tuple[str, str], Tuple[int, Optional[str], bool]] = {}
+        self._estimate_cache: Dict[Tuple[str, str], Tuple[int, float]] = {}
+        self.cache_hits = 0
+        self.cache_misses = 0
+        self._batch_ids = itertools.count()
 
     # ------------------------------------------------------------- costing
     def simulated_transfer_time(
@@ -119,6 +136,7 @@ class TransferService:
                 nbytes=nbytes,
                 sim_seconds=sim,
                 wall_seconds=time.monotonic() - t0,
+                wall_start=t0,
             )
         )
         return sim
@@ -137,6 +155,7 @@ class TransferService:
                 nbytes=nbytes,
                 sim_seconds=sim,
                 wall_seconds=time.monotonic() - t0,
+                wall_start=t0,
             )
         )
         return sim
@@ -150,7 +169,31 @@ class TransferService:
         Returns (pd, linked): ``linked`` means zero-cost direct access; else
         ``pd`` is the cheapest replica to transfer from (None if the DU has
         no replica anywhere — caller falls back to the DU's local buffer).
+
+        Resolutions are memoized per (DU, location) keyed on the DU's
+        replica-set version, so the repeated ``cheapest_replica`` scans of
+        a hot DU collapse to a dict hit until a replica is added/removed.
         """
+        ver = du.locations_version
+        key = (du.id, location)
+        with self._lock:
+            hit = self._resolve_cache.get(key)
+            if hit is not None and hit[0] == ver:
+                self.cache_hits += 1
+                pd_id, linked = hit[1], hit[2]
+                if pd_id is None:
+                    return None, False
+                if pd_id in self.ctx.objects:
+                    return self.ctx.lookup(pd_id), linked
+            self.cache_misses += 1
+        pd, linked = self._resolve_uncached(du, location)
+        with self._lock:
+            self._resolve_cache[key] = (ver, pd.id if pd else None, linked)
+        return pd, linked
+
+    def _resolve_uncached(
+        self, du: DataUnit, location: str
+    ) -> Tuple[Optional[PilotData], bool]:
         replicas = [
             self.ctx.lookup(pd_id)
             for pd_id in du.locations
@@ -167,6 +210,32 @@ class TransferService:
         )
         return by_label[best_label], False
 
+    def estimate_stage_cost(
+        self, du: DataUnit, location: str, sandbox: PilotData
+    ) -> float:
+        """Simulated cost of making ``du`` available at ``location`` (0 for
+        linkable replicas), memoized like :meth:`resolve_access`."""
+        ver = du.locations_version
+        key = (du.id, location)
+        with self._lock:
+            hit = self._estimate_cache.get(key)
+            if hit is not None and hit[0] == ver:
+                self.cache_hits += 1
+                return hit[1]
+            self.cache_misses += 1
+        pd, linked = self.resolve_access(du, location)
+        if linked:
+            cost = 0.0
+        elif pd is not None:
+            _, cost = cheapest_replica(
+                du.size, [pd.affinity], location, self.ctx.topology
+            )
+        else:
+            cost = self.simulated_ingest_time(du.size, sandbox)
+        with self._lock:
+            self._estimate_cache[key] = (ver, cost)
+        return cost
+
     def stage_in(
         self,
         du: DataUnit,
@@ -177,10 +246,17 @@ class TransferService:
         """Make ``du`` available to a CU sandbox at ``location``; returns
         simulated staging seconds (0.0 for a logical link).
 
+        Concurrent stagers of the same (DU, sandbox) pair — e.g. two CU
+        slots sharing an input, or an agent racing the async scheduler's
+        prefetch — deduplicate onto one physical transfer: the first caller
+        pays and records it, later callers block until the bytes land and
+        charge nothing.
+
         ``use_cache=False`` models the paper's PD-less naive mode: every CU
         re-stages into its own sandbox — the full transfer cost is charged
         each time and the sandbox never becomes a replica."""
         if not use_cache:
+            t0 = time.monotonic()
             already = sandbox.has_du(du.id)
             if du.locations:
                 pd, _ = self.resolve_access(du, location)
@@ -200,27 +276,214 @@ class TransferService:
                     nbytes=du.size,
                     sim_seconds=sim,
                     wall_seconds=0.0,
+                    wall_start=t0,
                 )
             )
             return sim
-        if sandbox.has_du(du.id):
-            return 0.0  # pilot-level cache hit (data-diffusion-style reuse)
-        pd, linked = self.resolve_access(du, location)
-        if linked:
-            self.record(
-                TransferRecord(
-                    du_id=du.id,
-                    src_pd=pd.id,
-                    dst_pd=sandbox.id,
-                    nbytes=0,
-                    sim_seconds=0.0,
-                    wall_seconds=0.0,
-                    linked=True,
+        key = (du.id, sandbox.id)
+        while True:
+            if sandbox.has_du(du.id):
+                return 0.0  # pilot-level cache hit (data-diffusion reuse)
+            with self._lock:
+                other = self._inflight.get(key)
+                if other is None:
+                    done = threading.Event()
+                    self._inflight[key] = done
+                    break
+            # Another thread is moving this DU here: wait, then re-check
+            # (loop handles both completion and a failed first attempt).
+            other.wait(timeout=120.0)
+        try:
+            pd, linked = self.resolve_access(du, location)
+            if linked:
+                self.record(
+                    TransferRecord(
+                        du_id=du.id,
+                        src_pd=pd.id,
+                        dst_pd=sandbox.id,
+                        nbytes=0,
+                        sim_seconds=0.0,
+                        wall_seconds=0.0,
+                        wall_start=time.monotonic(),
+                        linked=True,
+                    )
                 )
-            )
-            return 0.0
-        if pd is not None:
-            return self.replicate(du, pd, sandbox)
-        # No replica yet: ingest straight from the DU's local buffer
-        # (submission-machine pull — the paper's "naive" scenarios 1-2).
-        return self.ingest(du, sandbox)
+                return 0.0
+            if pd is not None:
+                return self.replicate(du, pd, sandbox)
+            # No replica yet: ingest straight from the DU's local buffer
+            # (submission-machine pull — the paper's "naive" scenarios 1-2).
+            return self.ingest(du, sandbox)
+        finally:
+            with self._lock:
+                self._inflight.pop(key, None)
+            done.set()
+
+    # ---------------------------------------------------- pipelined staging
+    def claim_bulk(
+        self, dus: Sequence[DataUnit], sandbox: PilotData
+    ) -> List[Tuple[DataUnit, threading.Event]]:
+        """Mark the transferable subset of ``dus`` as in flight toward
+        ``sandbox`` and return the claims.  The async scheduler calls this
+        BEFORE the CU is pushed to a pilot queue, so an agent that claims
+        the CU immediately still dedups onto the prefetch instead of racing
+        it with its own per-DU transfers.  Pass the result to
+        :meth:`stage_in_bulk` (or :meth:`release_claims` on abort)."""
+        claimed: List[Tuple[DataUnit, threading.Event]] = []
+        for du in dus:
+            if du.size <= 0 or sandbox.has_du(du.id):
+                continue
+            key = (du.id, sandbox.id)
+            with self._lock:
+                if key in self._inflight:
+                    continue
+                done = threading.Event()
+                self._inflight[key] = done
+            claimed.append((du, done))
+        return claimed
+
+    def release_claims(
+        self,
+        claimed: List[Tuple[DataUnit, threading.Event]],
+        sandbox: PilotData,
+    ) -> None:
+        for du, done in claimed:
+            with self._lock:
+                self._inflight.pop((du.id, sandbox.id), None)
+            done.set()
+
+    def stage_in_bulk(
+        self,
+        dus: Sequence[DataUnit],
+        sandbox: PilotData,
+        location: str,
+        pipelined: bool = False,
+        batch_id: Optional[str] = None,
+        claimed: Optional[List[Tuple[DataUnit, threading.Event]]] = None,
+        on_complete=None,
+    ) -> float:
+        """Stage several DUs into one sandbox, batching same-source
+        transfers into ONE costed bulk transfer (a single per-request setup
+        latency + catalog registration amortized over the batch, instead of
+        paying both per DU).  Per-DU records carry byte-proportional shares
+        of the bulk cost under a shared ``batch_id``.
+
+        DUs already present, already in flight (another stager owns them),
+        or empty are skipped.  Returns total simulated seconds."""
+        if claimed is None:
+            claimed = self.claim_bulk(dus, sandbox)
+        try:
+            todo: List[DataUnit] = [du for du, _ in claimed]
+            if not todo:
+                return 0.0
+            bid = batch_id or f"batch-{next(self._batch_ids)}"
+            # Resolve every DU, splitting links from per-source groups.
+            groups: Dict[Optional[str], List[Tuple[DataUnit, Optional[PilotData]]]] = {}
+            total_sim = 0.0
+            for du in todo:
+                pd, linked = self.resolve_access(du, location)
+                if linked:
+                    self.record(
+                        TransferRecord(
+                            du_id=du.id,
+                            src_pd=pd.id,
+                            dst_pd=sandbox.id,
+                            nbytes=0,
+                            sim_seconds=0.0,
+                            wall_seconds=0.0,
+                            wall_start=time.monotonic(),
+                            linked=True,
+                            pipelined=pipelined,
+                            batch_id=bid,
+                        )
+                    )
+                    continue
+                groups.setdefault(pd.id if pd else None, []).append((du, pd))
+            for src_id, items in groups.items():
+                t0 = time.monotonic()
+                src = items[0][1]
+                # Materialize, then cost/record whatever actually moved —
+                # if a copy fails mid-group, the DUs already in the sandbox
+                # are still charged and recorded (no free transfers).
+                moved: List[DataUnit] = []
+                try:
+                    for du, _ in items:
+                        if src is None:
+                            sandbox.put_du(du)
+                        else:
+                            sandbox.copy_du_from(du, src)
+                        moved.append(du)
+                finally:
+                    moved_bytes = sum(du.size for du in moved)
+                    if moved:
+                        if src is None:
+                            sim = self.simulated_ingest_time(
+                                moved_bytes, sandbox
+                            )
+                        else:
+                            sim = self.simulated_transfer_time(
+                                moved_bytes, src, sandbox
+                            )
+                        self.ctx.sleep_sim(sim)
+                        wall = time.monotonic() - t0
+                        for du in moved:
+                            share = (
+                                sim * (du.size / moved_bytes)
+                                if moved_bytes
+                                else 0.0
+                            )
+                            self.record(
+                                TransferRecord(
+                                    du_id=du.id,
+                                    src_pd=src_id,
+                                    dst_pd=sandbox.id,
+                                    nbytes=du.size,
+                                    sim_seconds=share,
+                                    wall_seconds=wall,
+                                    wall_start=t0,
+                                    pipelined=pipelined,
+                                    batch_id=bid,
+                                )
+                            )
+                        total_sim += sim
+            if on_complete is not None:
+                # runs BEFORE claims release, so anyone woken by the
+                # release already sees the completion's side effects
+                on_complete(total_sim)
+            return total_sim
+        finally:
+            self.release_claims(claimed, sandbox)
+
+    def lookup_dus(self, cu) -> List[DataUnit]:
+        """Resolve a CU's input DU ids to live objects (unknown ids skipped)."""
+        dus: List[DataUnit] = []
+        for du_id in cu.description.input_data:
+            try:
+                dus.append(self.ctx.lookup(du_id))
+            except KeyError:
+                continue
+        return dus
+
+    def prefetch_inputs(self, cu, pilot, claimed=None) -> float:
+        """Async-scheduler hook: bulk-stage a CU's input DUs into its
+        assigned pilot's sandbox ahead of execution, so staging overlaps
+        the pilot's current compute.  Records the attributed simulated
+        seconds on the CU (``sim_prefetch_s``).
+
+        With ``claimed`` provided (the scheduler claimed before pushing the
+        CU), the work-list comes entirely from the claims — no re-lookup."""
+        dus = [] if claimed is not None else self.lookup_dus(cu)
+
+        def attribute(sim: float) -> None:
+            if sim > 0.0:
+                self.ctx.store.hset(f"cu:{cu.id}", "sim_prefetch_s", sim)
+
+        return self.stage_in_bulk(
+            dus,
+            pilot.sandbox,
+            pilot.affinity,
+            pipelined=True,
+            batch_id=f"prefetch-{cu.id}",
+            claimed=claimed,
+            on_complete=attribute,
+        )

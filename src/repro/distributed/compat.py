@@ -1,0 +1,49 @@
+"""JAX version-compatibility shims.
+
+The codebase targets the modern top-level APIs (``jax.shard_map``,
+``jax.make_mesh`` with ``axis_types``); older 0.4.x releases ship the same
+functionality under ``jax.experimental.shard_map`` / without ``AxisType``.
+Everything mesh- or shard_map-shaped goes through this module so the rest
+of the tree stays version-agnostic.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+import jax
+
+
+def make_mesh(shape: Sequence[int], axis_names: Sequence[str]):
+    """``jax.make_mesh`` with Auto axis types where the API supports them."""
+    shape = tuple(shape)
+    axis_names = tuple(axis_names)
+    kw = {}
+    if hasattr(jax.sharding, "AxisType"):
+        kw["axis_types"] = (jax.sharding.AxisType.Auto,) * len(axis_names)
+    if hasattr(jax, "make_mesh"):
+        return jax.make_mesh(shape, axis_names, **kw)
+    import math
+
+    import numpy as np
+
+    devices = np.array(jax.devices()[: math.prod(shape)]).reshape(shape)
+    return jax.sharding.Mesh(devices, axis_names)
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: Optional[bool] = None):
+    """``jax.shard_map``, falling back to the experimental module.
+
+    ``check_vma`` maps onto the old API's ``check_rep``.
+    """
+    if hasattr(jax, "shard_map"):
+        kw = {} if check_vma is None else {"check_vma": check_vma}
+        return jax.shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kw
+        )
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    kw = {} if check_vma is None else {"check_rep": check_vma}
+    return _shard_map(
+        f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kw
+    )

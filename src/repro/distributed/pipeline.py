@@ -32,6 +32,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from .compat import shard_map
+
 
 def pipeline_apply(
     stage_fn: Callable[[Any, jnp.ndarray], jnp.ndarray],
@@ -92,7 +94,7 @@ def pipeline_apply(
     pspec = jax.tree.map(lambda _: P(axis), stage_params)
     other_axes = tuple(a for a in mesh.axis_names if a != axis)
     in_x = P()  # microbatch stream replicated across the pipeline axis
-    return jax.shard_map(
+    return shard_map(
         body,
         mesh=mesh,
         in_specs=(pspec, in_x),

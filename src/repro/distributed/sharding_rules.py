@@ -44,6 +44,14 @@ def _div(n: int, k: int) -> bool:
     return k > 0 and n % k == 0
 
 
+def _dp(axes) -> Any:
+    """PartitionSpec element for the DP axes: a single axis stays a bare
+    name (P('data', …), not P(('data',), …) — the tuple form denotes
+    multi-axis sharding and confuses spec comparisons downstream)."""
+    axes = tuple(axes)
+    return axes[0] if len(axes) == 1 else axes
+
+
 def _param_rule(
     names: Tuple[str, ...], shape: Tuple[int, ...], cfg: ModelConfig, ms: int
 ) -> Tuple[Optional[Any], ...]:
@@ -148,7 +156,7 @@ def batch_specs(
     bt = ctx.batch_size_total
     out = {}
     for name, (shape, _) in spec_dict.items():
-        batch = ctx.batch_axes if _div(shape[0], bt) else None
+        batch = _dp(ctx.batch_axes) if _div(shape[0], bt) else None
         out[name] = P(batch, *([None] * (len(shape) - 1)))
     return out
 
@@ -172,7 +180,7 @@ def cache_specs(cache_shapes: Any, cfg: ModelConfig, ctx: DistContext) -> Any:
             # [(L,)? B, S, Hkv] — shard like the cache minus the head dim
             lead = (None,) * (len(shape) - 3)
             b_dim, s_dim = shape[-3], shape[-2]
-            batch = ctx.batch_axes if _div(b_dim, bt) else None
+            batch = _dp(ctx.batch_axes) if _div(b_dim, bt) else None
             if batch is None and _div(s_dim, bt * ms):
                 seq = tuple(ctx.batch_axes) + (m,)
             elif _div(s_dim, ms):
@@ -183,7 +191,7 @@ def cache_specs(cache_shapes: Any, cfg: ModelConfig, ctx: DistContext) -> Any:
         if last in ("k", "v"):
             lead = (None,) * (len(shape) - 4)
             b_dim, s_dim = shape[-4], shape[-3]
-            batch = ctx.batch_axes if _div(b_dim, bt) else None
+            batch = _dp(ctx.batch_axes) if _div(b_dim, bt) else None
             if batch is None and _div(s_dim, bt * ms):
                 seq = tuple(ctx.batch_axes) + (m,)
             elif _div(s_dim, ms):
@@ -193,12 +201,12 @@ def cache_specs(cache_shapes: Any, cfg: ModelConfig, ctx: DistContext) -> Any:
             return P(*lead, batch, seq, None, None)
         if last == "ssm":
             lead = (None,) * (len(shape) - 4)
-            batch = ctx.batch_axes if _div(shape[-4], bt) else None
+            batch = _dp(ctx.batch_axes) if _div(shape[-4], bt) else None
             heads = m if _div(shape[-3], ms) else None
             return P(*lead, batch, heads, None, None)
         if last in ("conv_x", "conv_bc"):
             lead = (None,) * (len(shape) - 3)
-            batch = ctx.batch_axes if _div(shape[-3], bt) else None
+            batch = _dp(ctx.batch_axes) if _div(shape[-3], bt) else None
             ch = m if _div(shape[-1], ms) else None
             return P(*lead, batch, None, ch)
         return P(*([None] * len(shape)))

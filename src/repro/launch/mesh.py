@@ -12,13 +12,11 @@ from typing import Tuple
 
 def make_production_mesh(*, multi_pod: bool = False):
     """16×16 single pod (256 chips) or 2×16×16 (512 chips, 2 pods)."""
-    import jax
+    from ..distributed.compat import make_mesh
 
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return make_mesh(shape, axes)
 
 
 def mesh_batch_axes(mesh) -> Tuple[str, ...]:
@@ -28,10 +26,6 @@ def mesh_batch_axes(mesh) -> Tuple[str, ...]:
 
 def make_debug_mesh(data: int = 2, model: int = 2):
     """Small mesh for unit tests (requires >= data*model fake devices)."""
-    import jax
+    from ..distributed.compat import make_mesh
 
-    return jax.make_mesh(
-        (data, model),
-        ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2,
-    )
+    return make_mesh((data, model), ("data", "model"))

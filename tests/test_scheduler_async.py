@@ -1,0 +1,281 @@
+"""Async event-driven scheduler: placement plugins, pipelined staging,
+event-ordering determinism, replica-aware transfer cache."""
+
+import time
+
+import pytest
+
+from repro.core import (
+    AsyncScheduler,
+    ComputeDataService,
+    ComputeUnitDescription,
+    CoordinationStore,
+    CUState,
+    FUNCTIONS,
+    PilotComputeDescription,
+    PilotComputeService,
+    PilotManager,
+    PlacementStrategy,
+    RuntimeContext,
+    Topology,
+    TransferService,
+    list_strategies,
+    make_strategy,
+    register_strategy,
+)
+
+SITE_A, SITE_B = "grid:sitea", "grid:siteb"
+
+
+def _topo() -> Topology:
+    topo = Topology()
+    topo.register(SITE_A, bandwidth=20e6, latency=0.05)
+    topo.register(SITE_B, bandwidth=20e6, latency=0.05)
+    return topo
+
+
+def _register_noop():
+    FUNCTIONS.register("sched-noop", lambda cu_ctx: "ok")
+
+
+# ------------------------------------------------------------------ registry
+def test_strategy_registry_roundtrip():
+    names = list_strategies()
+    for expected in ("cost", "data-local", "queue-depth", "round-robin", "random"):
+        assert expected in names
+    for name in names:
+        s = make_strategy(name)
+        assert isinstance(s, PlacementStrategy)
+        assert s.name == name
+
+    @register_strategy("test-custom")
+    class Custom(PlacementStrategy):
+        def rank(self, cu, candidates):
+            return list(candidates)
+
+    assert "test-custom" in list_strategies()
+    assert isinstance(make_strategy("test-custom"), Custom)
+    with pytest.raises(KeyError):
+        make_strategy("no-such-strategy")
+
+
+def test_unknown_scheduler_mode_rejected():
+    with pytest.raises(ValueError):
+        PilotManager(scheduler_mode="warp")
+
+
+# ------------------------------------------------------- async end-to-end
+def test_async_mode_completes_workload():
+    _register_noop()
+    with PilotManager(topology=_topo(), scheduler_mode="async") as m:
+        pd = m.start_pilot_data(
+            service_url=f"mem://{SITE_B}/pd", affinity=SITE_B
+        )
+        p = m.start_pilot(resource_url=f"sim://{SITE_A}", slots=2)
+        p.wait_active()
+        du = m.submit_du(name="in", files={"a": b"z" * 4096}, target=pd)
+        du.wait()
+        cus = [
+            m.submit_cu(executable="sched-noop", input_data=[du.id])
+            for _ in range(4)
+        ]
+        assert m.wait(timeout=30)
+        assert all(cu.state == CUState.DONE for cu in cus)
+        # every placement came through the shared CDS path with a policy tag
+        ds = m.cds.decisions()
+        assert len(ds) == 4
+        assert all(d["policy"] == "cost" for d in ds)
+        # staging was prefetched by the pipeline, not paid by the agents
+        assert any(r.pipelined for r in m.transfer.records())
+
+
+def test_pipelining_overlap_staging_during_execution():
+    """Staging of CU B's inputs must START before CU A completes (the
+    definition of transfer pipelining on a 1-slot pilot)."""
+    _register_noop()
+    with PilotManager(
+        topology=_topo(), scheduler_mode="async", time_scale=0.05
+    ) as m:
+        pd = m.start_pilot_data(
+            service_url=f"mem://{SITE_B}/pd", affinity=SITE_B
+        )
+        p = m.start_pilot(resource_url=f"sim://{SITE_A}", slots=1)
+        p.wait_active()
+        du_a = m.submit_du(name="ina", files={"a": b"a" * 8192}, target=pd)
+        du_b = m.submit_du(name="inb", files={"b": b"b" * 8192}, target=pd)
+        du_a.wait(), du_b.wait()
+        # sim_compute 2.0 × time_scale 0.05 → ~100 ms wall per CU
+        cu_a = m.submit_cu(
+            executable="sched-noop", input_data=[du_a.id], sim_compute_s=2.0
+        )
+        cu_b = m.submit_cu(
+            executable="sched-noop", input_data=[du_b.id], sim_compute_s=2.0
+        )
+        assert m.wait(timeout=60)
+        assert cu_a.state == CUState.DONE and cu_b.state == CUState.DONE
+        first, second = (
+            (cu_a, cu_b)
+            if cu_a.timings.run_end <= cu_b.timings.run_end
+            else (cu_b, cu_a)
+        )
+        second_du = second.description.input_data[0]
+        recs = [
+            r
+            for r in m.transfer.records()
+            if r.du_id == second_du and r.pipelined and not r.linked
+        ]
+        assert recs, "second CU's input was not prefetched"
+        # the pipelined transfer began while the first CU was still running
+        assert recs[0].wall_start < first.timings.run_end
+        # and the agent charged no critical-path staging for it
+        assert second.timings.sim_stage_s == 0.0
+        assert second.timings.sim_prefetch_s > 0.0
+
+
+def test_bulk_batches_multi_du_same_source():
+    """Multi-DU inputs from one source PD coalesce into one costed bulk
+    transfer: a single setup latency instead of one per DU."""
+    _register_noop()
+    with PilotManager(topology=_topo(), scheduler_mode="async") as m:
+        pd = m.start_pilot_data(
+            service_url=f"mem://{SITE_B}/pd", affinity=SITE_B
+        )
+        p = m.start_pilot(resource_url=f"sim://{SITE_A}", slots=1)
+        p.wait_active()
+        dus = [
+            m.submit_du(
+                name=f"part{i}", files={f"p{i}": b"x" * 4096}, target=pd
+            )
+            for i in range(3)
+        ]
+        [du.wait() for du in dus]
+        cu = m.submit_cu(
+            executable="sched-noop", input_data=[du.id for du in dus]
+        )
+        assert m.wait(timeout=30)
+        assert cu.state == CUState.DONE
+        recs = [
+            r
+            for r in m.transfer.records()
+            if r.du_id in {du.id for du in dus} and r.pipelined
+        ]
+        assert len(recs) == 3
+        assert len({r.batch_id for r in recs}) == 1  # one bulk transfer
+        bulk_sim = sum(r.sim_seconds for r in recs)
+        per_du_sim = sum(
+            m.transfer.simulated_transfer_time(du.size, pd, p.sandbox)
+            for du in dus
+        )
+        # batched: one latency+registration for the batch vs three
+        assert bulk_sim < per_du_sim - 0.05
+
+
+def test_replica_cache_short_circuits_and_invalidates():
+    _register_noop()
+    with PilotManager(topology=_topo()) as m:
+        pd_b = m.start_pilot_data(
+            service_url=f"mem://{SITE_B}/pd", affinity=SITE_B
+        )
+        du = m.submit_du(name="hot", files={"a": b"h" * 2048}, target=pd_b)
+        du.wait()
+        ts = m.transfer
+        pd1, linked1 = ts.resolve_access(du, SITE_A)
+        assert pd1 is pd_b and not linked1
+        h0 = ts.cache_hits
+        pd2, linked2 = ts.resolve_access(du, SITE_A)
+        assert (pd2, linked2) == (pd1, linked1)
+        assert ts.cache_hits > h0  # repeated lookup short-circuited
+        # new replica at SITE_A bumps the DU's location version → the stale
+        # entry self-invalidates and the lookup now resolves to a link
+        pd_a = m.start_pilot_data(
+            service_url=f"mem://{SITE_A}/pd", affinity=SITE_A
+        )
+        ts.replicate(du, pd_b, pd_a)
+        pd3, linked3 = ts.resolve_access(du, SITE_A)
+        assert pd3 is pd_a and linked3
+
+
+# ------------------------------------------------------------- determinism
+def _scripted_run(seed: int):
+    """One manually-stepped async scheduler over a scripted submission
+    sequence; returns (normalized event kinds, decision pilot indices)."""
+    _register_noop()
+    store = CoordinationStore()
+    topo = _topo()
+    ctx = RuntimeContext(store=store, topology=topo)
+    TransferService(ctx)
+    cds = ComputeDataService(
+        ctx, strategy=make_strategy("random", seed=seed), start_loop=False
+    )
+    pcs = PilotComputeService(ctx)
+    pilots = [
+        pcs.create_pilot(
+            PilotComputeDescription(resource_url=f"sim://{s}", slots=0)
+        )
+        for s in (SITE_A, SITE_B)
+    ]
+    for p in pilots:
+        p.wait_active()
+        cds.add_pilot_compute(p)
+    # subscribe only after the pilots settle: the event log then contains
+    # exclusively the scripted submission sequence
+    sched = AsyncScheduler(cds, stage_workers=0, autostart=False)
+    try:
+        for i in range(8):
+            cds.submit_compute_unit(
+                ComputeUnitDescription(executable="sched-noop")
+            )
+        sched.drain()
+        pilot_index = {p.id: i for i, p in enumerate(pilots)}
+        kinds = [ev.kind for ev in sched.event_log]
+        decisions = [pilot_index[d["pilot"]] for d in cds.decisions()]
+        return kinds, decisions
+    finally:
+        sched.stop()
+        cds.cancel()
+        pcs.cancel()
+        store.close()
+
+
+def test_event_ordering_determinism_under_seeded_strategy():
+    run1 = _scripted_run(seed=42)
+    run2 = _scripted_run(seed=42)
+    assert run1 == run2
+    assert run1[0], "event log must not be empty"
+    assert len(run1[1]) == 8
+    # a different seed must be able to produce a different placement
+    # sequence (otherwise the seeding is dead code)
+    other = [_scripted_run(seed=s)[1] for s in (1, 2, 3)]
+    assert any(o != run1[1] for o in other)
+
+
+def test_sync_and_async_modes_make_identical_decisions():
+    """Same store state + same strategy ⇒ same placements, both modes."""
+    _register_noop()
+
+    def run(mode: str):
+        with PilotManager(topology=_topo(), scheduler_mode=mode) as m:
+            pd = m.start_pilot_data(
+                service_url=f"mem://{SITE_B}/pd", affinity=SITE_B
+            )
+            # slots=0: pilots accept no work, so queue state stays frozen
+            # and the decision sequence depends only on the submissions
+            pa = m.start_pilot(resource_url=f"sim://{SITE_A}", slots=0)
+            pb = m.start_pilot(resource_url=f"sim://{SITE_B}", slots=0)
+            pa.wait_active(), pb.wait_active()
+            idx = {pa.id: "A", pb.id: "B"}
+            du = m.submit_du(name="d", files={"a": b"d" * 65536}, target=pd)
+            du.wait()
+            for i in range(6):
+                m.submit_cu(
+                    executable="sched-noop",
+                    input_data=[du.id] if i % 2 == 0 else [],
+                )
+            deadline = time.monotonic() + 10
+            while len(m.cds.decisions()) < 6 and time.monotonic() < deadline:
+                time.sleep(0.01)
+            ds = m.cds.decisions()
+            assert len(ds) == 6, f"{mode}: only {len(ds)} decisions"
+            return [(idx[d["pilot"]], d["strategy"]) for d in ds]
+
+    assert run("sync") == run("async")

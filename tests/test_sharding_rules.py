@@ -27,8 +27,8 @@ SCRIPT = textwrap.dedent(
     from repro.models import build_model
     from repro.optim import init_adamw
 
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.distributed.compat import make_mesh
+    mesh = make_mesh((2, 4), ("data", "model"))
     ctx = DistContext(mesh=mesh, batch_axes=("data",))
     out = {}
 
