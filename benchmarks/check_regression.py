@@ -1,0 +1,86 @@
+"""Quick-bench regression gate for CI.
+
+Compares a fresh ``benchmarks/run.py --json`` artifact against the
+committed baseline and fails (exit 1) when any *makespan* row regressed by
+more than the threshold.  Makespans are simulated (deterministic transfer
+clock), so a drift beyond the threshold means the scheduler/transfer code
+path actually got slower, not that the runner was noisy.
+
+Usage:
+    python -m benchmarks.check_regression \
+        --baseline benchmarks/baseline_quick.json \
+        --current BENCH_<run>.json [--threshold 0.20]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import re
+import sys
+from typing import Dict
+
+#: rows the gate compares: simulated makespans (and the replication /
+#: staging T_R-class timings that feed them)
+GATED = re.compile(r"\.makespan$")
+
+
+def load_rows(path: str) -> Dict[str, float]:
+    with open(path, "r", encoding="utf-8") as fh:
+        payload = json.load(fh)
+    if payload.get("schema") != "bench-rows/v1":
+        raise SystemExit(f"{path}: unexpected schema {payload.get('schema')!r}")
+    return {
+        r["name"]: float(r["us_per_call"])
+        for r in payload["rows"]
+        if GATED.search(r["name"])
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", required=True)
+    ap.add_argument("--current", required=True)
+    ap.add_argument(
+        "--threshold",
+        type=float,
+        default=0.20,
+        help="max allowed fractional makespan regression (default 20%%)",
+    )
+    args = ap.parse_args()
+
+    base = load_rows(args.baseline)
+    cur = load_rows(args.current)
+    if not base:
+        raise SystemExit(f"{args.baseline}: no makespan rows to gate on")
+
+    regressions = []
+    missing = []
+    print(f"{'row':<44} {'baseline':>12} {'current':>12} {'delta':>8}")
+    for name, b in sorted(base.items()):
+        if name not in cur:
+            missing.append(name)
+            continue
+        c = cur[name]
+        delta = (c - b) / b if b > 0 else 0.0
+        flag = " <-- REGRESSION" if delta > args.threshold else ""
+        print(f"{name:<44} {b:>12.0f} {c:>12.0f} {delta:>+7.1%}{flag}")
+        if delta > args.threshold:
+            regressions.append((name, b, c, delta))
+    for name in sorted(set(cur) - set(base)):
+        print(f"{name:<44} {'(new)':>12} {cur[name]:>12.0f}        ")
+    if missing:
+        print(f"\nWARNING: {len(missing)} baseline row(s) missing from the "
+              f"current run: {', '.join(missing)}", file=sys.stderr)
+    if regressions:
+        print(
+            f"\nFAIL: {len(regressions)} makespan row(s) regressed more than "
+            f"{args.threshold:.0%} — rebaseline only with a justification.",
+            file=sys.stderr,
+        )
+        sys.exit(1)
+    print(f"\nOK: no makespan regression beyond {args.threshold:.0%}.")
+
+
+if __name__ == "__main__":
+    main()

@@ -20,7 +20,7 @@ from __future__ import annotations
 import abc
 import dataclasses
 import urllib.parse
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Tuple
 
 
 @dataclasses.dataclass(frozen=True)
@@ -101,6 +101,36 @@ class StorageAdaptor(abc.ABC):
 
     def __repr__(self) -> str:  # pragma: no cover
         return f"<{type(self).__name__} {self.url}>"
+
+
+#: reserved sub-namespace for a DU's physical chunk stream inside a PD
+#: container (no legal DU-relative file path can collide: path segments of
+#: ``.c`` style dot-names are still valid, but the chunk files carry a
+#: fixed-width numeric name under it that the file layer never writes)
+CHUNK_DIR = ".c"
+
+
+def chunk_key(du_id: str, index: int) -> str:
+    """Backend key for chunk ``index`` of DU ``du_id``.
+
+    The chunk — not the file — is the unit of physical storage: adaptors
+    see a flat sequence of same-sized objects per DU, which is what makes
+    partial replicas and ranged/striped transfers expressible on flat
+    object stores (the paper's 1-level-hierarchy caveat) exactly as on
+    hierarchical ones.
+    """
+    return f"{du_id}/{CHUNK_DIR}/{index:08d}"
+
+
+def parse_chunk_key(key: str) -> Optional[Tuple[str, int]]:
+    """Inverse of :func:`chunk_key`; None if ``key`` is not a chunk key."""
+    parts = key.split("/")
+    if len(parts) < 3 or parts[-2] != CHUNK_DIR:
+        return None
+    try:
+        return "/".join(parts[:-2]), int(parts[-1])
+    except ValueError:
+        return None
 
 
 class StorageError(RuntimeError):

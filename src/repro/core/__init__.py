@@ -31,7 +31,15 @@ from .cost_model import (
     estimate_tx,
     straggler_threshold,
 )
-from .data_unit import DataUnit, DataUnitDescription, DUState, merge_dus, partition_du
+from .data_unit import (
+    ChunkInfo,
+    DEFAULT_CHUNK_SIZE,
+    DataUnit,
+    DataUnitDescription,
+    DUState,
+    merge_dus,
+    partition_du,
+)
 from .faults import HeartbeatMonitor, StragglerMitigator, requeue_orphans
 from .manager import PilotManager
 from .placement import (
@@ -66,6 +74,7 @@ __all__ = [
     "PlacementChoice", "cheapest_replica", "choose_replication_degree",
     "decide_placement", "estimate_td", "estimate_tr_group", "estimate_tr_sequential",
     "estimate_ts", "estimate_tx", "straggler_threshold",
+    "ChunkInfo", "DEFAULT_CHUNK_SIZE",
     "DataUnit", "DataUnitDescription", "DUState", "merge_dus", "partition_du",
     "HeartbeatMonitor", "StragglerMitigator", "requeue_orphans",
     "PilotManager",

@@ -188,6 +188,47 @@ class CoordinationStore:
             except Exception:
                 pass  # a broken subscriber must not poison writers
 
+    def wait_field(
+        self,
+        key: str,
+        field: str,
+        predicate: Callable[[Any], bool],
+        timeout: float = 30.0,
+        default: Any = None,
+        poll_s: float = 0.25,
+    ) -> Any:
+        """Block until ``predicate(hget(key, field))`` holds, event-driven.
+
+        Subscribes to the key's keyspace notifications and sleeps on an
+        Event, so waiters wake on the very mutation instead of burning a
+        polling loop; ``poll_s`` bounds each sleep as a coarse fallback
+        (covers a notification lost to subscriber races or store restore).
+        Returns the field's final value (which may still fail the predicate
+        if the timeout elapsed).
+        """
+        woke = threading.Event()
+
+        def _cb(ev: StoreEvent) -> None:
+            if ev.key == key and ev.field == field:
+                woke.set()
+
+        token = self.subscribe(_cb, prefix=key)
+        try:
+            deadline = time.monotonic() + timeout
+            while True:
+                # clear BEFORE reading: a mutation landing between the read
+                # and the wait then re-sets the event and wakes us at once
+                woke.clear()
+                value = self.hget(key, field, default)
+                if predicate(value):
+                    return value
+                remaining = deadline - time.monotonic()
+                if remaining <= 0:
+                    return value
+                woke.wait(min(remaining, poll_s))
+        finally:
+            self.unsubscribe(token)
+
     # -------------------------------------------------------------- kv ops
     def set(self, key: str, value: Any) -> None:
         with self._lock:

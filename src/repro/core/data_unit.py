@@ -14,10 +14,21 @@ Key semantics implemented here:
     file paths), independent of the backend's namespace (object stores are
     flat — the adaptor encodes);
   * immutability after seal: files can be added while the DU is NEW; once
-    sealed (first successful staging), mutation raises;
-  * replica set: the DU tracks which Pilot-Data hold a full copy; all state
-    is mirrored in the coordination store so any client can resolve the DU
-    from anywhere (the "distributed namespace").
+    sealed (first successful staging), mutation raises.  The seal is
+    persisted in the coordination store, so *remote* clients attached to
+    the same store observe immutability too;
+  * **chunk manifest**: the DU's logical content (files concatenated in
+    sorted-relpath order) is split into fixed-size chunks with per-chunk
+    checksums; files map onto contiguous byte (and therefore chunk)
+    ranges.  The chunk is the granularity of the *physical* layer —
+    Pilot-Data hold chunk sets, transfers move chunks, and partial
+    replicas are first-class — while the logical API (``du://`` URL, file
+    namespace, immutability) is untouched;
+  * replica set: ``locations`` lists the Pilot-Data holding a FULL replica
+    (every chunk); ``chunk_holders`` exposes the per-PD chunk sets
+    (including partial holders).  All state is mirrored in the
+    coordination store so any client can resolve the DU from anywhere
+    (the "distributed namespace").
 """
 
 from __future__ import annotations
@@ -26,15 +37,21 @@ import dataclasses
 import itertools
 import threading
 import zlib
-from typing import Callable, Dict, List, Optional
+from typing import Dict, Iterable, List, Optional, Tuple
 
 from .coordination import CoordinationStore
+
+#: physical chunk size (bytes).  Small enough that the multi-MB simulated
+#: datasets of the benchmarks split into dozens of chunks (so striping has
+#: parallelism to exploit), large enough that checksum bookkeeping stays
+#: negligible for the KB-scale DUs the tests use.
+DEFAULT_CHUNK_SIZE = 64 * 1024
 
 
 class DUState:
     NEW = "New"
     PENDING = "Pending"  # staging to first PD in flight
-    READY = "Ready"  # >= 1 replica materialized; sealed
+    READY = "Ready"  # >= 1 full replica materialized; sealed
     FAILED = "Failed"
     DELETED = "Deleted"
 
@@ -46,6 +63,15 @@ _ids_lock = threading.Lock()
 def _next_id(prefix: str) -> str:
     with _ids_lock:
         return f"{prefix}-{next(_ids):06d}"
+
+
+@dataclasses.dataclass(frozen=True)
+class ChunkInfo:
+    """One fixed-size slice of the DU's canonical byte stream."""
+
+    index: int
+    size: int
+    checksum: int  # crc32 of the chunk's bytes
 
 
 @dataclasses.dataclass
@@ -60,6 +86,8 @@ class DataUnitDescription:
     affinity: Optional[str] = None
     #: size hint for placement when content is produced later (output DUs)
     size_hint: int = 0
+    #: physical chunking granularity for this DU's replicas
+    chunk_size: int = DEFAULT_CHUNK_SIZE
 
     def to_json(self) -> Dict:
         return {
@@ -67,6 +95,7 @@ class DataUnitDescription:
             "files": sorted(self.files),
             "affinity": self.affinity,
             "size_hint": self.size_hint,
+            "chunk_size": self.chunk_size,
         }
 
 
@@ -79,26 +108,65 @@ class DataUnit:
         store: CoordinationStore,
         du_id: Optional[str] = None,
     ):
+        if description.chunk_size <= 0:
+            raise ValueError("chunk_size must be positive")
         self.id = du_id or _next_id("du")
         self.description = description
         self._store = store
         self._lock = threading.RLock()
         self._files: Dict[str, bytes] = dict(description.files)
-        self._sealed = False
         self._manifest: Dict[str, int] = {
             k: len(v) for k, v in self._files.items()
         }
         self._checksums: Dict[str, int] = {
             k: zlib.crc32(v) for k, v in self._files.items()
         }
-        #: bumped on every replica-set change; replica-resolution caches key
-        #: their entries on (du id, this counter) and so self-invalidate
+        #: chunk table is recomputed lazily after mutations (adding N files
+        #: would otherwise re-chunk the whole stream N times)
+        self._chunks: List[ChunkInfo] = []
+        self._file_ranges: Dict[str, Tuple[int, int]] = {}
+        #: sorted (stream offset, relpath) pairs for chunk_data bisection
+        self._file_offsets: List[Tuple[int, str]] = []
+        self._offset_keys: List[int] = []
+        self._chunks_dirty = True
+        #: bumped on every replica/chunk-set change; replica-resolution
+        #: caches key their entries on (du id, this counter) and so
+        #: self-invalidate
         self._loc_version = 0
+        prior = store.hgetall(f"du:{self.id}") if du_id is not None else {}
+        if prior.get("state") is not None:
+            # Re-attach to an existing DU record (reconnect semantics): the
+            # store is authoritative — adopt its manifest/chunks/seal
+            # instead of resetting them, so a second client's handle cannot
+            # wipe the persisted seal or the replica bookkeeping.
+            if self._files:
+                if prior.get("sealed", False):
+                    raise RuntimeError(
+                        f"du://{self.id} is sealed; cannot re-create it "
+                        f"with new content"
+                    )
+            else:
+                description.chunk_size = prior.get(
+                    "chunk_size", description.chunk_size
+                )
+                self._manifest = dict(prior.get("manifest", {}))
+                self._checksums = dict(prior.get("checksums", {}))
+                self._chunks = [
+                    ChunkInfo(index=i, size=s, checksum=c)
+                    for i, (s, c) in enumerate(prior.get("chunks", []))
+                ]
+                self._compute_file_ranges()
+                self._chunks_dirty = False
+            return
         store.hset(f"du:{self.id}", "state", DUState.NEW)
         store.hset(f"du:{self.id}", "name", description.name)
         store.hset(f"du:{self.id}", "affinity", description.affinity)
         store.hset(f"du:{self.id}", "locations", [])
         store.hset(f"du:{self.id}", "manifest", dict(self._manifest))
+        store.hset(f"du:{self.id}", "checksums", dict(self._checksums))
+        store.hset(f"du:{self.id}", "sealed", False)
+        store.hset(f"du:{self.id}", "chunk_size", description.chunk_size)
+        self._ensure_chunks()
 
     # ------------------------------------------------------------- identity
     @property
@@ -112,7 +180,11 @@ class DataUnit:
 
     @property
     def locations(self) -> List[str]:
-        """Pilot-Data ids currently holding a full replica."""
+        """Pilot-Data ids currently holding a FULL replica (every chunk).
+
+        Partial holders — PDs with some but not all chunks — are visible
+        through :meth:`chunk_holders` instead.
+        """
         return list(self._store.hget(f"du:{self.id}", "locations", []))
 
     @property
@@ -135,12 +207,158 @@ class DataUnit:
     def checksum(self, relpath: str) -> int:
         return self._checksums[relpath]
 
+    # ------------------------------------------------------------- chunking
+    def _compute_file_ranges(self) -> None:
+        """(Re)derive per-file byte ranges + the bisection index from the
+        manifest (called under the lock or during construction)."""
+        ranges: Dict[str, Tuple[int, int]] = {}
+        offsets: List[Tuple[int, str]] = []
+        off = 0
+        for rel in sorted(self._manifest):
+            n = self._manifest[rel]
+            ranges[rel] = (off, off + n)
+            offsets.append((off, rel))
+            off += n
+        self._file_ranges = ranges
+        self._file_offsets = offsets
+        self._offset_keys = [o for o, _ in offsets]
+
+    def _ensure_chunks(self) -> None:
+        """Recompute the chunk table from the canonical stream (files
+        concatenated in sorted-relpath order) and mirror it to the store."""
+        with self._lock:
+            if not self._chunks_dirty:
+                return
+            csize = self.description.chunk_size
+            self._compute_file_ranges()
+            chunks: List[ChunkInfo] = []
+            stream = b"".join(
+                self._files.get(rel, b"") for rel in sorted(self._manifest)
+            )
+            for i in range(0, len(stream), csize):
+                piece = stream[i : i + csize]
+                chunks.append(
+                    ChunkInfo(
+                        index=i // csize,
+                        size=len(piece),
+                        checksum=zlib.crc32(piece),
+                    )
+                )
+            self._chunks = chunks
+            self._chunks_dirty = False
+            self._store.hset(
+                f"du:{self.id}",
+                "chunks",
+                [[c.size, c.checksum] for c in chunks],
+            )
+
+    @property
+    def chunk_size(self) -> int:
+        return self.description.chunk_size
+
+    @property
+    def chunks(self) -> List[ChunkInfo]:
+        self._ensure_chunks()
+        with self._lock:
+            return list(self._chunks)
+
+    @property
+    def n_chunks(self) -> int:
+        self._ensure_chunks()
+        with self._lock:
+            return len(self._chunks)
+
+    def chunk_data(self, index: int) -> bytes:
+        """Bytes of one chunk, sliced out of the local staging buffer."""
+        import bisect
+
+        self._ensure_chunks()
+        with self._lock:
+            if index < 0 or index >= len(self._chunks):
+                raise IndexError(f"{self.url} has no chunk {index}")
+            if not self._files and self._manifest:
+                raise RuntimeError(
+                    f"{self.url}: local buffer dropped; read chunks from a replica"
+                )
+            csize = self.description.chunk_size
+            start, end = index * csize, index * csize + self._chunks[index].size
+            # bisect to the first file overlapping the chunk's byte range
+            # (a linear scan from file 0 per chunk would make staging
+            # O(n_chunks × n_files))
+            fi = max(0, bisect.bisect_right(self._offset_keys, start) - 1)
+            out = bytearray()
+            for lo, rel in self._file_offsets[fi:]:
+                if lo >= end:
+                    break
+                data = self._files[rel]
+                hi = lo + len(data)
+                if hi > start:
+                    out += data[max(0, start - lo) : end - lo]
+            return bytes(out)
+
+    def file_range(self, relpath: str) -> Tuple[int, int]:
+        """Byte range [start, end) of ``relpath`` in the canonical stream."""
+        self._ensure_chunks()
+        with self._lock:
+            if relpath not in self._file_ranges:
+                raise KeyError(f"{self.url} has no file {relpath!r}")
+            return self._file_ranges[relpath]
+
+    def chunks_for_file(self, relpath: str) -> List[int]:
+        """Chunk indices covering ``relpath`` (empty file → empty list)."""
+        start, end = self.file_range(relpath)
+        if start == end:
+            return []
+        csize = self.description.chunk_size
+        return list(range(start // csize, (end - 1) // csize + 1))
+
+    # ------------------------------------------------------ chunk holdings
+    def chunk_holders(self) -> Dict[str, List[int]]:
+        """PD id -> sorted chunk indices held there (partial AND full)."""
+        raw = self._store.hgetall(f"du:{self.id}:chunks")
+        return {pd: list(idx) for pd, idx in raw.items()}
+
+    def chunks_at(self, pd_id: str) -> List[int]:
+        return list(self._store.hget(f"du:{self.id}:chunks", pd_id, []))
+
+    def _add_chunks(self, pd_id: str, indices: Iterable[int]) -> None:
+        """Register chunks held by ``pd_id``; promotes the PD into
+        ``locations`` once it covers every chunk.  A first physical replica
+        (even partial) seals the DU — and the seal is written to the store
+        so every client observes it."""
+        self._ensure_chunks()
+        with self._lock:
+            held = set(self._store.hget(f"du:{self.id}:chunks", pd_id, []))
+            held.update(int(i) for i in indices)
+            self._loc_version += 1
+            self._store.hset(
+                f"du:{self.id}:chunks", pd_id, sorted(held)
+            )
+            if len(held) >= len(self._chunks):
+                locs = self.locations
+                if pd_id not in locs:
+                    locs.append(pd_id)
+                    self._store.hset(f"du:{self.id}", "locations", locs)
+                self._set_state(DUState.READY)
+            self.seal()
+
+    def _add_location(self, pd_id: str) -> None:
+        """Register a full replica at ``pd_id`` (all chunks at once)."""
+        self._add_chunks(pd_id, range(self.n_chunks))
+
+    def _remove_location(self, pd_id: str) -> None:
+        with self._lock:
+            locs = [l for l in self.locations if l != pd_id]
+            self._loc_version += 1
+            self._store.hset(f"du:{self.id}", "locations", locs)
+            self._store.hdel(f"du:{self.id}:chunks", pd_id)
+
     # ----------------------------------------------------------- mutation
     def add_file(self, relpath: str, data: bytes) -> None:
         """Add a file to a not-yet-sealed DU (application-level hierarchical
         namespace: ``relpath`` may contain '/')."""
         with self._lock:
-            if self._sealed:
+            if self.sealed:
                 raise RuntimeError(
                     f"{self.url} is immutable (sealed); create a new DU instead"
                 )
@@ -149,15 +367,21 @@ class DataUnit:
             self._files[relpath] = bytes(data)
             self._manifest[relpath] = len(data)
             self._checksums[relpath] = zlib.crc32(data)
+            self._chunks_dirty = True
             self._store.hset(f"du:{self.id}", "manifest", dict(self._manifest))
+            self._store.hset(f"du:{self.id}", "checksums", dict(self._checksums))
 
     def seal(self) -> None:
+        """Freeze the DU.  Persisted to the coordination store so remote
+        clients attached to the same store observe immutability too."""
         with self._lock:
-            self._sealed = True
+            self._ensure_chunks()
+            if not self._store.hget(f"du:{self.id}", "sealed", False):
+                self._store.hset(f"du:{self.id}", "sealed", True)
 
     @property
     def sealed(self) -> bool:
-        return self._sealed
+        return bool(self._store.hget(f"du:{self.id}", "sealed", False))
 
     # -------------------------------------------------------- content access
     def read(self, relpath: str) -> bytes:
@@ -184,38 +408,25 @@ class DataUnit:
     def _set_state(self, state: str) -> None:
         self._store.hset(f"du:{self.id}", "state", state)
 
-    def _add_location(self, pd_id: str) -> None:
-        with self._lock:
-            locs = self.locations
-            if pd_id not in locs:
-                locs.append(pd_id)
-                self._loc_version += 1
-                self._store.hset(f"du:{self.id}", "locations", locs)
-            self._set_state(DUState.READY)
-            self._sealed = True
-
-    def _remove_location(self, pd_id: str) -> None:
-        with self._lock:
-            locs = [l for l in self.locations if l != pd_id]
-            self._loc_version += 1
-            self._store.hset(f"du:{self.id}", "locations", locs)
-
     def wait(self, timeout: float = 30.0) -> str:
-        """Block until the DU reaches a terminal-or-ready state."""
-        import time
+        """Block until the DU reaches a terminal-or-ready state.
 
-        deadline = time.monotonic() + timeout
-        while time.monotonic() < deadline:
-            s = self.state
-            if s in (DUState.READY, DUState.FAILED, DUState.DELETED):
-                return s
-            time.sleep(0.005)
-        return self.state
+        Event-driven: waits on the coordination store's keyspace
+        notifications for this DU's state field (poll only as a coarse
+        fallback against missed events)."""
+        terminal = (DUState.READY, DUState.FAILED, DUState.DELETED)
+        return self._store.wait_field(
+            f"du:{self.id}",
+            "state",
+            lambda s: s in terminal,
+            timeout=timeout,
+            default=DUState.NEW,
+        )
 
     def __repr__(self) -> str:  # pragma: no cover
         return (
             f"<DataUnit {self.url} state={self.state} files={len(self._manifest)} "
-            f"bytes={self.size} replicas={len(self.locations)}>"
+            f"bytes={self.size} chunks={self.n_chunks} replicas={len(self.locations)}>"
         )
 
 
@@ -241,7 +452,9 @@ def partition_du(
     base = name or du.description.name or du.id
     for i in range(n_parts):
         desc = DataUnitDescription(
-            name=f"{base}.part{i}", affinity=du.description.affinity
+            name=f"{base}.part{i}",
+            affinity=du.description.affinity,
+            chunk_size=du.description.chunk_size,
         )
         parts.append(DataUnit(desc, store))
     for idx, (relpath, data) in enumerate(sorted(files)):
@@ -253,10 +466,30 @@ def merge_dus(
     dus: List[DataUnit], store: CoordinationStore, name: str = "merged"
 ) -> DataUnit:
     """Gather pattern: merge several DUs' files into one new DU (output
-    gathering)."""
-    desc = DataUnitDescription(name=name)
+    gathering).
+
+    The merge propagates the sources' affinity when they all agree (a
+    gather of pod0-affine partitions is itself pod0-affine), and verifies
+    each copied file against the source's recorded checksum — a corrupted
+    staging buffer fails loudly instead of silently poisoning the merged
+    DU.  A source whose local buffer was dropped (content only in
+    Pilot-Data backends) cannot be merged from here and raises.
+    """
+    affinities = {du.description.affinity for du in dus}
+    affinity = affinities.pop() if len(affinities) == 1 else None
+    desc = DataUnitDescription(name=name, affinity=affinity)
     out = DataUnit(desc, store)
     for du in dus:
-        for relpath, data in du.iter_files():
+        files = dict(du.iter_files())
+        if du.manifest and not files:
+            raise RuntimeError(
+                f"{du.url}: local buffer dropped; re-stage from a replica "
+                f"before merging"
+            )
+        for relpath, data in files.items():
+            if zlib.crc32(data) != du.checksum(relpath):
+                raise RuntimeError(
+                    f"{du.url}/{relpath}: checksum mismatch during merge"
+                )
             out.add_file(f"{du.id}/{relpath}", data)
     return out

@@ -13,7 +13,7 @@ import threading
 import time
 from typing import Any, Dict, List, Optional
 
-from ..backends import StorageAdaptor, make_backend
+from ..backends import StorageAdaptor, chunk_key, make_backend
 from .affinity import Topology
 from .coordination import CoordinationStore
 from .data_unit import DataUnit, _next_id
@@ -88,11 +88,16 @@ class QuotaExceeded(RuntimeError):
 
 
 class PilotData:
-    """An allocated storage container holding DU replicas.
+    """An allocated storage container holding DU replicas, chunk-granular.
 
-    The PD stores each DU's files under the key prefix ``<du_id>/``; the
-    DU-internal hierarchical namespace is preserved (the adaptor flattens it
-    if the backend namespace is flat).
+    The physical representation is the DU's *chunk* stream: each held
+    chunk is stored under the key ``<du_id>/.c/<index>`` (see
+    :func:`repro.backends.base.chunk_key`); the DU-internal hierarchical
+    file namespace is reassembled on read from the chunk ranges recorded
+    in the DU manifest.  A PD may hold any subset of a DU's chunks — a
+    *partial replica* — and still serve those chunks as a transfer source;
+    it is promoted into the DU's ``locations`` only once it covers every
+    chunk.
     """
 
     def __init__(
@@ -109,7 +114,13 @@ class PilotData:
         ctx.topology.ensure(self.affinity)
         self._lock = threading.RLock()
         self._used = 0
-        self._dus: Dict[str, int] = {}  # du_id -> bytes
+        self._dus: Dict[str, int] = {}  # du_id -> bytes held
+        self._du_chunks: Dict[str, set] = {}  # du_id -> held chunk indices
+        self._du_total: Dict[str, int] = {}  # du_id -> total chunks in DU
+        #: DU handles seen by put/copy — lets chunk-range reads resolve the
+        #: manifest even for DUs never registered in ctx.objects (e.g.
+        #: partition_du/merge_dus outputs staged directly into a PD)
+        self._du_objs: Dict[str, DataUnit] = {}
         ctx.store.hset(f"pd:{self.id}", "state", PilotState.ACTIVE)
         ctx.store.hset(f"pd:{self.id}", "affinity", self.affinity)
         ctx.store.hset(f"pd:{self.id}", "url", description.service_url)
@@ -137,79 +148,145 @@ class PilotData:
             return sorted(self._dus)
 
     def has_du(self, du_id: str) -> bool:
+        """True iff this PD holds a FULL replica (every chunk) of the DU."""
         with self._lock:
-            return du_id in self._dus
+            if du_id not in self._du_chunks:
+                return False
+            return len(self._du_chunks[du_id]) >= self._du_total.get(du_id, 0)
+
+    def chunks_held(self, du_id: str) -> List[int]:
+        with self._lock:
+            return sorted(self._du_chunks.get(du_id, ()))
+
+    def missing_chunks(self, du: DataUnit) -> List[int]:
+        """Chunk indices of ``du`` this PD does not hold yet."""
+        with self._lock:
+            held = self._du_chunks.get(du.id, set())
+        return [i for i in range(du.n_chunks) if i not in held]
 
     # ------------------------------------------------------------- content
-    def _register_du(self, du: DataUnit, nbytes: int) -> None:
+    def _account_chunks(
+        self, du: DataUnit, indices: List[int], register: bool
+    ) -> int:
+        """Record newly-held chunks; returns bytes newly accounted (chunks
+        already held are not double-counted, so racing stagers stay
+        consistent)."""
+        chunks = du.chunks
         with self._lock:
-            self._dus[du.id] = nbytes
+            held = self._du_chunks.setdefault(du.id, set())
+            new = [i for i in indices if i not in held]
+            nbytes = sum(chunks[i].size for i in new)
+            held.update(new)
+            self._du_total[du.id] = len(chunks)
+            self._du_objs[du.id] = du
+            self._dus[du.id] = self._dus.get(du.id, 0) + nbytes
             self._used += nbytes
             self.ctx.store.hset(f"pd:{self.id}", "dus", sorted(self._dus))
-        du._add_location(self.id)
+        if register:
+            du._add_chunks(self.id, indices)
+        return nbytes
 
-    def put_du(self, du: DataUnit, register: bool = True) -> int:
-        """Materialize a DU's in-process buffer into this PD (initial
-        staging).  Returns bytes written.  ``register=False`` stores the
-        files without adding this PD to the DU's replica set (transient
+    def put_chunks(
+        self, du: DataUnit, indices: List[int], register: bool = True
+    ) -> int:
+        """Materialize a subset of a DU's chunks from its in-process buffer
+        into this PD.  Returns bytes written.  ``register=False`` stores the
+        chunks without reporting this PD as a holder to the DU (transient
         per-CU sandbox staging — the paper's PD-less naive mode)."""
-        files = du.iter_files()
-        nbytes = sum(len(d) for _, d in files)
+        chunks = du.chunks
+        todo = [i for i in indices if i not in self._du_chunks.get(du.id, set())]
+        nbytes = sum(chunks[i].size for i in todo)
         if nbytes > self.free_bytes:
             raise QuotaExceeded(
                 f"{self.url}: need {nbytes}B, free {self.free_bytes}B"
             )
-        for relpath, data in files:
-            self.backend.put(f"{du.id}/{relpath}", data)
-        if register:
-            self._register_du(du, nbytes)
-        else:
-            with self._lock:
-                if du.id not in self._dus:
-                    self._dus[du.id] = nbytes
-                    self._used += nbytes
+        for i in todo:
+            self.backend.put(chunk_key(du.id, i), du.chunk_data(i))
+        self._account_chunks(du, todo, register)
+        return nbytes
+
+    def put_du(self, du: DataUnit, register: bool = True) -> int:
+        """Materialize a DU's full chunk set into this PD (initial staging).
+        An empty DU still records a (vacuously full) holding."""
+        return self.put_chunks(du, list(range(du.n_chunks)), register=register)
+
+    def copy_chunks_from(
+        self,
+        du: DataUnit,
+        src: "PilotData",
+        indices: List[int],
+        register: bool = True,
+    ) -> int:
+        """Copy specific chunks of a DU from another PD (a partial holder
+        suffices, as long as it has the requested chunks)."""
+        src_held = set(src.chunks_held(du.id))
+        missing_at_src = [i for i in indices if i not in src_held]
+        if missing_at_src:
+            raise KeyError(
+                f"{src.url} holds no chunks {missing_at_src} of {du.url}"
+            )
+        chunks = du.chunks
+        todo = [i for i in indices if i not in self._du_chunks.get(du.id, set())]
+        nbytes = sum(chunks[i].size for i in todo)
+        if nbytes > self.free_bytes:
+            raise QuotaExceeded(
+                f"{self.url}: need {nbytes}B, free {self.free_bytes}B"
+            )
+        for i in todo:
+            self.backend.put(chunk_key(du.id, i), src.backend.get(chunk_key(du.id, i)))
+        self._account_chunks(du, todo, register)
         return nbytes
 
     def copy_du_from(self, du: DataUnit, src: "PilotData", register: bool = True) -> int:
-        """Replicate a DU from another PD into this one (physical copy)."""
+        """Replicate a DU from another PD into this one: copies the chunks
+        this PD is still missing (delta transfer — a partial local holding
+        only pays for the remainder)."""
         if not src.has_du(du.id):
             raise KeyError(f"{src.url} holds no replica of {du.url}")
-        nbytes = 0
-        for relpath in du.manifest:
-            data = src.backend.get(f"{du.id}/{relpath}")
-            self.backend.put(f"{du.id}/{relpath}", data)
-            nbytes += len(data)
-        if nbytes > self.description.size_quota:
-            raise QuotaExceeded(f"{self.url}: DU {du.id} exceeds quota")
-        if register:
-            self._register_du(du, nbytes)
-        else:
-            with self._lock:
-                if du.id not in self._dus:
-                    self._dus[du.id] = nbytes
-                    self._used += nbytes
-        return nbytes
+        return self.copy_chunks_from(
+            du, src, self.missing_chunks(du), register=register
+        )
 
     def fetch_du_file(self, du_id: str, relpath: str) -> bytes:
-        return self.backend.get(f"{du_id}/{relpath}")
+        """Reassemble one DU file from the locally-held chunks covering its
+        byte range in the canonical stream."""
+        du: Optional[DataUnit] = self.ctx.objects.get(du_id) or self._du_objs.get(du_id)
+        if du is None:
+            raise KeyError(f"{self.url}: unknown DU {du_id!r}")
+        start, end = du.file_range(relpath)
+        if start == end:
+            return b""
+        csize = du.chunk_size
+        out = bytearray()
+        for i in du.chunks_for_file(relpath):
+            data = self.backend.get(chunk_key(du_id, i))
+            lo = i * csize
+            out += data[max(0, start - lo) : max(0, end - lo)]
+        return bytes(out)
 
     def verify_du(self, du: DataUnit) -> bool:
-        """Checksum-verify the local replica against the DU manifest."""
+        """Checksum-verify every locally-held chunk against the DU's chunk
+        manifest; a full replica must cover and match all chunks."""
         import zlib
 
-        for relpath in du.manifest:
-            data = self.backend.get(f"{du.id}/{relpath}")
-            if zlib.crc32(data) != du.checksum(relpath):
+        if not self.has_du(du.id):
+            return False
+        for c in du.chunks:
+            data = self.backend.get(chunk_key(du.id, c.index))
+            if len(data) != c.size or zlib.crc32(data) != c.checksum:
                 return False
         return True
 
     def remove_du(self, du: DataUnit) -> None:
         with self._lock:
             nbytes = self._dus.pop(du.id, 0)
+            held = self._du_chunks.pop(du.id, set())
+            self._du_total.pop(du.id, None)
+            self._du_objs.pop(du.id, None)
             self._used -= nbytes
             self.ctx.store.hset(f"pd:{self.id}", "dus", sorted(self._dus))
-        for relpath in du.manifest:
-            self.backend.delete(f"{du.id}/{relpath}")
+        for i in held:
+            self.backend.delete(chunk_key(du.id, i))
         du._remove_location(self.id)
 
     def cancel(self) -> None:
@@ -322,12 +399,17 @@ class PilotCompute:
         self.agent.kill()
 
     def wait_active(self, timeout: float = 30.0) -> str:
-        deadline = time.monotonic() + timeout
-        while time.monotonic() < deadline:
-            if self.state in (PilotState.ACTIVE, *PilotState.TERMINAL):
-                return self.state
-            time.sleep(0.005)
-        return self.state
+        """Block until the pilot activates (or terminates), event-driven on
+        the coordination store's keyspace notifications (poll only as a
+        coarse fallback)."""
+        settled = (PilotState.ACTIVE, *PilotState.TERMINAL)
+        return self.ctx.store.wait_field(
+            f"pilot:{self.id}",
+            "state",
+            lambda s: s in settled,
+            timeout=timeout,
+            default=PilotState.NEW,
+        )
 
     def running_cus(self) -> List[str]:
         return list(self.ctx.store.hget(f"pilot:{self.id}", "running", []))

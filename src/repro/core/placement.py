@@ -40,6 +40,12 @@ class Candidate:
     pilot: PilotCompute
     t_queue: float
     t_stage: float
+    #: fractional chunk locality: bytes of the CU's input chunks already
+    #: present at the pilot (sandbox-cached or linkable) / total input
+    #: bytes.  1.0 = fully local (or no inputs), 0.0 = everything remote.
+    #: Partial replicas score partially — the chunk-granular replacement
+    #: for the old boolean has-replica test.
+    locality: float = 1.0
 
     @property
     def score(self) -> float:
@@ -96,8 +102,9 @@ class PlacementEngine:
         return max(tq, 0.0)
 
     def stage_estimate(self, cu: ComputeUnit, pilot: PilotCompute) -> float:
-        """Σ over input DUs of the cheapest-replica staging cost to
-        ``pilot`` (0 for sandbox cache hits and linkable replicas)."""
+        """Σ over input DUs of the striped multi-source staging cost of the
+        *missing chunks* to ``pilot`` (0 for sandbox cache hits and linkable
+        full replicas; partial holdings only pay for the remainder)."""
         t_stage = 0.0
         ts = self.ctx.transfer_service
         for du_id in cu.description.input_data:
@@ -106,6 +113,30 @@ class PlacementEngine:
                 continue  # pilot-level cache hit
             t_stage += ts.estimate_stage_cost(du, pilot.affinity, pilot.sandbox)
         return t_stage
+
+    def chunk_locality(self, cu: ComputeUnit, pilot: PilotCompute) -> float:
+        """Fraction of the CU's input bytes whose chunks are already at the
+        pilot — in its sandbox or in any PD linkable from its location.
+        A DU replicated halfway scores 0.5, not 0 (the chunk-granular
+        upgrade of the old boolean ``has_du`` locality test)."""
+        ts = self.ctx.transfer_service
+        total = 0
+        local = 0
+        for du_id in cu.description.input_data:
+            du = self.ctx.lookup(du_id)
+            chunks = du.chunks
+            total += du.size
+            if not chunks:
+                continue
+            here = set(pilot.sandbox.chunks_held(du.id))
+            for pd_id, idxs in du.chunk_holders().items():
+                if pd_id == pilot.sandbox.id or pd_id not in self.ctx.objects:
+                    continue
+                pd = self.ctx.lookup(pd_id)
+                if ts.is_linkable(pd, pilot.affinity):
+                    here.update(idxs)
+            local += sum(chunks[i].size for i in here if i < len(chunks))
+        return 1.0 if total == 0 else local / total
 
     def candidates(
         self, cu: ComputeUnit, pilots: Sequence[PilotCompute]
@@ -123,6 +154,7 @@ class PlacementEngine:
                     pilot=p,
                     t_queue=self.pilot_tq_estimate(p),
                     t_stage=self.stage_estimate(cu, p),
+                    locality=self.chunk_locality(cu, p),
                 )
             )
         return out
@@ -185,11 +217,15 @@ class CostStrategy(PlacementStrategy):
 
 @register_strategy("data-local")
 class DataLocalStrategy(PlacementStrategy):
-    """Compute-to-data: staging cost dominates the ordering."""
+    """Compute-to-data: fractional chunk locality dominates the ordering —
+    the pilot already holding the most input bytes (partial replicas
+    count pro rata) wins; residual staging cost and queue wait break
+    ties."""
 
     def rank(self, cu, candidates):
         return sorted(
-            candidates, key=lambda c: (c.t_stage, c.t_queue, c.pilot.id)
+            candidates,
+            key=lambda c: (-c.locality, c.t_stage, c.t_queue, c.pilot.id),
         )
 
 

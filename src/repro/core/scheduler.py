@@ -10,14 +10,17 @@ order.  Placement itself is the *same* code path as sync mode
 selected :class:`PlacementStrategy` plugin), so the two modes make
 identical decisions; what the async mode adds is **transfer pipelining**:
 
-  * the moment a CU is bound to a pilot, its input DUs are bulk-staged
-    into the pilot's sandbox on a staging thread-pool — staging of CU B
-    overlaps execution of already-ready CU A instead of serializing in the
-    agent's slot;
-  * multi-DU inputs from one source Pilot-Data coalesce into a single
-    costed bulk transfer (one setup latency + one registration);
-  * the transfer service's in-flight dedup makes the agent's own
-    ``stage_in`` wait on (not repeat) a prefetch already moving the bytes.
+  * the moment a CU is bound to a pilot, its input DUs' *missing chunks*
+    (and only those — a partially-cached sandbox pays just the remainder)
+    are bulk-staged into the pilot's sandbox on a staging thread-pool —
+    staging of CU B overlaps execution of already-ready CU A instead of
+    serializing in the agent's slot;
+  * multi-DU chunk groups from one source Pilot-Data coalesce into a
+    single costed bulk transfer (one setup latency + one registration),
+    while groups from distinct sources stripe in parallel;
+  * the transfer service's chunk-granular in-flight dedup makes the
+    agent's own ``stage_in`` wait on (not repeat) a prefetch already
+    moving those chunks.
 
 Determinism: events carry the store's monotonic sequence number and the
 scheduler processes them strictly in arrival order.  With ``autostart=
@@ -163,9 +166,10 @@ class AsyncScheduler:
             self.cds.recheck_delayed()
 
     def _begin_prefetch(self, cu, pilot) -> None:
-        """Pre-push hook (pipeline entry): claim the input transfers NOW —
-        before the CU is visible to agents — then move the bytes on the
-        staging pool so they overlap whatever the pilot is executing."""
+        """Pre-push hook (pipeline entry): claim the missing input chunks
+        NOW — before the CU is visible to agents — then move the bytes on
+        the staging pool so they overlap whatever the pilot is executing.
+        Chunks the sandbox already holds are never claimed or re-moved."""
         if not cu.description.input_data:
             return
         ts = self.ctx.transfer_service

@@ -148,7 +148,13 @@ class ComputeDataService:
     def submit_data_unit(
         self, desc: DataUnitDescription, target: Optional[PilotData] = None
     ) -> DataUnit:
-        """Create a DU and stage it into an affinity-appropriate PD."""
+        """Create a DU and stage it into an affinity-appropriate PD.
+
+        The DU's physical representation is its chunk manifest
+        (``desc.chunk_size``); the first ingest registers the target PD as
+        a full replica in ``locations`` and further holdings — including
+        partial, chunk-level ones — accumulate in the store's
+        ``du:<id>:chunks`` hash."""
         du = DataUnit(desc, self.ctx.store)
         self.ctx.register(du)
         with self._lock:

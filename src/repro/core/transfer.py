@@ -1,4 +1,5 @@
-"""Transfer service: DU movement between Pilot-Data, with a virtual clock.
+"""Transfer service: chunk-granular DU movement between Pilot-Data, with a
+virtual clock.
 
 Every physical transfer is costed against the topology (bottleneck bandwidth
 along the tree path) *and* the two backend profiles (a GridFTP-class backend
@@ -7,6 +8,15 @@ is exactly the spread the paper measures in Fig. 7).  Real bytes move
 immediately (container-local); the *simulated* duration is recorded per
 transfer so benchmarks reproduce the paper's timing analysis
 deterministically.
+
+The unit of transfer is the **chunk** (see ``DataUnit.chunks``): a stage-in
+computes the destination's *missing* chunk set, assigns each missing chunk
+to its cheapest current holder — full or partial replica alike — with a
+greedy list-schedule that balances bytes across sources, and then moves the
+per-source groups as parallel striped waves: the simulated duration is the
+``max`` over the per-source group times (like ``replicate_group``'s rounds),
+so a cold stage-in stripes from N partial holders instead of serializing
+from one.
 
 Co-location resolves to a **logical link** (§4.3.2: "In the best case, the
 Pilot-Data of the dependent DUs is co-located on the same resource as the
@@ -22,7 +32,7 @@ import dataclasses
 import itertools
 import threading
 import time
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Set, Tuple
 
 from .affinity import match_affinity
 from .cost_model import cheapest_replica
@@ -47,10 +57,28 @@ class TransferRecord:
     pipelined: bool = False
     #: shared id for the per-DU shares of one batched bulk transfer
     batch_id: Optional[str] = None
+    #: chunks moved by this record (0 for links / legacy whole-DU records)
+    chunks: int = 0
+    #: True when this record is one wave of a multi-source striped fetch
+    striped: bool = False
+
+
+@dataclasses.dataclass
+class _FetchGroup:
+    """One striped wave: a set of chunks pulled from one source."""
+
+    src: Optional[PilotData]  # None == DU local buffer (submission host)
+    indices: List[int]
+    nbytes: int
+    sim_seconds: float
+
+
+#: one stager's claim on a set of chunks moving toward one sandbox
+_Claim = Tuple[DataUnit, Set[int], threading.Event]
 
 
 class TransferService:
-    """Moves/links DUs between PDs and accounts simulated T_X/T_S/T_R."""
+    """Moves/links DU chunks between PDs and accounts simulated T_X/T_S/T_R."""
 
     def __init__(self, ctx: RuntimeContext):
         self.ctx = ctx
@@ -58,12 +86,15 @@ class TransferService:
         self._records: List[TransferRecord] = []
         self._lock = threading.Lock()
         self._sim_now = 0.0
-        #: (du_id, dst_pd_id) -> Event for the transfer currently moving
-        #: that DU there; concurrent stagers wait instead of re-paying
-        self._inflight: Dict[Tuple[str, str], threading.Event] = {}
-        #: replica-resolution caches: (du_id, location) -> (loc_version, …)
+        #: (du_id, dst_pd_id) -> list of (chunk set, Event) claims currently
+        #: in flight; the dedup is chunk-granular — a second stager only
+        #: fetches chunks nobody else claimed and *waits* for the rest
+        self._inflight: Dict[Tuple[str, str], List[Tuple[Set[int], threading.Event]]] = {}
+        #: replica-resolution caches, keyed on the DU's location version
+        #: (bumped on every chunk-holding change, so partial-replica
+        #: progress invalidates them too)
         self._resolve_cache: Dict[Tuple[str, str], Tuple[int, Optional[str], bool]] = {}
-        self._estimate_cache: Dict[Tuple[str, str], Tuple[int, float]] = {}
+        self._estimate_cache: Dict[Tuple[str, str, str], Tuple[int, float]] = {}
         self.cache_hits = 0
         self.cache_misses = 0
         self._batch_ids = itertools.count()
@@ -137,13 +168,17 @@ class TransferService:
                 sim_seconds=sim,
                 wall_seconds=time.monotonic() - t0,
                 wall_start=t0,
+                chunks=du.n_chunks,
             )
         )
         return sim
 
     def replicate(self, du: DataUnit, src: PilotData, dst: PilotData) -> float:
-        """Physically replicate a DU between two PDs; returns simulated T_X."""
+        """Physically replicate a DU from ``src`` (a full replica) into
+        ``dst``; only the chunks ``dst`` is missing move (delta transfer).
+        Returns simulated T_X."""
         t0 = time.monotonic()
+        n_missing = len(dst.missing_chunks(du))
         nbytes = dst.copy_du_from(du, src)
         sim = self.simulated_transfer_time(nbytes, src, dst)
         self.ctx.sleep_sim(sim)
@@ -156,23 +191,219 @@ class TransferService:
                 sim_seconds=sim,
                 wall_seconds=time.monotonic() - t0,
                 wall_start=t0,
+                chunks=n_missing,
             )
         )
         return sim
+
+    def replicate_chunks(
+        self,
+        du: DataUnit,
+        src: PilotData,
+        dst: PilotData,
+        indices: Sequence[int],
+    ) -> float:
+        """Move an explicit chunk subset from one holder to another — the
+        disperse phase of chunk-striped group replication."""
+        todo = [i for i in indices if i in set(src.chunks_held(du.id))]
+        if not todo:
+            return 0.0
+        t0 = time.monotonic()
+        nbytes = dst.copy_chunks_from(du, src, todo)
+        if nbytes == 0:
+            return 0.0
+        sim = self.simulated_transfer_time(nbytes, src, dst)
+        self.ctx.sleep_sim(sim)
+        self.record(
+            TransferRecord(
+                du_id=du.id,
+                src_pd=src.id,
+                dst_pd=dst.id,
+                nbytes=nbytes,
+                sim_seconds=sim,
+                wall_seconds=time.monotonic() - t0,
+                wall_start=t0,
+                chunks=len(todo),
+                striped=True,
+            )
+        )
+        return sim
+
+    # -------------------------------------------------- chunk fetch planning
+    def _chunk_sources(
+        self, du: DataUnit, dst: PilotData
+    ) -> List[Tuple[PilotData, Set[int]]]:
+        """Live PDs (full or partial holders) usable as chunk sources."""
+        out: List[Tuple[PilotData, Set[int]]] = []
+        for pd_id, idxs in sorted(du.chunk_holders().items()):
+            if pd_id == dst.id or pd_id not in self.ctx.objects:
+                continue
+            pd = self.ctx.lookup(pd_id)
+            if idxs:
+                out.append((pd, set(idxs)))
+        return out
+
+    def plan_chunk_fetch(
+        self,
+        du: DataUnit,
+        dst: PilotData,
+        location: str,
+        only: Optional[Set[int]] = None,
+    ) -> List[_FetchGroup]:
+        """Assign each missing chunk to a source, balancing finish times.
+
+        Greedy list-schedule: chunks (in index order, deterministic) go to
+        the holder whose per-source stripe would finish earliest after
+        taking the chunk — so a nearby partial holder absorbs chunks until
+        its stripe is as long as the next-best source's.  Chunks held by
+        nobody fall back to the DU's local buffer (submission-host ingest).
+        """
+        missing = dst.missing_chunks(du)
+        if only is not None:
+            missing = [i for i in missing if i in only]
+        if not missing:
+            return []
+        chunks = du.chunks
+        holders = self._chunk_sources(du, dst)
+        topo = self.ctx.topology
+        lat: Dict[str, float] = {}
+        bw: Dict[str, float] = {}
+        for pd, _ in holders:
+            lat[pd.id] = (
+                topo.latency(pd.affinity, location)
+                + pd.backend.profile.op_latency
+                + dst.backend.profile.op_latency
+                + dst.backend.profile.register_latency
+            )
+            bw[pd.id] = min(
+                topo.bandwidth(pd.affinity, location),
+                pd.backend.profile.bandwidth,
+                dst.backend.profile.bandwidth,
+            )
+        assigned: Dict[str, List[int]] = {pd.id: [] for pd, _ in holders}
+        stripe_bytes: Dict[str, int] = {pd.id: 0 for pd, _ in holders}
+        orphans: List[int] = []
+        for i in missing:
+            best: Optional[PilotData] = None
+            best_t = float("inf")
+            for pd, held in holders:
+                if i not in held:
+                    continue
+                nb = stripe_bytes[pd.id] + chunks[i].size
+                t = lat[pd.id] + (0.0 if bw[pd.id] == float("inf") else nb / bw[pd.id])
+                if t < best_t:
+                    best, best_t = pd, t
+            if best is None:
+                orphans.append(i)
+            else:
+                assigned[best.id].append(i)
+                stripe_bytes[best.id] += chunks[i].size
+        groups: List[_FetchGroup] = []
+        for pd, _ in holders:
+            if not assigned[pd.id]:
+                continue
+            nb = stripe_bytes[pd.id]
+            xfer = 0.0 if bw[pd.id] == float("inf") else nb / bw[pd.id]
+            groups.append(
+                _FetchGroup(
+                    src=pd,
+                    indices=assigned[pd.id],
+                    nbytes=nb,
+                    # same lat/bw terms as the greedy assignment above, so
+                    # the planned wave time IS the charged wave time — and
+                    # both honor ``location`` (which may differ from the
+                    # destination PD's own affinity label)
+                    sim_seconds=lat[pd.id] + xfer,
+                )
+            )
+        if orphans:
+            nb = sum(chunks[i].size for i in orphans)
+            groups.append(
+                _FetchGroup(
+                    src=None,
+                    indices=orphans,
+                    nbytes=nb,
+                    sim_seconds=self.simulated_ingest_time(nb, dst),
+                )
+            )
+        return groups
+
+    def _fetch_groups(
+        self,
+        du: DataUnit,
+        dst: PilotData,
+        groups: List[_FetchGroup],
+        register: bool = True,
+        pipelined: bool = False,
+        batch_id: Optional[str] = None,
+    ) -> float:
+        """Materialize planned striped waves; simulated time is the max
+        over the (parallel) per-source waves."""
+        if not groups:
+            return 0.0
+        striped = len(groups) > 1
+        done_sims: List[float] = []
+        for g in groups:
+            t0 = time.monotonic()
+            if g.src is None:
+                dst.put_chunks(du, g.indices, register=register)
+            else:
+                dst.copy_chunks_from(du, g.src, g.indices, register=register)
+            self.record(
+                TransferRecord(
+                    du_id=du.id,
+                    src_pd=g.src.id if g.src is not None else None,
+                    dst_pd=dst.id,
+                    nbytes=g.nbytes,
+                    sim_seconds=g.sim_seconds,
+                    wall_seconds=time.monotonic() - t0,
+                    wall_start=t0,
+                    pipelined=pipelined,
+                    batch_id=batch_id,
+                    chunks=len(g.indices),
+                    striped=striped,
+                )
+            )
+            done_sims.append(g.sim_seconds)
+        sim = max(done_sims)
+        self.ctx.sleep_sim(sim)
+        return sim
+
+    def heal_replica(
+        self,
+        du: DataUnit,
+        dst: PilotData,
+        groups: Optional[List[_FetchGroup]] = None,
+    ) -> float:
+        """Complete a partial replica: stripe ``dst``'s missing chunks in
+        from their cheapest current holders.  Unlike :meth:`stage_in` this
+        always materializes (no logical-link shortcut) — it is the heal
+        phase of chunk-striped group replication, whose contract is that
+        ``dst`` ends holding every chunk physically.
+
+        ``groups`` lets the caller pre-plan against a fixed
+        holdings snapshot; the replication driver plans all targets
+        sequentially before executing them in parallel, so simulated T_R
+        does not depend on thread interleaving (the deterministic-clock
+        contract the CI regression gate relies on)."""
+        if groups is None:
+            groups = self.plan_chunk_fetch(du, dst, dst.affinity)
+        return self._fetch_groups(du, dst, groups)
 
     # --------------------------------------------------------- staging API
     def resolve_access(
         self, du: DataUnit, location: str
     ) -> Tuple[Optional[PilotData], bool]:
-        """Find the best replica of ``du`` for a pilot at ``location``.
+        """Find the best FULL replica of ``du`` for a pilot at ``location``.
 
         Returns (pd, linked): ``linked`` means zero-cost direct access; else
-        ``pd`` is the cheapest replica to transfer from (None if the DU has
-        no replica anywhere — caller falls back to the DU's local buffer).
+        ``pd`` is the cheapest full replica to transfer from (None if the DU
+        has no full replica anywhere — callers then stripe from partial
+        holders and/or the DU's local buffer).
 
         Resolutions are memoized per (DU, location) keyed on the DU's
         replica-set version, so the repeated ``cheapest_replica`` scans of
-        a hot DU collapse to a dict hit until a replica is added/removed.
+        a hot DU collapse to a dict hit until a chunk holding changes.
         """
         ver = du.locations_version
         key = (du.id, location)
@@ -213,25 +444,25 @@ class TransferService:
     def estimate_stage_cost(
         self, du: DataUnit, location: str, sandbox: PilotData
     ) -> float:
-        """Simulated cost of making ``du`` available at ``location`` (0 for
-        linkable replicas), memoized like :meth:`resolve_access`."""
+        """Simulated cost of making ``du`` available at ``location``: 0 for
+        linkable full replicas and fully-cached sandboxes, else the striped
+        multi-source fetch cost of the *missing* chunks only (max over the
+        parallel per-source waves).  Memoized like :meth:`resolve_access`.
+        """
         ver = du.locations_version
-        key = (du.id, location)
+        key = (du.id, location, sandbox.id)
         with self._lock:
             hit = self._estimate_cache.get(key)
             if hit is not None and hit[0] == ver:
                 self.cache_hits += 1
                 return hit[1]
             self.cache_misses += 1
-        pd, linked = self.resolve_access(du, location)
+        _, linked = self.resolve_access(du, location)
         if linked:
             cost = 0.0
-        elif pd is not None:
-            _, cost = cheapest_replica(
-                du.size, [pd.affinity], location, self.ctx.topology
-            )
         else:
-            cost = self.simulated_ingest_time(du.size, sandbox)
+            groups = self.plan_chunk_fetch(du, sandbox, location)
+            cost = max((g.sim_seconds for g in groups), default=0.0)
         with self._lock:
             self._estimate_cache[key] = (ver, cost)
         return cost
@@ -246,15 +477,21 @@ class TransferService:
         """Make ``du`` available to a CU sandbox at ``location``; returns
         simulated staging seconds (0.0 for a logical link).
 
-        Concurrent stagers of the same (DU, sandbox) pair — e.g. two CU
-        slots sharing an input, or an agent racing the async scheduler's
-        prefetch — deduplicate onto one physical transfer: the first caller
-        pays and records it, later callers block until the bytes land and
-        charge nothing.
+        Only the sandbox's *missing* chunks move, striped in parallel from
+        their cheapest current holders (partial replicas included).
+
+        The in-flight dedup is chunk-granular: concurrent stagers of the
+        same (DU, sandbox) — e.g. two CU slots sharing an input, or an
+        agent racing the async scheduler's prefetch — split the missing
+        chunk set instead of re-paying it.  Each caller claims only the
+        chunks nobody else is moving, fetches those, and *waits* for the
+        claims of others, so exactly one physical transfer happens per
+        chunk.
 
         ``use_cache=False`` models the paper's PD-less naive mode: every CU
-        re-stages into its own sandbox — the full transfer cost is charged
-        each time and the sandbox never becomes a replica."""
+        re-stages the whole DU into its own sandbox from one source — the
+        full monolithic transfer cost is charged each time and the sandbox
+        never becomes a replica."""
         if not use_cache:
             t0 = time.monotonic()
             already = sandbox.has_du(du.id)
@@ -277,23 +514,20 @@ class TransferService:
                     sim_seconds=sim,
                     wall_seconds=0.0,
                     wall_start=t0,
+                    chunks=du.n_chunks,
                 )
             )
             return sim
+        if du.n_chunks == 0:
+            # empty DU: register the (vacuously full) holding, move nothing
+            if not sandbox.has_du(du.id):
+                sandbox.put_du(du)
+            return 0.0
         key = (du.id, sandbox.id)
+        total_sim = 0.0
         while True:
             if sandbox.has_du(du.id):
-                return 0.0  # pilot-level cache hit (data-diffusion reuse)
-            with self._lock:
-                other = self._inflight.get(key)
-                if other is None:
-                    done = threading.Event()
-                    self._inflight[key] = done
-                    break
-            # Another thread is moving this DU here: wait, then re-check
-            # (loop handles both completion and a failed first attempt).
-            other.wait(timeout=120.0)
-        try:
+                return total_sim  # pilot-level cache hit (data-diffusion reuse)
             pd, linked = self.resolve_access(du, location)
             if linked:
                 self.record(
@@ -308,48 +542,84 @@ class TransferService:
                         linked=True,
                     )
                 )
-                return 0.0
-            if pd is not None:
-                return self.replicate(du, pd, sandbox)
-            # No replica yet: ingest straight from the DU's local buffer
-            # (submission-machine pull — the paper's "naive" scenarios 1-2).
-            return self.ingest(du, sandbox)
-        finally:
+                return total_sim
+            missing = set(sandbox.missing_chunks(du))
             with self._lock:
-                self._inflight.pop(key, None)
-            done.set()
+                claims = self._inflight.setdefault(key, [])
+                theirs: Set[int] = set()
+                for idxs, _ in claims:
+                    theirs |= idxs
+                mine = missing - theirs
+                if mine:
+                    done = threading.Event()
+                    claims.append((mine, done))
+                    waiting: Optional[List[threading.Event]] = None
+                else:
+                    # everything missing is being moved by someone else:
+                    # wait for their claims to land, then re-check
+                    waiting = [ev for _, ev in claims]
+            if waiting is not None:
+                if not waiting:
+                    continue  # holdings changed mid-check; re-evaluate
+                for ev in waiting:
+                    ev.wait(timeout=120.0)
+                continue
+            try:
+                groups = self.plan_chunk_fetch(du, sandbox, location, only=mine)
+                total_sim += self._fetch_groups(du, sandbox, groups)
+            finally:
+                with self._lock:
+                    entries = self._inflight.get(key, [])
+                    self._inflight[key] = [e for e in entries if e[1] is not done]
+                    if not self._inflight[key]:
+                        self._inflight.pop(key, None)
+                done.set()
+            # loop: either the DU is now fully held, or other stagers'
+            # claims are still landing and we wait for them above
 
     # ---------------------------------------------------- pipelined staging
     def claim_bulk(
         self, dus: Sequence[DataUnit], sandbox: PilotData
-    ) -> List[Tuple[DataUnit, threading.Event]]:
-        """Mark the transferable subset of ``dus`` as in flight toward
+    ) -> List[_Claim]:
+        """Claim the not-yet-in-flight missing chunks of ``dus`` toward
         ``sandbox`` and return the claims.  The async scheduler calls this
         BEFORE the CU is pushed to a pilot queue, so an agent that claims
         the CU immediately still dedups onto the prefetch instead of racing
-        it with its own per-DU transfers.  Pass the result to
+        it with its own per-chunk transfers.  Pass the result to
         :meth:`stage_in_bulk` (or :meth:`release_claims` on abort)."""
-        claimed: List[Tuple[DataUnit, threading.Event]] = []
+        claimed: List[_Claim] = []
         for du in dus:
             if du.size <= 0 or sandbox.has_du(du.id):
                 continue
+            missing = set(sandbox.missing_chunks(du))
+            if not missing:
+                continue
             key = (du.id, sandbox.id)
             with self._lock:
-                if key in self._inflight:
+                claims = self._inflight.setdefault(key, [])
+                theirs: Set[int] = set()
+                for idxs, _ in claims:
+                    theirs |= idxs
+                mine = missing - theirs
+                if not mine:
                     continue
                 done = threading.Event()
-                self._inflight[key] = done
-            claimed.append((du, done))
+                claims.append((mine, done))
+            claimed.append((du, mine, done))
         return claimed
 
     def release_claims(
         self,
-        claimed: List[Tuple[DataUnit, threading.Event]],
+        claimed: List[_Claim],
         sandbox: PilotData,
     ) -> None:
-        for du, done in claimed:
+        for du, _, done in claimed:
+            key = (du.id, sandbox.id)
             with self._lock:
-                self._inflight.pop((du.id, sandbox.id), None)
+                entries = self._inflight.get(key, [])
+                self._inflight[key] = [e for e in entries if e[1] is not done]
+                if not self._inflight[key]:
+                    self._inflight.pop(key, None)
             done.set()
 
     def stage_in_bulk(
@@ -359,34 +629,36 @@ class TransferService:
         location: str,
         pipelined: bool = False,
         batch_id: Optional[str] = None,
-        claimed: Optional[List[Tuple[DataUnit, threading.Event]]] = None,
+        claimed: Optional[List[_Claim]] = None,
         on_complete=None,
     ) -> float:
-        """Stage several DUs into one sandbox, batching same-source
-        transfers into ONE costed bulk transfer (a single per-request setup
-        latency + catalog registration amortized over the batch, instead of
-        paying both per DU).  Per-DU records carry byte-proportional shares
-        of the bulk cost under a shared ``batch_id``.
+        """Stage several DUs into one sandbox, batching same-source chunk
+        groups into ONE costed bulk transfer per source (a single
+        per-request setup latency + catalog registration amortized over the
+        batch, instead of paying both per DU) while distinct sources stripe
+        in parallel (total simulated time = max over the per-source
+        batches).  Per-DU records carry byte-proportional shares of their
+        source batch's cost under a shared ``batch_id``.
 
-        DUs already present, already in flight (another stager owns them),
-        or empty are skipped.  Returns total simulated seconds."""
+        Chunks already present, already in flight (another stager owns
+        them), or belonging to empty DUs are skipped.  Returns the
+        simulated seconds of the slowest source batch."""
         if claimed is None:
             claimed = self.claim_bulk(dus, sandbox)
         try:
-            todo: List[DataUnit] = [du for du, _ in claimed]
-            if not todo:
+            if not claimed:
                 return 0.0
             bid = batch_id or f"batch-{next(self._batch_ids)}"
-            # Resolve every DU, splitting links from per-source groups.
-            groups: Dict[Optional[str], List[Tuple[DataUnit, Optional[PilotData]]]] = {}
-            total_sim = 0.0
-            for du in todo:
-                pd, linked = self.resolve_access(du, location)
+            # Plan every DU's striped fetch, splitting links from per-source
+            # groups; groups sharing a source merge into one bulk transfer.
+            by_src: Dict[Optional[str], List[Tuple[DataUnit, _FetchGroup]]] = {}
+            for du, mine, _ in claimed:
+                src_pd, linked = self.resolve_access(du, location)
                 if linked:
                     self.record(
                         TransferRecord(
                             du_id=du.id,
-                            src_pd=pd.id,
+                            src_pd=src_pd.id if src_pd else None,
                             dst_pd=sandbox.id,
                             nbytes=0,
                             sim_seconds=0.0,
@@ -398,23 +670,27 @@ class TransferService:
                         )
                     )
                     continue
-                groups.setdefault(pd.id if pd else None, []).append((du, pd))
-            for src_id, items in groups.items():
+                for g in self.plan_chunk_fetch(du, sandbox, location, only=mine):
+                    by_src.setdefault(
+                        g.src.id if g.src is not None else None, []
+                    ).append((du, g))
+            wave_sims: List[float] = []
+            for src_id, items in by_src.items():
                 t0 = time.monotonic()
-                src = items[0][1]
+                src = items[0][1].src
                 # Materialize, then cost/record whatever actually moved —
-                # if a copy fails mid-group, the DUs already in the sandbox
-                # are still charged and recorded (no free transfers).
-                moved: List[DataUnit] = []
+                # if a copy fails mid-batch, the chunks already in the
+                # sandbox are still charged and recorded (no free bytes).
+                moved: List[Tuple[DataUnit, _FetchGroup]] = []
                 try:
-                    for du, _ in items:
+                    for du, g in items:
                         if src is None:
-                            sandbox.put_du(du)
+                            sandbox.put_chunks(du, g.indices)
                         else:
-                            sandbox.copy_du_from(du, src)
-                        moved.append(du)
+                            sandbox.copy_chunks_from(du, src, g.indices)
+                        moved.append((du, g))
                 finally:
-                    moved_bytes = sum(du.size for du in moved)
+                    moved_bytes = sum(g.nbytes for _, g in moved)
                     if moved:
                         if src is None:
                             sim = self.simulated_ingest_time(
@@ -424,11 +700,10 @@ class TransferService:
                             sim = self.simulated_transfer_time(
                                 moved_bytes, src, sandbox
                             )
-                        self.ctx.sleep_sim(sim)
                         wall = time.monotonic() - t0
-                        for du in moved:
+                        for du, g in moved:
                             share = (
-                                sim * (du.size / moved_bytes)
+                                sim * (g.nbytes / moved_bytes)
                                 if moved_bytes
                                 else 0.0
                             )
@@ -437,15 +712,20 @@ class TransferService:
                                     du_id=du.id,
                                     src_pd=src_id,
                                     dst_pd=sandbox.id,
-                                    nbytes=du.size,
+                                    nbytes=g.nbytes,
                                     sim_seconds=share,
                                     wall_seconds=wall,
                                     wall_start=t0,
                                     pipelined=pipelined,
                                     batch_id=bid,
+                                    chunks=len(g.indices),
+                                    striped=len(by_src) > 1,
                                 )
                             )
-                        total_sim += sim
+                        wave_sims.append(sim)
+            total_sim = max(wave_sims, default=0.0)
+            if total_sim > 0.0:
+                self.ctx.sleep_sim(total_sim)
             if on_complete is not None:
                 # runs BEFORE claims release, so anyone woken by the
                 # release already sees the completion's side effects
@@ -465,8 +745,8 @@ class TransferService:
         return dus
 
     def prefetch_inputs(self, cu, pilot, claimed=None) -> float:
-        """Async-scheduler hook: bulk-stage a CU's input DUs into its
-        assigned pilot's sandbox ahead of execution, so staging overlaps
+        """Async-scheduler hook: bulk-stage a CU's missing input chunks into
+        its assigned pilot's sandbox ahead of execution, so staging overlaps
         the pilot's current compute.  Records the attributed simulated
         seconds on the CU (``sim_prefetch_s``).
 

@@ -1,0 +1,428 @@
+"""Chunk-granular data path: manifest invariants, partial replicas,
+multi-source striped staging, seal persistence, merge/partition round-trips,
+and fractional chunk-locality placement."""
+
+import threading
+import zlib
+
+import pytest
+
+from repro.core import (
+    ChunkInfo,
+    CoordinationStore,
+    DataUnit,
+    DataUnitDescription,
+    DUState,
+    PilotManager,
+    Topology,
+    merge_dus,
+    partition_du,
+)
+
+
+@pytest.fixture()
+def store():
+    return CoordinationStore()
+
+
+def _topo(*labels, bw=30e6, lat=0.05) -> Topology:
+    t = Topology()
+    for lbl in labels:
+        t.register(lbl, bandwidth=bw, latency=lat)
+    return t
+
+
+# ------------------------------------------------------- manifest invariants
+def test_chunk_manifest_covers_stream_exactly(store):
+    du = DataUnit(
+        DataUnitDescription(
+            name="c",
+            files={"a": b"x" * 1000, "b": b"y" * 2500},
+            chunk_size=1024,
+        ),
+        store,
+    )
+    assert du.n_chunks == 4  # ceil(3500 / 1024)
+    assert sum(c.size for c in du.chunks) == du.size
+    # every chunk except the last is full-size
+    for c in du.chunks[:-1]:
+        assert c.size == 1024
+    # per-chunk checksums match the data
+    for c in du.chunks:
+        assert zlib.crc32(du.chunk_data(c.index)) == c.checksum
+
+
+def test_split_reassemble_identity(store):
+    files = {"a/b": b"0123456789" * 33, "z": b"Q" * 7, "m": b""}
+    du = DataUnit(
+        DataUnitDescription(name="r", files=files, chunk_size=64), store
+    )
+    stream = b"".join(du.chunk_data(i) for i in range(du.n_chunks))
+    expect = b"".join(files[k] for k in sorted(files))
+    assert stream == expect
+    # file_range slices reproduce each file from the stream
+    for rel, data in files.items():
+        lo, hi = du.file_range(rel)
+        assert stream[lo:hi] == data
+
+
+def test_chunks_for_file_ranges(store):
+    du = DataUnit(
+        DataUnitDescription(
+            files={"a": b"1" * 100, "b": b"2" * 100}, chunk_size=64
+        ),
+        store,
+    )
+    # stream: a=[0,100), b=[100,200); chunks of 64 → a: 0,1  b: 1,2,3
+    assert du.chunks_for_file("a") == [0, 1]
+    assert du.chunks_for_file("b") == [1, 2, 3]
+
+
+def test_chunk_manifest_mirrored_to_store(store):
+    du = DataUnit(
+        DataUnitDescription(files={"a": b"k" * 150}, chunk_size=100), store
+    )
+    raw = store.hget(f"du:{du.id}", "chunks")
+    assert [s for s, _ in raw] == [100, 50]
+    assert store.hget(f"du:{du.id}", "chunk_size") == 100
+
+
+def test_add_file_rechunks(store):
+    du = DataUnit(DataUnitDescription(chunk_size=10), store)
+    du.add_file("b", b"B" * 15)
+    assert du.n_chunks == 2
+    du.add_file("a", b"A" * 5)  # sorts before "b": stream shifts
+    assert du.n_chunks == 2
+    assert du.chunk_data(0) == b"A" * 5 + b"B" * 5
+
+
+def test_chunk_size_validation(store):
+    with pytest.raises(ValueError):
+        DataUnit(DataUnitDescription(chunk_size=0), store)
+
+
+# -------------------------------------------------------- seal persistence
+def test_seal_persisted_to_store(store):
+    du = DataUnit(DataUnitDescription(files={"a": b"1"}), store)
+    assert store.hget(f"du:{du.id}", "sealed") is False
+    du.seal()
+    assert store.hget(f"du:{du.id}", "sealed") is True
+    with pytest.raises(RuntimeError, match="immutable"):
+        du.add_file("b", b"2")
+
+
+def test_remote_client_observes_seal(store):
+    """A second handle on the same store sees the seal — immutability is a
+    property of the coordination store, not of one process's flag."""
+    du = DataUnit(DataUnitDescription(files={"a": b"1"}), store)
+    # simulate a remote client: flip the sealed field store-side only
+    store.hset(f"du:{du.id}", "sealed", True)
+    assert du.sealed
+    with pytest.raises(RuntimeError, match="immutable"):
+        du.add_file("b", b"2")
+
+
+def test_first_replica_seals_via_store():
+    topo = _topo("site:a")
+    with PilotManager(topology=topo) as mgr:
+        pd = mgr.start_pilot_data(service_url="mem://site:a/pd", affinity="site:a")
+        du = mgr.submit_du(name="s", files={"a": b"z" * 256}, target=pd)
+        assert du.wait() == DUState.READY
+        assert mgr.store.hget(f"du:{du.id}", "sealed") is True
+        with pytest.raises(RuntimeError, match="immutable"):
+            du.add_file("late", b"no")
+
+
+def test_reattach_preserves_seal_and_manifest():
+    """A second handle on an existing DU id adopts the store's state
+    instead of wiping it — the persisted seal survives reconnect."""
+    topo = _topo("site:a")
+    with PilotManager(topology=topo) as mgr:
+        pd = mgr.start_pilot_data(service_url="mem://site:a/pd", affinity="site:a")
+        du = mgr.submit_du(name="orig", files={"a": b"q" * 300}, chunk_size=128, target=pd)
+        assert du.wait() == DUState.READY
+        clone = DataUnit(DataUnitDescription(), mgr.store, du_id=du.id)
+        assert clone.sealed
+        assert clone.manifest == du.manifest
+        assert [(c.size, c.checksum) for c in clone.chunks] == [
+            (c.size, c.checksum) for c in du.chunks
+        ]
+        assert clone.locations == du.locations
+        with pytest.raises(RuntimeError, match="immutable"):
+            clone.add_file("b", b"2")
+        # re-creating a sealed DU with new content is refused outright
+        with pytest.raises(RuntimeError, match="sealed"):
+            DataUnit(
+                DataUnitDescription(files={"evil": b"x"}), mgr.store, du_id=du.id
+            )
+
+
+def test_fetch_du_file_for_unregistered_du():
+    """PDs can serve files of DUs staged directly into them (partition/
+    merge outputs) even when the DU was never registered in ctx.objects."""
+    topo = _topo("site:a")
+    with PilotManager(topology=topo) as mgr:
+        pd = mgr.start_pilot_data(service_url="mem://site:a/pd", affinity="site:a")
+        du = DataUnit(
+            DataUnitDescription(name="side", files={"f": b"side-channel"}),
+            mgr.store,
+        )
+        assert du.id not in mgr.ctx.objects
+        pd.put_du(du)
+        assert pd.fetch_du_file(du.id, "f") == b"side-channel"
+
+
+# ------------------------------------------------------------ partial replicas
+def test_partial_replicas_first_class():
+    topo = _topo("site:a", "site:b", "site:c")
+    with PilotManager(topology=topo) as mgr:
+        src = mgr.start_pilot_data(service_url="mem://site:a/src", affinity="site:a")
+        part = mgr.start_pilot_data(service_url="mem://site:b/p", affinity="site:b")
+        du = mgr.submit_du(
+            name="p", files={"blob": b"d" * 4096}, chunk_size=1024, target=src
+        )
+        du.wait()
+        assert du.n_chunks == 4
+        mgr.transfer.replicate_chunks(du, src, part, [0, 1])
+        # partial holder: visible in chunk_holders, absent from locations
+        holders = du.chunk_holders()
+        assert holders[part.id] == [0, 1]
+        assert part.id not in du.locations
+        assert not part.has_du(du.id)
+        assert part.chunks_held(du.id) == [0, 1]
+        assert part.missing_chunks(du) == [2, 3]
+        # healing to a full replica promotes it into locations
+        mgr.transfer.replicate_chunks(du, src, part, [2, 3])
+        assert part.has_du(du.id)
+        assert part.id in du.locations
+        assert part.verify_du(du)
+
+
+def test_multi_source_striped_stage_in():
+    """A cold sandbox stripes its chunks from several partial holders in
+    parallel waves: T = max over per-source groups, not the sum."""
+    topo = _topo("site:a", "site:b", "site:dst")
+    with PilotManager(topology=topo) as mgr:
+        pa = mgr.start_pilot_data(service_url="mem://site:a/pd", affinity="site:a")
+        pb = mgr.start_pilot_data(service_url="mem://site:b/pd", affinity="site:b")
+        dst = mgr.start_pilot_data(
+            service_url="mem://site:dst/sb", affinity="site:dst"
+        )
+        du = mgr.submit_du(
+            name="m", files={"blob": b"e" * 8192}, chunk_size=1024, target=pa
+        )
+        du.wait()
+        # pb holds the odd half
+        mgr.transfer.replicate_chunks(du, pa, pb, [1, 3, 5, 7])
+        mgr.transfer.reset_records()
+        sim = mgr.transfer.stage_in(du, dst, "site:dst")
+        recs = [r for r in mgr.transfer.records() if r.dst_pd == dst.id]
+        srcs = {r.src_pd for r in recs}
+        assert srcs == {pa.id, pb.id}  # both holders served chunks
+        assert all(r.striped for r in recs)
+        assert sum(r.chunks for r in recs) == 8
+        # parallel waves: total is the max of the groups, not their sum
+        assert sim == pytest.approx(max(r.sim_seconds for r in recs))
+        assert sim < sum(r.sim_seconds for r in recs)
+        assert dst.has_du(du.id) and dst.verify_du(du)
+
+
+def test_striped_beats_single_source():
+    """Two half-holders stage a DU faster than one full holder at the same
+    topology distance (the tentpole claim, unit-sized)."""
+    topo = _topo("site:a", "site:b", "site:full", "site:d1", "site:d2")
+    with PilotManager(topology=topo) as mgr:
+        full = mgr.start_pilot_data(
+            service_url="mem://site:full/pd", affinity="site:full"
+        )
+        du = mgr.submit_du(
+            name="v", files={"blob": b"w" * 16384}, chunk_size=1024, target=full
+        )
+        du.wait()
+        d1 = mgr.start_pilot_data(service_url="mem://site:d1/sb", affinity="site:d1")
+        t_mono = mgr.transfer.stage_in(du, d1, "site:d1", use_cache=False)
+        pa = mgr.start_pilot_data(service_url="mem://site:a/pd", affinity="site:a")
+        pb = mgr.start_pilot_data(service_url="mem://site:b/pd", affinity="site:b")
+        mgr.transfer.replicate_chunks(du, full, pa, list(range(0, 16, 2)))
+        mgr.transfer.replicate_chunks(du, full, pb, list(range(1, 16, 2)))
+        d2 = mgr.start_pilot_data(service_url="mem://site:d2/sb", affinity="site:d2")
+        t_striped = mgr.transfer.stage_in(du, d2, "site:d2")
+        assert t_striped < t_mono
+
+
+def test_concurrent_stagers_split_chunks():
+    """Chunk-granular in-flight dedup: racing stagers never move the same
+    chunk twice into one sandbox."""
+    topo = _topo("site:a", "site:dst")
+    with PilotManager(topology=topo) as mgr:
+        src = mgr.start_pilot_data(service_url="mem://site:a/pd", affinity="site:a")
+        dst = mgr.start_pilot_data(
+            service_url="mem://site:dst/sb", affinity="site:dst"
+        )
+        du = mgr.submit_du(
+            name="race", files={"blob": b"r" * 8192}, chunk_size=512, target=src
+        )
+        du.wait()
+        mgr.transfer.reset_records()
+        threads = [
+            threading.Thread(
+                target=mgr.transfer.stage_in, args=(du, dst, "site:dst")
+            )
+            for _ in range(4)
+        ]
+        [t.start() for t in threads]
+        [t.join(timeout=30) for t in threads]
+        assert dst.has_du(du.id)
+        moved = sum(
+            r.chunks for r in mgr.transfer.records() if r.dst_pd == dst.id
+        )
+        assert moved == du.n_chunks  # each chunk moved exactly once
+        assert dst.verify_du(du)
+
+
+# ------------------------------------------------- partition/merge round-trips
+def test_partition_merge_roundtrip(store):
+    files = {f"f{i}": bytes([65 + i]) * (10 * i + 1) for i in range(9)}
+    du = DataUnit(DataUnitDescription(name="big", files=files), store)
+    parts = partition_du(du, 4, store)
+    merged = merge_dus(parts, store, name="back")
+    got = {
+        rel.split("/", 1)[1]: data for rel, data in merged.iter_files()
+    }
+    assert got == files
+    assert merged.size == du.size
+
+
+def test_partition_preserves_chunk_size_and_affinity(store):
+    du = DataUnit(
+        DataUnitDescription(
+            name="g",
+            files={"a": b"1" * 100},
+            affinity="cluster:pod0",
+            chunk_size=7,
+        ),
+        store,
+    )
+    parts = partition_du(du, 2, store)
+    for p in parts:
+        assert p.description.chunk_size == 7
+        assert p.affinity == "cluster:pod0"
+
+
+def test_merge_propagates_agreeing_affinity(store):
+    dus = [
+        DataUnit(
+            DataUnitDescription(files={"x": b"1"}, affinity="cluster:pod1"),
+            store,
+        )
+        for _ in range(3)
+    ]
+    merged = merge_dus(dus, store)
+    assert merged.affinity == "cluster:pod1"
+
+
+def test_merge_drops_disagreeing_affinity(store):
+    d1 = DataUnit(
+        DataUnitDescription(files={"x": b"1"}, affinity="cluster:pod0"), store
+    )
+    d2 = DataUnit(
+        DataUnitDescription(files={"y": b"2"}, affinity="cluster:pod1"), store
+    )
+    assert merge_dus([d1, d2], store).affinity is None
+
+
+def test_merge_verifies_checksums(store):
+    du = DataUnit(DataUnitDescription(files={"x": b"good"}), store)
+    du._files["x"] = b"evil"  # corrupt the staging buffer behind the API
+    with pytest.raises(RuntimeError, match="checksum mismatch"):
+        merge_dus([du], store)
+
+
+def test_merge_sealed_sources_ok(store):
+    d1 = DataUnit(DataUnitDescription(files={"x": b"1"}), store)
+    d1.seal()
+    merged = merge_dus([d1], store)
+    assert merged.manifest == {f"{d1.id}/x": 1}
+    assert not merged.sealed  # the gather output is a fresh, open DU
+
+
+def test_merge_dropped_buffer_raises():
+    topo = _topo("site:a")
+    with PilotManager(topology=topo) as mgr:
+        pd = mgr.start_pilot_data(service_url="mem://site:a/pd", affinity="site:a")
+        du = mgr.submit_du(name="d", files={"x": b"1" * 64}, target=pd)
+        du.wait()
+        du.drop_local_buffer()
+        with pytest.raises(RuntimeError, match="buffer dropped"):
+            merge_dus([du], mgr.store)
+
+
+def test_partition_dropped_buffer_raises():
+    topo = _topo("site:a")
+    with PilotManager(topology=topo) as mgr:
+        pd = mgr.start_pilot_data(service_url="mem://site:a/pd", affinity="site:a")
+        du = mgr.submit_du(name="d", files={"x": b"1" * 64}, target=pd)
+        du.wait()
+        du.drop_local_buffer()
+        with pytest.raises(RuntimeError, match="no local buffer"):
+            partition_du(du, 2, mgr.store)
+
+
+def test_partition_sealed_du_allowed(store):
+    """Sealing freezes the DU itself; deriving new DUs from it is fine."""
+    du = DataUnit(DataUnitDescription(files={"a": b"1", "b": b"2"}), store)
+    du.seal()
+    parts = partition_du(du, 2, store)
+    assert sum(len(p.manifest) for p in parts) == 2
+
+
+# ------------------------------------------------------- event-driven waits
+def test_du_wait_event_driven(store):
+    du = DataUnit(DataUnitDescription(files={"a": b"1"}), store)
+
+    def promote():
+        store.hset(f"du:{du.id}", "state", DUState.READY)
+
+    t = threading.Timer(0.05, promote)
+    t.start()
+    assert du.wait(timeout=5.0) == DUState.READY
+    t.join()
+
+
+def test_wait_field_timeout_returns_last_value(store):
+    store.hset("k", "state", "Pending")
+    v = store.wait_field("k", "state", lambda s: s == "Done", timeout=0.1)
+    assert v == "Pending"
+
+
+def test_pilot_wait_active_event_driven():
+    topo = _topo("site:a")
+    with PilotManager(topology=topo) as mgr:
+        p = mgr.start_pilot(resource_url="sim://site:a")
+        assert p.wait_active(timeout=10.0) == "Active"
+
+
+# -------------------------------------------------- fractional chunk locality
+def test_fractional_chunk_locality_scoring():
+    topo = _topo("site:a", "site:b", "site:c")
+    with PilotManager(topology=topo) as mgr:
+        pa = mgr.start_pilot_data(service_url="mem://site:a/pd", affinity="site:a")
+        pb = mgr.start_pilot_data(service_url="mem://site:b/pd", affinity="site:b")
+        du = mgr.submit_du(
+            name="loc", files={"blob": b"l" * 4096}, chunk_size=1024, target=pa
+        )
+        du.wait()
+        mgr.transfer.replicate_chunks(du, pa, pb, [0])  # 1/4 of the bytes
+        pilots = {
+            s: mgr.start_pilot(resource_url=f"sim://{s}", slots=0)
+            for s in ("site:a", "site:b", "site:c")
+        }
+        [p.wait_active() for p in pilots.values()]
+        cu = mgr.submit_cu(executable="noop-loc", input_data=[du.id])
+        engine = mgr.cds.engine
+        loc = {
+            s: engine.chunk_locality(cu, p) for s, p in pilots.items()
+        }
+        assert loc["site:a"] == 1.0  # full replica linkable
+        assert loc["site:b"] == pytest.approx(0.25)  # one of four chunks
+        assert loc["site:c"] == 0.0

@@ -1,0 +1,75 @@
+"""Property tests for the chunk manifest: split→reassemble is identity and
+checksums are stable across recomputation, for arbitrary file sets and
+chunk sizes."""
+
+import zlib
+
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis")
+
+from hypothesis import given, settings, strategies as st
+
+from repro.core import CoordinationStore, DataUnit, DataUnitDescription
+
+_files = st.dictionaries(
+    keys=st.text(
+        alphabet="abcdefgh123", min_size=1, max_size=8
+    ).filter(lambda s: ".." not in s),
+    values=st.binary(min_size=0, max_size=2048),
+    min_size=0,
+    max_size=6,
+)
+
+
+@settings(max_examples=60, deadline=None)
+@given(files=_files, chunk_size=st.integers(min_value=1, max_value=4096))
+def test_split_reassemble_is_identity(files, chunk_size):
+    store = CoordinationStore()
+    du = DataUnit(
+        DataUnitDescription(files=files, chunk_size=chunk_size), store
+    )
+    stream = b"".join(du.chunk_data(i) for i in range(du.n_chunks))
+    assert stream == b"".join(files[k] for k in sorted(files))
+    assert sum(c.size for c in du.chunks) == du.size
+    # every file's byte range slices back out of the stream
+    for rel, data in files.items():
+        lo, hi = du.file_range(rel)
+        assert stream[lo:hi] == data
+    # all chunks but the last are exactly chunk_size
+    for c in du.chunks[:-1]:
+        assert c.size == chunk_size
+
+
+@settings(max_examples=40, deadline=None)
+@given(files=_files, chunk_size=st.integers(min_value=1, max_value=512))
+def test_chunk_checksums_stable(files, chunk_size):
+    store = CoordinationStore()
+    d1 = DataUnit(
+        DataUnitDescription(files=files, chunk_size=chunk_size), store
+    )
+    d2 = DataUnit(
+        DataUnitDescription(files=dict(files), chunk_size=chunk_size), store
+    )
+    assert [(c.size, c.checksum) for c in d1.chunks] == [
+        (c.size, c.checksum) for c in d2.chunks
+    ]
+    for c in d1.chunks:
+        assert zlib.crc32(d1.chunk_data(c.index)) == c.checksum
+
+
+@settings(max_examples=40, deadline=None)
+@given(files=_files.filter(bool), chunk_size=st.integers(min_value=1, max_value=256))
+def test_incremental_add_matches_batch(files, chunk_size):
+    """Adding files one-by-one re-chunks to the same table as constructing
+    the DU with all files up front."""
+    store = CoordinationStore()
+    batch = DataUnit(
+        DataUnitDescription(files=files, chunk_size=chunk_size), store
+    )
+    inc = DataUnit(DataUnitDescription(chunk_size=chunk_size), store)
+    for rel, data in files.items():
+        inc.add_file(rel, data)
+    assert [(c.size, c.checksum) for c in inc.chunks] == [
+        (c.size, c.checksum) for c in batch.chunks
+    ]
