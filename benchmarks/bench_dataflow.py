@@ -1,0 +1,235 @@
+"""Dataflow DAG makespan: one-shot declarative submission vs v1-style
+submit-wait-submit.
+
+A 3-stage map → shuffle → reduce DAG whose every stage edge crosses a
+2 MB/s WAN link (maps pinned to site A, shuffles to site B, reduce back to
+A), run three ways over the SAME workload:
+
+  sequential      — Pilot-API v1 pattern: submit a stage, block until it
+                    completes, submit the next.  Stage barriers on the
+                    user side; agents pay all staging in-slot.
+  oneshot_sync    — whole DAG submitted upfront through a Session; the
+                    DU-readiness gate sequences stages, so a consumer
+                    starts the moment its producers seal (no stage-wide
+                    barrier), but agents still stage in-slot.
+  oneshot_async   — same one-shot DAG under the event-driven scheduler:
+                    a released consumer's inputs are prefetched on the
+                    staging pool, overlapping stage i+1's stage-in with
+                    stage i's remaining execution across DAG edges.
+
+Wall-clock rows use ``time_scale`` (simulated seconds become real sleeps);
+the ``blocking_stage_sim`` rows are deterministic simulated seconds charged
+on the CUs' critical paths and carry the overlap claim reproducibly.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List
+
+from repro.core import (
+    CUState,
+    DataUnitDescription,
+    FUNCTIONS,
+    Session,
+    Topology,
+)
+
+from .common import MB, Timer, emit
+
+SITE_A, SITE_B = "wan:sitea", "wan:siteb"
+N_MAP = 4
+#: 0.5 MB/s link → 2 s sim per 1 MB input, 1 s per 0.5 MB stage output;
+#: small real payloads + a large time_scale keep the wall-clock rows
+#: dominated by simulated (deterministic) durations, not scheduler noise
+IN_BYTES = int(1 * MB)
+MID_BYTES = int(0.5 * MB)
+COMPUTE_S = 2.0
+TIME_SCALE = 0.05
+
+
+def _topology() -> Topology:
+    topo = Topology()
+    topo.register(SITE_A, bandwidth=0.5 * MB, latency=0.05)
+    topo.register(SITE_B, bandwidth=0.5 * MB, latency=0.05)
+    return topo
+
+
+def _register(tag: str) -> None:
+    def mapper(cu_ctx):
+        du = cu_ctx.input_dus()[0]
+        n = sum(len(cu_ctx.read_input(du.id, rel)) for rel in du.manifest)
+        cu_ctx.write_output("m", b"M" * MID_BYTES)
+        return n
+
+    def shuffler(cu_ctx):
+        n = 0
+        for du in cu_ctx.input_dus():
+            n += sum(len(cu_ctx.read_input(du.id, r)) for r in du.manifest)
+        cu_ctx.write_output("s", b"S" * MID_BYTES)
+        return n
+
+    def reducer(cu_ctx):
+        n = 0
+        for du in cu_ctx.input_dus():
+            n += sum(len(cu_ctx.read_input(du.id, r)) for r in du.manifest)
+        return n
+
+    FUNCTIONS.register(f"dfb-map:{tag}", mapper)
+    FUNCTIONS.register(f"dfb-shuffle:{tag}", shuffler)
+    FUNCTIONS.register(f"dfb-reduce:{tag}", reducer)
+
+
+def _setup(tag: str, mode: str) -> tuple:
+    sess = Session(
+        topology=_topology(), scheduler_mode=mode, time_scale=TIME_SCALE
+    )
+    pd = sess.start_pilot_data(service_url=f"mem://{SITE_B}/pd-{tag}", affinity=SITE_B)
+    pa = sess.start_pilot(resource_url=f"sim://{SITE_A}", slots=2)
+    pb = sess.start_pilot(resource_url=f"sim://{SITE_B}", slots=2)
+    pa.wait_active(), pb.wait_active()
+    parts = [
+        sess.submit_du(
+            name=f"in-{tag}-{i}", files={"d": b"I" * IN_BYTES}, target=pd
+        )
+        for i in range(N_MAP)
+    ]
+    [p.wait() for p in parts]
+    return sess, parts
+
+
+def _stage_cus(sess, tag: str, stage: str, inputs: List, affinity: str):
+    """One stage's CUs: each consumes ``inputs`` and produces one DU."""
+    out = DataUnitDescription(name=f"{stage}-{tag}-out")
+    return sess.submit_cu(
+        executable=f"dfb-{stage}:{tag}",
+        input_data=inputs,
+        output_data=[out] if stage != "reduce" else [],
+        affinity=affinity,
+        sim_compute_s=COMPUTE_S,
+    )
+
+
+def _submit_dag(sess, tag: str, parts: List) -> tuple:
+    """The whole 3-stage DAG, wired by object, zero user-side waits."""
+    maps = [
+        _stage_cus(sess, tag, "map", [p], SITE_A) for p in parts
+    ]
+    shuffles = [
+        _stage_cus(
+            sess, tag, "shuffle",
+            [m.output for m in maps[i::2]], SITE_B,
+        )
+        for i in range(2)
+    ]
+    reduce_ = _stage_cus(
+        sess, tag, "reduce", [sh.output for sh in shuffles], SITE_A
+    )
+    return maps, shuffles, reduce_
+
+
+def _collect(sess, cus) -> Dict[str, float]:
+    blocking = sum(cu.timings.sim_stage_s for cu in cus)
+    prefetched = sum(cu.timings.sim_prefetch_s for cu in cus)
+    for cu in cus:
+        assert cu.state == CUState.DONE, (cu.id, cu.state, cu.error)
+    return {"blocking": blocking, "prefetched": prefetched}
+
+
+def _run_sequential(tag: str) -> Dict[str, float]:
+    """v1 pattern: a stage is submitted only after the previous one is
+    fully terminal (user-side barrier)."""
+    _register(tag)
+    sess, parts = _setup(tag, "sync")
+    try:
+        with Timer() as t:
+            maps = [_stage_cus(sess, tag, "map", [p], SITE_A) for p in parts]
+            assert sess.wait(timeout=240)
+            shuffles = [
+                _stage_cus(
+                    sess, tag, "shuffle",
+                    [m.output for m in maps[i::2]], SITE_B,
+                )
+                for i in range(2)
+            ]
+            assert sess.wait(timeout=240)
+            reduce_ = _stage_cus(
+                sess, tag, "reduce", [sh.output for sh in shuffles], SITE_A
+            )
+            assert reduce_.result(timeout=240) == 2 * MID_BYTES
+        stats = _collect(sess, [*maps, *shuffles, reduce_])
+        stats["wall"] = t.wall
+        return stats
+    finally:
+        sess.close()
+
+
+def _run_oneshot(tag: str, mode: str) -> Dict[str, float]:
+    _register(tag)
+    sess, parts = _setup(tag, mode)
+    try:
+        with Timer() as t:
+            maps, shuffles, reduce_ = _submit_dag(sess, tag, parts)
+            assert reduce_.result(timeout=240) == 2 * MID_BYTES
+        stats = _collect(sess, [*maps, *shuffles, reduce_])
+        stats["wall"] = t.wall
+        return stats
+    finally:
+        sess.close()
+
+
+def run() -> List[str]:
+    rows: List[str] = []
+    seq = _run_sequential("seq")
+    one_sync = _run_oneshot("osync", "sync")
+    one_async = _run_oneshot("oasync", "async")
+    for name, r in (
+        ("sequential_sync", seq),
+        ("oneshot_sync", one_sync),
+        ("oneshot_async", one_async),
+    ):
+        rows.append(
+            emit(f"dataflow.{name}.wall_s", r["wall"] * 1e6, f"{r['wall']:.3f}s")
+        )
+        rows.append(
+            emit(
+                f"dataflow.{name}.blocking_stage_sim",
+                r["blocking"] * 1e6,
+                f"{r['blocking']:.1f} sim-s blocking "
+                f"(+{r['prefetched']:.1f} overlapped)",
+            )
+        )
+    rows.append(
+        emit(
+            "dataflow.claim.oneshot_async_beats_sequential_wall",
+            0.0,
+            f"{one_async['wall']:.3f}<{seq['wall']:.3f}:"
+            f"{one_async['wall'] < seq['wall']}",
+        )
+    )
+    rows.append(
+        emit(
+            "dataflow.claim.async_overlaps_cross_stage_staging",
+            0.0,
+            # blocking critical-path staging is the deterministic signal;
+            # the prefetched total is informational (its store attribution
+            # can race the agent's read and undercount)
+            f"blocking {one_async['blocking']:.1f}<{seq['blocking']:.1f} "
+            f"(prefetched~{one_async['prefetched']:.1f}):"
+            f"{one_async['blocking'] < seq['blocking']}",
+        )
+    )
+    rows.append(
+        emit(
+            "dataflow.claim.oneshot_not_slower_than_sequential",
+            0.0,
+            f"{one_sync['wall']:.3f} vs {seq['wall']:.3f}:"
+            f"{one_sync['wall'] < seq['wall'] * 1.1}",
+        )
+    )
+    return rows
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    for _ in run():
+        pass

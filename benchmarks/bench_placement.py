@@ -93,9 +93,9 @@ def _ingest_td(mgr) -> float:
 
 def _run_tasks(mgr, tag, ref, parts, pilot=None, affinity=None, cache=True):
     cus = [
-        mgr.submit_cu(
+        mgr.session.submit_cu(
             executable=f"bwa:{tag}",
-            input_data=[ref.id, parts[i].id],
+            input_data=[ref, parts[i]],
             pilot=pilot.id if pilot else None,
             affinity=affinity,
             sim_compute_s=TASK_COMPUTE_S,
@@ -168,9 +168,9 @@ def _strategy_decisions(strategy: str, mode: str, n_cus: int = 8) -> List[str]:
         )
         du.wait()
         for i in range(n_cus):
-            mgr.submit_cu(
+            mgr.session.submit_cu(
                 executable=f"eq:{strategy}:{mode}",
-                input_data=[du.id] if i % 2 == 0 else [],
+                input_data=[du] if i % 2 == 0 else [],
             )
         deadline = time.monotonic() + 15
         while (

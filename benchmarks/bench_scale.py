@@ -30,9 +30,8 @@ from typing import Dict, List, Tuple
 
 from repro.core import (
     CUState,
-    DataUnitDescription,
     FUNCTIONS,
-    PilotManager,
+    Session,
     Topology,
     estimate_tx,
     replicate_group,
@@ -68,6 +67,7 @@ def _des_schedule(
     machines: List[str],
     stage_cost: Dict[str, float],
     n_slots: Dict[str, int],
+    queue_s: Dict[str, float],
 ) -> Tuple[float, Dict[str, int]]:
     """Slot-level event replay: each task goes wherever it would FINISH
     earliest (queue wait + staging + contention-stretched compute).
@@ -75,7 +75,7 @@ def _des_schedule(
     Remote staging (stage_cost > 0) SERIALIZES on the home machine's
     outbound uplink — concurrent 9 GB pulls share one link, which is what
     limited the paper's scenario 2 to ~5 % remote tasks."""
-    per_machine = {m: [QUEUE_S[m]] * n_slots[m] for m in machines}
+    per_machine = {m: [queue_s[m]] * n_slots[m] for m in machines}
     for m in machines:
         heapq.heapify(per_machine[m])
     split = {m: 0 for m in machines}
@@ -109,21 +109,28 @@ def _des_schedule(
 def _run_scenario(
     tag: str, machines: List[str], replicate: bool, n_tasks: int
 ) -> Dict:
-    mgr = PilotManager(topology=_topology())
+    sess = Session(topology=_topology())
     pds = {
-        m: mgr.start_pilot_data(service_url=f"mem://{m}/pd-{tag}", affinity=m)
+        m: sess.start_pilot_data(service_url=f"mem://{m}/pd-{tag}", affinity=m)
         for m in machines
     }
     home = machines[0]
     nbytes_real = int(TASK_GB * GB * SCALE)
     # one representative DU carries the replica state (all task inputs
     # share placement in these scenarios); T_R measured on the real runtime
-    du = mgr.cds.submit_data_unit(
-        DataUnitDescription(
-            name=f"inputs-{tag}", files={"reads.fq": b"R" * nbytes_real}
-        ),
+    du = sess.submit_du(
+        name=f"inputs-{tag}",
+        files={"reads.fq": b"R" * nbytes_real},
         target=pds[home],
-    )
+    ).du
+    # Quick mode shrinks the ensemble; the batch-queue waits must shrink
+    # proportionally or they dwarf the smaller workload and the paper's
+    # regime (queue time ≈ a few task waves) degenerates — at 128 tasks an
+    # unscaled 8100 s Stampede queue outlasts the whole run, so replication
+    # could never shift the split and the distribution claims went False
+    # (the CHANGES.md PR 2 note).  Full runs (n_tasks = N_TASKS) keep the
+    # paper's absolute queue times.
+    queue_s = {m: QUEUE_S[m] * n_tasks / N_TASKS for m in machines}
     t_d = 0.0
     if replicate and len(machines) > 1:
         others = [pds[m] for m in machines[1:]]
@@ -131,9 +138,9 @@ def _run_scenario(
         # replication overlapped with the pilots' batch-queue wait
         # (scenario 3: "in average the creation of the replica takes 130
         # sec and is negligible"), so only the non-overlapped part counts.
-        per_du = replicate_group(du, pds[home], others, mgr.ctx) / SCALE
-        t_d = max(0.0, per_du - min(QUEUE_S[m] for m in machines[1:]))
-    topo = mgr.topology
+        per_du = replicate_group(du, pds[home], others, sess.ctx) / SCALE
+        t_d = max(0.0, per_du - min(queue_s[m] for m in machines[1:]))
+    topo = sess.topology
     stage_cost = {}
     for m in machines:
         if pds[m].has_du(du.id):
@@ -146,8 +153,10 @@ def _run_scenario(
     n_slots = {
         m: max(8, SLOTS[m] * n_tasks // N_TASKS) for m in machines
     }
-    makespan, split = _des_schedule(n_tasks, machines, stage_cost, n_slots)
-    mgr.shutdown()
+    makespan, split = _des_schedule(
+        n_tasks, machines, stage_cost, n_slots, queue_s
+    )
+    sess.close()
     return {"T": t_d + makespan, "split": split, "t_d": t_d, "stage": stage_cost}
 
 
@@ -200,22 +209,20 @@ def _pipelining_comparison(rows: List[str], n_tasks: int) -> None:
         topo = Topology()
         topo.register(site_a, bandwidth=2 * MB, latency=0.05)
         topo.register(site_b, bandwidth=2 * MB, latency=0.05)
-        mgr = PilotManager(
+        sess = Session(
             topology=topo, scheduler_mode=mode, time_scale=time_scale
         )
         try:
-            pd = mgr.start_pilot_data(
+            pd = sess.start_pilot_data(
                 service_url=f"mem://{site_b}/pd-pipe-{mode}", affinity=site_b
             )
-            pilot = mgr.start_pilot(resource_url=f"sim://{site_a}", slots=1)
+            pilot = sess.start_pilot(resource_url=f"sim://{site_a}", slots=1)
             pilot.wait_active()
             FUNCTIONS.register(f"pipe:{mode}", lambda cu_ctx: "ok")
             dus = [
-                mgr.cds.submit_data_unit(
-                    DataUnitDescription(
-                        name=f"pipe-{mode}-{i}",
-                        files={f"part{i}": b"p" * stage_bytes},
-                    ),
+                sess.submit_du(
+                    name=f"pipe-{mode}-{i}",
+                    files={f"part{i}": b"p" * stage_bytes},
                     target=pd,
                 )
                 for i in range(n)
@@ -223,14 +230,14 @@ def _pipelining_comparison(rows: List[str], n_tasks: int) -> None:
             [du.wait() for du in dus]
             with Timer() as t:
                 cus = [
-                    mgr.submit_cu(
+                    sess.submit_cu(
                         executable=f"pipe:{mode}",
-                        input_data=[dus[i].id],
+                        input_data=[dus[i]],
                         sim_compute_s=compute_s,
                     )
                     for i in range(n)
                 ]
-                assert mgr.wait(timeout=120), f"{mode} run did not finish"
+                assert sess.wait(timeout=120), f"{mode} run did not finish"
             for cu in cus:
                 assert cu.state == CUState.DONE, (mode, cu.state, cu.error)
             pairs = [
@@ -242,7 +249,7 @@ def _pipelining_comparison(rows: List[str], n_tasks: int) -> None:
             ]
             results[mode] = {"wall": t.wall, "pairs": pairs}
         finally:
-            mgr.shutdown()
+            sess.close()
     sim_sync = _serial_makespan(results["sync"]["pairs"], slots=1)
     sim_async = _pipelined_makespan(results["async"]["pairs"], slots=1)
     wall_sync = results["sync"]["wall"]

@@ -21,8 +21,9 @@ import sys
 from typing import Dict
 
 #: rows the gate compares: simulated makespans (and the replication /
-#: staging T_R-class timings that feed them)
-GATED = re.compile(r"\.makespan$")
+#: staging T_R-class timings that feed them), plus the dataflow DAG's
+#: deterministic critical-path staging totals
+GATED = re.compile(r"\.makespan$|\.blocking_stage_sim$")
 
 
 def load_rows(path: str) -> Dict[str, float]:
@@ -62,7 +63,12 @@ def main() -> None:
             missing.append(name)
             continue
         c = cur[name]
-        delta = (c - b) / b if b > 0 else 0.0
+        if b > 0:
+            delta = (c - b) / b
+        else:
+            # a zero baseline is itself the claim (e.g. the async DAG's
+            # blocking staging must stay 0): ANY growth is a regression
+            delta = 0.0 if c <= 0 else float("inf")
         flag = " <-- REGRESSION" if delta > args.threshold else ""
         print(f"{name:<44} {b:>12.0f} {c:>12.0f} {delta:>+7.1%}{flag}")
         if delta > args.threshold:

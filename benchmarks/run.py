@@ -10,6 +10,8 @@ can archive a perf trajectory artifact per run.
                        + placement-plugin sync/async equivalence
   bench_scale        — Figs. 11–13 (1024 tasks × 1–3 machines ± replication)
                        + async-vs-sync pipelined staging comparison
+  bench_dataflow     — Pilot-API v2 DAG: one-shot declarative submission
+                       (sync + async) vs v1 submit-wait-submit
   bench_cost_model   — §6.1 calculus vs oracle + replication degree
   bench_roofline     — assignment §Roofline terms from dry-run artifacts
 """
@@ -41,6 +43,7 @@ def main() -> None:
 
     from . import (
         bench_cost_model,
+        bench_dataflow,
         bench_placement,
         bench_replication,
         bench_roofline,
@@ -53,6 +56,7 @@ def main() -> None:
         "replication": lambda: bench_replication.run(),
         "placement": lambda: bench_placement.run(),
         "scale": lambda: bench_scale.run(n_tasks=128 if args.quick else 1024),
+        "dataflow": lambda: bench_dataflow.run(),
         "cost_model": lambda: bench_cost_model.run(),
         "roofline": lambda: bench_roofline.run(),
     }

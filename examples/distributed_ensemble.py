@@ -11,9 +11,8 @@ import collections
 
 from repro.core import (
     CUState,
-    DataUnitDescription,
     FUNCTIONS,
-    PilotManager,
+    Session,
     Topology,
     replicate_group,
 )
@@ -30,35 +29,34 @@ def build_mgr(scheduler_mode="sync"):
     topo = Topology()
     topo.register("xsede:lonestar", bandwidth=3.3e3, latency=0.02)  # sim B/s
     topo.register("xsede:stampede", bandwidth=3.3e3, latency=0.02)
-    mgr = PilotManager(topology=topo, scheduler_mode=scheduler_mode)
+    sess = Session(topology=topo, scheduler_mode=scheduler_mode)
     FUNCTIONS.register("analyze", lambda cu_ctx: "done")
-    return mgr
+    return sess
 
 
 def run(replicate: bool, scheduler_mode: str = "sync", remote_only: bool = False):
     """``remote_only``: compute exists only on Stampede while the data
     lives on Lonestar — every task must move its input, the regime where
     the async scheduler's prefetch pipeline pays off."""
-    mgr = build_mgr(scheduler_mode)
-    pd_ls = mgr.start_pilot_data(
+    sess = build_mgr(scheduler_mode)
+    pd_ls = sess.start_pilot_data(
         service_url="mem://xsede:lonestar/pd", affinity="xsede:lonestar"
     )
-    pd_st = mgr.start_pilot_data(
+    pd_st = sess.start_pilot_data(
         service_url="mem://xsede:stampede/pd", affinity="xsede:stampede"
     )
     pilots = []
     if not remote_only:
         pilots.append(
-            mgr.start_pilot(resource_url="sim://xsede:lonestar", slots=4)
+            sess.start_pilot(resource_url="sim://xsede:lonestar", slots=4)
         )
-    pilots.append(mgr.start_pilot(resource_url="sim://xsede:stampede", slots=4))
+    pilots.append(sess.start_pilot(resource_url="sim://xsede:stampede", slots=4))
     [p.wait_active() for p in pilots]
 
     dus = [
-        mgr.cds.submit_data_unit(
-            DataUnitDescription(
-                name=f"input{i}", files={"data": b"d" * int(1.2 * MB)}
-            ),
+        sess.submit_du(
+            name=f"input{i}",
+            files={"data": b"d" * int(1.2 * MB)},
             target=pd_ls,
         )
         for i in range(N_TASKS)
@@ -66,26 +64,26 @@ def run(replicate: bool, scheduler_mode: str = "sync", remote_only: bool = False
     t_r = 0.0
     if replicate:
         for du in dus:
-            t_r += replicate_group(du, pd_ls, [pd_st], mgr.ctx)
+            t_r += replicate_group(du.du, pd_ls, [pd_st], sess.ctx)
     cus = [
-        mgr.submit_cu(
+        sess.submit_cu(
             executable="analyze",
-            input_data=[du.id],
+            input_data=[du],
             sim_compute_s=TASK_COMPUTE_S,
         )
         for du in dus
     ]
-    assert mgr.wait(timeout=120)
+    assert sess.wait(timeout=120)
     split = collections.Counter()
     stage_total = 0.0
     prefetch_total = 0.0
     for cu in cus:
         assert cu.state == CUState.DONE
-        machine = mgr.ctx.lookup(cu.pilot_id).affinity
+        machine = sess.ctx.lookup(cu.pilot_id).affinity
         split[machine] += 1
         stage_total += cu.timings.sim_stage_s
         prefetch_total += cu.timings.sim_prefetch_s
-    mgr.shutdown()
+    sess.close()
     return split, t_r, stage_total, prefetch_total
 
 

@@ -14,7 +14,7 @@ import numpy as np
 
 from repro.checkpoint import Checkpointer, load_checkpoint_du
 from repro.configs import get_config
-from repro.core import FUNCTIONS, PilotManager, make_tpu_fleet_topology
+from repro.core import FUNCTIONS, Session, make_tpu_fleet_topology
 from repro.models import build_model
 from repro.serving import DecodeEngine
 
@@ -23,7 +23,7 @@ def main() -> None:
     cfg = get_config("gemma3-1b-smoke")  # reduced same-family config
     api = build_model(cfg)
     topo, _ = make_tpu_fleet_topology(pods=2, hosts_per_pod=1)
-    mgr = PilotManager(topology=topo)
+    mgr = Session(topology=topo)
 
     # "trained" params, checkpointed as a DU on pod0 and replicated to pod1
     pd0 = mgr.start_pilot_data(
@@ -55,18 +55,18 @@ def main() -> None:
         mgr.submit_cu(
             executable="serve_batch",
             args=(prompts, 8),
-            input_data=[du.id],
+            input_data=[du],
             affinity=f"cluster:pod{pod}",
         )
         for pod in (0, 1)
     ]
     mgr.wait(timeout=300)
     for cu in cus:
-        print(f"{cu.url} on {cu.pilot_id}: generated {cu.result}")
+        print(f"{cu.url} on {cu.pilot_id}: generated {cu.result()}")
     # both pods must decode identically from their local replicas
-    assert cus[0].result == cus[1].result, "replica divergence!"
+    assert cus[0].result() == cus[1].result(), "replica divergence!"
     print(f"served 2 pods in {time.time()-t0:.1f}s — replicas consistent ✓")
-    mgr.shutdown()
+    mgr.close()
 
 
 if __name__ == "__main__":

@@ -1,16 +1,18 @@
-"""Quickstart: the Pilot-API in ~60 lines.
+"""Quickstart: the Pilot-API v2 in ~70 lines.
 
-Creates a two-pod topology, allocates Pilot-Data and Pilot-Computes,
-stages a Data-Unit, and runs Compute-Units whose placement the
-Compute-Data Service decides by affinity — compute goes to the data.
+Creates a two-pod topology, allocates Pilot-Data and Pilot-Computes, and
+submits a complete map → reduce DAG in ONE shot: CUs declare their data
+dependencies by object (DUFutures chain into downstream input_data), the
+runtime's DU-readiness gate sequences the stages, and the Compute-Data
+Service places every CU by affinity — compute goes to the data.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
 
 from repro.core import (
-    CUState,
+    DataUnitDescription,
     FUNCTIONS,
-    PilotManager,
+    Session,
     make_tpu_fleet_topology,
 )
 
@@ -18,48 +20,64 @@ from repro.core import (
 def main() -> None:
     # 1. a logical resource topology (cluster → pods → hosts)
     topo, hosts = make_tpu_fleet_topology(pods=2, hosts_per_pod=2)
-    mgr = PilotManager(topology=topo, enable_heartbeat_monitor=True)
-
-    # 2. storage: one Pilot-Data on pod0's shared filesystem
-    pd = mgr.start_pilot_data(
-        service_url="sharedfs://cluster:pod0/scratch", affinity="cluster:pod0"
-    )
-
-    # 3. compute: pilots on both pods
-    p0 = mgr.start_pilot(resource_url="sim://cluster:pod0:host0", slots=2)
-    p1 = mgr.start_pilot(resource_url="sim://cluster:pod1:host0", slots=2)
-    p0.wait_active(), p1.wait_active()
-
-    # 4. data: a Data-Unit — location-transparent, immutable once staged
-    du = mgr.submit_du(
-        name="dataset", files={"part0.bin": b"x" * 4096, "part1.bin": b"y" * 4096}
-    )
-    du.wait()
-    print(f"{du.url} staged at {du.locations} ({du.size} bytes)")
-
-    # 5. work: CUs declare data deps; the CDS places them near the data
-    @FUNCTIONS.register("wordcount")
-    def wordcount(cu_ctx, part):
-        return len(cu_ctx.read_input(du.id, part))
-
-    cus = [
-        mgr.submit_cu(
-            executable="wordcount", args=(p,), input_data=[du.id]
+    with Session(topology=topo, enable_heartbeat_monitor=True) as s:
+        # 2. storage: one Pilot-Data on pod0's shared filesystem
+        s.start_pilot_data(
+            service_url="sharedfs://cluster:pod0/scratch",
+            affinity="cluster:pod0",
         )
-        for p in ("part0.bin", "part1.bin")
-    ]
-    mgr.wait()
-    for cu in cus:
-        assert cu.state == CUState.DONE
-        print(f"{cu.url} ran on {cu.pilot_id}: result={cu.result}")
 
-    # 6. the scheduler's reasoning is auditable
-    for d in mgr.cds.decisions():
-        print(
-            f"decision: {d['cu']} → {d['pilot']} "
-            f"(T_Q={d['t_q']:.3f}s, T_stage={d['t_stage']:.3f}s, {d['strategy']})"
+        # 3. compute: pilots on both pods
+        p0 = s.start_pilot(resource_url="sim://cluster:pod0:host0", slots=2)
+        p1 = s.start_pilot(resource_url="sim://cluster:pod1:host0", slots=2)
+        p0.wait_active(), p1.wait_active()
+
+        # 4. executables: CUs resolve names through the function registry
+        @FUNCTIONS.register("wordcount")
+        def wordcount(cu_ctx, part):
+            du = cu_ctx.input_dus()[0]
+            n = len(cu_ctx.read_input(du.id, part))
+            cu_ctx.write_output(f"count-{part}", str(n).encode())
+            return n
+
+        @FUNCTIONS.register("total")
+        def total(cu_ctx):
+            acc = 0
+            for du in cu_ctx.input_dus():
+                for rel in du.manifest:
+                    acc += int(cu_ctx.read_input(du.id, rel))
+            return acc
+
+        # 5. the whole DAG, submitted upfront — no user-side waits:
+        #    dataset → per-part wordcount CUs → gathering total CU
+        dataset = s.submit_du(
+            name="dataset",
+            files={"part0.bin": b"x" * 4096, "part1.bin": b"y" * 4096},
         )
-    mgr.shutdown()
+        counts = [
+            s.submit_cu(
+                executable="wordcount",
+                args=(part,),
+                input_data=[dataset],
+                output_data=[DataUnitDescription(name=f"count-{part}")],
+            )
+            for part in ("part0.bin", "part1.bin")
+        ]
+        grand = s.submit_cu(
+            executable="total", input_data=[c.output for c in counts]
+        )
+        print(f"total bytes counted: {grand.result(timeout=60)}")
+        assert grand.result() == 8192
+        for cu in counts:
+            print(f"{cu.url} ran on {cu.pilot_id}: result={cu.result()}")
+            print(f"  output {cu.output.url} replicated at {cu.output.locations}")
+
+        # 6. the scheduler's reasoning is auditable
+        for d in s.decisions():
+            print(
+                f"decision: {d['cu']} → {d['pilot']} "
+                f"(T_Q={d['t_q']:.3f}s, T_stage={d['t_stage']:.3f}s, {d['strategy']})"
+            )
     print("quickstart OK")
 
 

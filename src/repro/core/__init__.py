@@ -41,6 +41,15 @@ from .data_unit import (
     partition_du,
 )
 from .faults import HeartbeatMonitor, StragglerMitigator, requeue_orphans
+from .futures import (
+    ComputeFailedError,
+    CUFuture,
+    DataUnitFailedError,
+    DUFuture,
+    FutureError,
+    FutureTimeoutError,
+    gather,
+)
 from .manager import PilotManager
 from .placement import (
     Candidate,
@@ -61,7 +70,13 @@ from .pilot import (
 )
 from .replication import DemandReplicator, replicate_group, replicate_sequential
 from .scheduler import AsyncScheduler, SchedulerEvent
-from .services import ComputeDataService, PilotComputeService, PilotDataService
+from .services import (
+    ComputeDataService,
+    DependencyTracker,
+    PilotComputeService,
+    PilotDataService,
+)
+from .session import Session
 from .transfer import TransferRecord, TransferService
 
 __all__ = [
@@ -81,6 +96,10 @@ __all__ = [
     "PilotCompute", "PilotComputeDescription", "PilotData", "PilotDataDescription",
     "PilotState", "QuotaExceeded", "RuntimeContext",
     "DemandReplicator", "replicate_group", "replicate_sequential",
-    "ComputeDataService", "PilotComputeService", "PilotDataService",
+    "ComputeDataService", "DependencyTracker",
+    "PilotComputeService", "PilotDataService",
+    "Session", "CUFuture", "DUFuture", "gather",
+    "FutureError", "FutureTimeoutError",
+    "ComputeFailedError", "DataUnitFailedError",
     "TransferRecord", "TransferService",
 ]

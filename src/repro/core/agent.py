@@ -37,12 +37,21 @@ GLOBAL_QUEUE = "queue:global"
 
 
 class CUContext:
-    """Execution context handed to CU executables (the sandbox view)."""
+    """Execution context handed to CU executables (the sandbox view).
+
+    Output writes are buffered per attempt and flushed into the real output
+    DUs only after the exactly-once winner CAS: a CU that raises after
+    partial ``write_output`` calls leaves its output DUs untouched (a retry
+    starts from a clean buffer instead of appending onto half-written
+    state), and a straggler duplicate that loses the race never writes at
+    all."""
 
     def __init__(self, cu: ComputeUnit, pilot, ctx: RuntimeContext):
         self.cu = cu
         self.pilot = pilot
         self.ctx = ctx
+        #: output index -> {relpath: bytes}, flushed by the agent on win
+        self._out_buffers: Dict[int, Dict[str, bytes]] = {}
 
     # ------------------------------------------------------------- inputs
     def input_dus(self) -> List[DataUnit]:
@@ -67,12 +76,31 @@ class CUContext:
 
     # ------------------------------------------------------------ outputs
     def write_output(self, relpath: str, data: bytes, index: int = 0) -> None:
-        """Write a file into the index-th output DU (Fig. 5 data flow)."""
+        """Stage a file for the index-th output DU (Fig. 5 data flow).
+
+        Buffered: the bytes land in the DU only if this attempt wins the
+        exactly-once completion race (see :meth:`flush_outputs`)."""
         out_ids = self.cu.description.output_data
         if not out_ids:
             raise RuntimeError(f"{self.cu.url} declares no output_data")
-        du = self.ctx.lookup(out_ids[index])
-        du.add_file(relpath, data)
+        if not 0 <= index < len(out_ids):
+            raise IndexError(
+                f"{self.cu.url} has {len(out_ids)} output DUs, no index {index}"
+            )
+        if relpath.startswith("/") or ".." in relpath.split("/"):
+            raise ValueError(f"bad DU-relative path {relpath!r}")
+        self._out_buffers.setdefault(index, {})[relpath] = bytes(data)
+
+    def flush_outputs(self) -> None:
+        """Move the attempt's buffered writes into the real output DUs —
+        called by the agent strictly after the winner CAS, so failed
+        attempts and losing duplicates never touch a DU."""
+        out_ids = self.cu.description.output_data
+        for index in sorted(self._out_buffers):
+            du: DataUnit = self.ctx.lookup(out_ids[index])
+            for relpath, data in sorted(self._out_buffers[index].items()):
+                du.add_file(relpath, data)
+        self._out_buffers.clear()
 
 
 class PilotAgent:
@@ -248,9 +276,13 @@ class PilotAgent:
                 return  # node died mid-flight: results are lost
             # ---- exactly-once completion (first finisher wins) ----
             if not store.hcas(f"cu:{cu.id}", "winner", None, pilot.id):
-                return  # a duplicate finished first; discard
+                return  # a duplicate finished first; discard its buffers
             cu.result = result
-            # ---- stage outputs: seal output DUs into the sandbox PD ----
+            # ---- stage outputs: flush the winning attempt's buffered
+            # writes, then seal output DUs into the sandbox PD.  Only the
+            # winner ever writes/seals — a FAILED attempt or losing
+            # duplicate leaves output DUs untouched and unsealed. ----
+            cu_ctx.flush_outputs()
             for du_id in desc.output_data:
                 du: DataUnit = ctx.lookup(du_id)
                 if not pilot.sandbox.has_du(du.id):
@@ -275,11 +307,16 @@ class PilotAgent:
             store.hset(f"cu:{cu.id}", "traceback", traceback.format_exc())
             cu.attempts += 1
             if cu.attempts <= desc.max_retries and not self._dead.is_set():
-                # retry with backoff via the global queue
+                # retry with backoff via the global queue (the failed
+                # attempt's buffered output writes were discarded, so the
+                # retry starts against clean output DUs)
                 cu._set_state(CUState.PENDING)
                 store.push(GLOBAL_QUEUE, {"cu": cu.id, "dup": False})
             else:
                 cu._set_state(CUState.FAILED)
+                # terminal: outputs will never materialize — fail them so
+                # dataflow waiters downstream are released with the cause
+                cu._fail_outputs(f"producer {cu.url} failed: {cu.error}")
         finally:
             with self._lock:
                 self._running.pop(cu.id, None)

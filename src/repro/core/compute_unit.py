@@ -15,7 +15,6 @@ from __future__ import annotations
 
 import dataclasses
 import threading
-import time
 from typing import Any, Callable, Dict, List, Optional
 
 from .coordination import CoordinationStore
@@ -24,6 +23,9 @@ from .data_unit import _next_id
 
 class CUState:
     NEW = "New"
+    #: dataflow gate: some input DU is not yet sealed/first-replicated —
+    #: the CU is parked until its producers materialize their outputs
+    WAITING = "Waiting"
     PENDING = "Pending"  # queued (global or pilot queue)
     STAGING = "Staging"  # input DUs being materialized in the sandbox
     RUNNING = "Running"
@@ -167,18 +169,34 @@ class ComputeUnit:
         return self._store.hcas(f"cu:{self.id}", "state", expect, state)
 
     def cancel(self) -> None:
-        for s in (CUState.NEW, CUState.PENDING):
+        for s in (CUState.NEW, CUState.WAITING, CUState.PENDING):
             if self._cas_state(s, CUState.CANCELED):
+                # A canceled CU will never materialize its outputs: fail the
+                # output DUs so downstream dataflow waiters are released with
+                # a clear error instead of hanging.
+                self._fail_outputs(f"producer {self.url} was canceled")
                 return
 
+    def _fail_outputs(self, reason: str) -> None:
+        from .data_unit import DUState
+
+        for du_id in self.description.output_data:
+            key = f"du:{du_id}"
+            if self._store.hget(key, "state") != DUState.READY:
+                self._store.hset(key, "error", reason)
+                self._store.hset(key, "state", DUState.FAILED)
+
     def wait(self, timeout: float = 60.0) -> str:
-        deadline = time.monotonic() + timeout
-        while time.monotonic() < deadline:
-            s = self.state
-            if s in CUState.TERMINAL:
-                return s
-            time.sleep(0.005)
-        return self.state
+        """Block until the CU is terminal — event-driven on the store's
+        keyspace notifications (no polling loop; the coarse in-wait poll is
+        only a fallback against lost notifications)."""
+        return self._store.wait_field(
+            f"cu:{self.id}",
+            "state",
+            lambda s: s in CUState.TERMINAL,
+            timeout=timeout,
+            default=CUState.NEW,
+        )
 
     def __repr__(self) -> str:  # pragma: no cover
         return f"<ComputeUnit {self.url} exe={self.description.executable} state={self.state}>"

@@ -40,6 +40,7 @@ import collections
 import dataclasses
 import json
 import os
+import queue
 import threading
 import time
 from typing import Any, Callable, Dict, Iterator, List, Optional, Tuple
@@ -375,6 +376,61 @@ class CoordinationStore:
             for k, v in snap["queues"].items():
                 self._queues[k] = collections.deque(v)
             self._cond.notify_all()
+
+
+class StoreEventPump:
+    """Subscribe → handoff queue → one daemon consumer thread.
+
+    The subscriber contract (callbacks run on the mutating thread while it
+    holds the store lock: be fast, non-blocking, take no foreign locks)
+    makes this the canonical consumption pattern — the dependency gate and
+    the future dispatcher both ride it.  ``accept`` filters on the
+    mutating thread (cheap predicate only); ``handler`` runs accepted
+    events on the pump thread, outside the store lock, and may block or
+    re-enter the store freely.  ``inject`` enqueues a synthetic event,
+    serializing caller-side re-checks with the live stream.
+    """
+
+    def __init__(
+        self,
+        store: "CoordinationStore",
+        handler: Callable[[StoreEvent], None],
+        prefix: str = "",
+        accept: Optional[Callable[[StoreEvent], bool]] = None,
+        name: str = "store-event-pump",
+    ):
+        self._store = store
+        self._handler = handler
+        self._accept = accept
+        self._events: "queue.Queue[StoreEvent]" = queue.Queue()
+        self._stop = threading.Event()
+        self._token = store.subscribe(self._on_event, prefix=prefix)
+        self._thread = threading.Thread(target=self._run, name=name, daemon=True)
+        self._thread.start()
+
+    def _on_event(self, ev: StoreEvent) -> None:
+        if self._accept is None or self._accept(ev):
+            self._events.put(ev)
+
+    def inject(self, ev: StoreEvent) -> None:
+        """Queue a synthetic event (bypasses ``accept``)."""
+        self._events.put(ev)
+
+    def _run(self) -> None:
+        while not self._stop.is_set():
+            try:
+                ev = self._events.get(timeout=0.1)
+            except queue.Empty:
+                continue
+            try:
+                self._handler(ev)
+            except Exception:
+                pass  # a broken handler must not kill the pump
+
+    def stop(self) -> None:
+        self._stop.set()
+        self._store.unsubscribe(self._token)
+        self._thread.join(timeout=2.0)
 
 
 def with_retry(

@@ -14,6 +14,7 @@ store (same WAL) and resolve pilots/CUs/DUs by URL.
 from __future__ import annotations
 
 import contextlib
+import warnings
 from typing import Dict, List, Optional
 
 from .affinity import Topology
@@ -79,6 +80,7 @@ class PilotManager:
             self.scheduler = AsyncScheduler(
                 self.cds, stage_workers=stage_workers
             )
+        self._session = None  # lazy Pilot-API v2 facade (see .session)
         self.heartbeat_monitor: Optional[HeartbeatMonitor] = None
         self.straggler_mitigator: Optional[StragglerMitigator] = None
         if enable_heartbeat_monitor:
@@ -101,11 +103,36 @@ class PilotManager:
         self.cds.add_pilot_data(pd)
         return pd
 
+    @property
+    def session(self) -> "Session":
+        """The Pilot-API v2 facade attached to this manager (lazy)."""
+        if self._session is None:
+            from .session import Session  # local import: cycle
+
+            self._session = Session(manager=self)
+        return self._session
+
+    # ------------------------------------------------ deprecated v1 shims
     def submit_du(self, **kw) -> "DataUnit":
+        """Deprecated Pilot-API v1 entry point (kept as a thin shim)."""
+        warnings.warn(
+            "Pilot-API v1: PilotManager.submit_du() is deprecated; use "
+            "Session.submit_du (repro.core.session) which returns a DUFuture",
+            DeprecationWarning,
+            stacklevel=2,
+        )
         target = kw.pop("target", None)
         return self.cds.submit_data_unit(DataUnitDescription(**kw), target=target)
 
     def submit_cu(self, **kw) -> "ComputeUnit":
+        """Deprecated Pilot-API v1 entry point (kept as a thin shim)."""
+        warnings.warn(
+            "Pilot-API v1: PilotManager.submit_cu() is deprecated; use "
+            "Session.submit_cu which takes DU/DUFuture objects and returns "
+            "a CUFuture",
+            DeprecationWarning,
+            stacklevel=2,
+        )
         return self.cds.submit_compute_unit(ComputeUnitDescription(**kw))
 
     def register_function(self, name: str, fn=None):
@@ -128,6 +155,10 @@ class PilotManager:
         return out
 
     def shutdown(self) -> None:
+        if self._session is not None:
+            with contextlib.suppress(Exception):
+                self._session._dispatcher.stop()
+            self._session = None
         if self.scheduler is not None:
             with contextlib.suppress(Exception):
                 self.scheduler.stop()

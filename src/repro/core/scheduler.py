@@ -20,7 +20,12 @@ identical decisions; what the async mode adds is **transfer pipelining**:
     while groups from distinct sources stripe in parallel;
   * the transfer service's chunk-granular in-flight dedup makes the
     agent's own ``stage_in`` wait on (not repeat) a prefetch already
-    moving those chunks.
+    moving those chunks;
+  * dataflow DAGs pipeline across edges: a CU parked ``Waiting`` on
+    unsealed input DUs is released by the CDS DependencyTracker the moment
+    its last producer seals — the release lands back on ``cds:incoming``,
+    the reactor places it, and the pre-push prefetch stages stage *i+1*'s
+    inputs while stage *i*'s remaining CUs are still executing.
 
 Determinism: events carry the store's monotonic sequence number and the
 scheduler processes them strictly in arrival order.  With ``autostart=

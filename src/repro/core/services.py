@@ -23,12 +23,13 @@ from __future__ import annotations
 
 import threading
 import time
-from typing import Callable, Dict, List, Optional, Sequence
+from typing import Callable, Dict, List, Optional, Sequence, Set
 
 from .agent import GLOBAL_QUEUE
 from .compute_unit import ComputeUnit, ComputeUnitDescription, CUState
+from .coordination import StoreEvent, StoreEventPump
 from .placement import PlacementEngine, PlacementStrategy, make_strategy
-from .data_unit import DataUnit, DataUnitDescription
+from .data_unit import DataUnit, DataUnitDescription, DUState
 from .pilot import (
     PilotCompute,
     PilotComputeDescription,
@@ -84,6 +85,141 @@ class PilotDataService:
         return list(self._pds)
 
 
+class DependencyTracker:
+    """DU-readiness gating for dataflow CUs (Pilot-API v2, paper Fig. 5).
+
+    A CU whose input DUs are not all sealed/first-replicated is parked in
+    ``Waiting`` instead of being released to placement; this tracker
+    subscribes to the coordination store's keyspace notifications (the same
+    StoreEvent machinery the async scheduler rides — no polling) and, when
+    an awaited DU seals or turns READY, releases every CU whose dependency
+    set just emptied by pushing it onto ``cds:incoming``.  Both execution
+    modes drain that queue (the sync loop and the AsyncScheduler reactor),
+    so release ordering — recorded in :attr:`release_log` — is identical
+    across modes.
+
+    A DU that turns FAILED (its producer CU exhausted retries, or was
+    canceled) fails its waiters with a clear upstream error, and the
+    waiters' own output DUs are failed in turn — the cascade walks the DAG
+    transitively through the same event stream.
+    """
+
+    def __init__(self, cds: "ComputeDataService"):
+        self.cds = cds
+        self.ctx = cds.ctx
+        self._lock = threading.Lock()
+        #: cu_id -> input du_ids still unmet
+        self._unmet: Dict[str, Set[str]] = {}
+        #: du_id -> cu_ids waiting on it
+        self._waiters: Dict[str, Set[str]] = {}
+        #: cu ids in the order they were released to placement (the
+        #: sync ≡ async ordering witness)
+        self.release_log: List[str] = []
+        self._pump = StoreEventPump(
+            self.ctx.store,
+            handler=self._process,
+            prefix="du:",
+            # "du:<id>" state/seal transitions only, not "du:<id>:chunks"
+            accept=lambda ev: (
+                ev.op == "hset"
+                and ev.field in ("state", "sealed")
+                and ev.key.count(":") == 1
+            ),
+            name="du-readiness-gate",
+        )
+
+    def _process(self, ev: StoreEvent) -> None:
+        du_id = ev.key.split(":", 1)[1]
+        if ev.field == "sealed" and ev.value:
+            self._du_ready(du_id)
+        elif ev.field == "state":
+            if ev.value == DUState.READY:
+                self._du_ready(du_id)
+            elif ev.value == DUState.FAILED:
+                self._du_failed(du_id)
+
+    # ------------------------------------------------------------ transitions
+    def _du_ready(self, du_id: str) -> None:
+        with self._lock:
+            released = []
+            for cu_id in self._waiters.pop(du_id, ()):  # noqa: B020
+                unmet = self._unmet.get(cu_id)
+                if unmet is None:
+                    continue
+                unmet.discard(du_id)
+                if not unmet:
+                    del self._unmet[cu_id]
+                    released.append(cu_id)
+        for cu_id in released:
+            self._release(cu_id)
+
+    def _release(self, cu_id: str) -> None:
+        try:
+            cu: ComputeUnit = self.ctx.lookup(cu_id)
+        except KeyError:
+            return
+        # Canceled-while-waiting CUs lose the CAS and are dropped here.
+        if cu._cas_state(CUState.WAITING, CUState.PENDING):
+            with self._lock:
+                self.release_log.append(cu_id)
+            self.ctx.store.push("cds:incoming", cu_id)
+
+    def _du_failed(self, du_id: str) -> None:
+        with self._lock:
+            waiters = sorted(self._waiters.pop(du_id, ()))
+            for cu_id in waiters:
+                self._unmet.pop(cu_id, None)
+        store = self.ctx.store
+        reason = store.hget(f"du:{du_id}", "error") or "producer failed"
+        for cu_id in waiters:
+            try:
+                cu: ComputeUnit = self.ctx.lookup(cu_id)
+            except KeyError:
+                continue
+            if cu._cas_state(CUState.WAITING, CUState.FAILED):
+                msg = f"input du://{du_id} failed: {reason}"
+                cu.error = msg
+                store.hset(f"cu:{cu.id}", "error", msg)
+                # transitive cascade: this CU will never produce its outputs
+                cu._fail_outputs(f"producer {cu.url} failed: {msg}")
+
+    # -------------------------------------------------------------- interface
+    def add(self, cu: ComputeUnit, unmet: Set[str]) -> None:
+        """Park ``cu`` until every DU in ``unmet`` is ready.
+
+        Registration races against the DUs settling concurrently — a
+        synthetic re-check event per DU closes the window on the tracker
+        thread (where all release decisions are serialized).
+        """
+        with self._lock:
+            self._unmet[cu.id] = set(unmet)
+            for du_id in unmet:
+                self._waiters.setdefault(du_id, set()).add(cu.id)
+        store = self.ctx.store
+        for du_id in unmet:
+            h = store.hgetall(f"du:{du_id}")
+            state = h.get("state")
+            if h.get("sealed"):
+                field, value = "sealed", True
+            elif state in (DUState.READY, DUState.FAILED):
+                field, value = "state", state
+            else:
+                continue
+            self._pump.inject(
+                StoreEvent(
+                    seq=-1, op="hset", key=f"du:{du_id}",
+                    field=field, value=value,
+                )
+            )
+
+    def waiting(self) -> List[str]:
+        with self._lock:
+            return sorted(self._unmet)
+
+    def stop(self) -> None:
+        self._pump.stop()
+
+
 class ComputeDataService:
     """Workload manager: late-binds CUs/DUs to pilots by affinity (§5)."""
 
@@ -117,6 +253,9 @@ class ComputeDataService:
         #: — the async scheduler hangs its prefetch pipeline here so the
         #: staging claim exists before any agent can see the CU
         self.pre_push_hook: Optional[Callable] = None
+        #: DU-readiness gate (dataflow semantics) — shared by both
+        #: execution modes, so sync and async release CUs identically
+        self.deps = DependencyTracker(self)
         self._thread: Optional[threading.Thread] = None
         if start_loop:
             # Legacy sync mode: a polling loop owns placement.  In async
@@ -161,21 +300,120 @@ class ComputeDataService:
             self._dus.append(du)
         pd = target or self._choose_pd(desc)
         if pd is not None and du.size > 0:
-            from .data_unit import DUState
-
             self.ctx.store.hset(f"du:{du.id}", "state", DUState.PENDING)
             self.ctx.transfer_service.ingest(du, pd)
         return du
 
+    def create_data_unit(self, desc: DataUnitDescription) -> DataUnit:
+        """Create a DU *without* staging it anywhere: a dataflow
+        placeholder whose content a producer CU will materialize (the
+        Session auto-creates output DUs through this).  The store-side
+        ``placeholder`` marker is what gates consumers — an empty DU made
+        via ``submit_data_unit`` is vacuously complete instead."""
+        du = DataUnit(desc, self.ctx.store)
+        self.ctx.store.hset(f"du:{du.id}", "placeholder", True)
+        self.ctx.register(du)
+        with self._lock:
+            self._dus.append(du)
+        return du
+
+    def _unmet_inputs(self, cu: ComputeUnit) -> Set[str]:
+        """Input DUs that must materialize before ``cu`` may be placed.
+
+        A DU gates its consumers while it is unsealed AND is either some
+        CU's declared output (``producer`` set) or an explicit dataflow
+        placeholder (``create_data_unit``) awaiting a producer not yet
+        submitted.  Source DUs made through ``submit_data_unit`` never
+        gate — with or without content they are consumable immediately,
+        which preserves the v1 submit-then-consume flow.
+        """
+        store = self.ctx.store
+        unmet: Set[str] = set()
+        for du_id in cu.description.input_data:
+            h = store.hgetall(f"du:{du_id}")
+            if not h:
+                raise KeyError(
+                    f"{cu.url}: unknown input DU du://{du_id}"
+                )
+            state = h.get("state")
+            if state == DUState.FAILED:
+                raise ValueError(
+                    f"{cu.url}: input du://{du_id} already failed: "
+                    f"{h.get('error') or 'producer failed'}"
+                )
+            if h.get("sealed") or state == DUState.READY:
+                continue
+            if h.get("producer") or h.get("placeholder"):
+                unmet.add(du_id)
+        return unmet
+
+    def _validate_data_refs(self, desc: ComputeUnitDescription) -> None:
+        """Reject bad data references BEFORE any side effects: a CU must
+        not be created/tracked (and no producer claims stamped) if its
+        declared DUs don't exist or its outputs are already immutable —
+        otherwise a zombie non-terminal CU poisons ``wait()`` forever."""
+        store = self.ctx.store
+        for du_id in desc.input_data:
+            if not store.hgetall(f"du:{du_id}"):
+                raise KeyError(f"unknown input DU du://{du_id}")
+        for du_id in desc.output_data:
+            h = store.hgetall(f"du:{du_id}")
+            if not h:
+                raise KeyError(f"unknown output DU du://{du_id}")
+            if h.get("sealed"):
+                raise ValueError(
+                    f"output du://{du_id} is sealed (immutable); "
+                    f"declare a fresh DU instead"
+                )
+
+    def _claim_outputs(self, cu: ComputeUnit) -> None:
+        """Atomically claim each output DU for ``cu`` (CAS on the
+        ``producer`` field); on a lost race every claim this CU did win is
+        unwound and the CU is failed, so nothing is left half-stamped."""
+        store = self.ctx.store
+        claimed: List[str] = []
+        for du_id in cu.description.output_data:
+            if not store.hcas(f"du:{du_id}", "producer", None, cu.id):
+                prior = store.hget(f"du:{du_id}", "producer")
+                for oid in claimed:
+                    store.hdel(f"du:{oid}", "producer")
+                msg = (
+                    f"{cu.url}: du://{du_id} already has producer "
+                    f"cu://{prior}; DUs are single-writer"
+                )
+                cu.error = msg
+                store.hset(f"cu:{cu.id}", "error", msg)
+                cu._set_state(CUState.FAILED)
+                raise ValueError(msg)
+            claimed.append(du_id)
+
     def submit_compute_unit(self, desc: ComputeUnitDescription) -> ComputeUnit:
+        self._validate_data_refs(desc)
         cu = ComputeUnit(desc, self.ctx.store)
         self.ctx.register(cu)
         cu.timings.submitted = time.monotonic()
-        cu._set_state(CUState.PENDING)
+        self._claim_outputs(cu)
         with self._lock:
             self._cus.append(cu)
-        # Asynchronous interface (§4.2): enqueue and return immediately.
-        self.ctx.store.push("cds:incoming", cu.id)
+        try:
+            unmet = self._unmet_inputs(cu)
+        except ValueError as exc:
+            # an input already failed: the CU fails at submit, terminally,
+            # and the failure cascades through its own outputs
+            msg = str(exc)
+            cu.error = msg
+            self.ctx.store.hset(f"cu:{cu.id}", "error", msg)
+            cu._set_state(CUState.FAILED)
+            cu._fail_outputs(f"producer {cu.url} failed: {msg}")
+            return cu
+        if unmet:
+            # Dataflow gate: park until every input DU is sealed/replicated.
+            cu._set_state(CUState.WAITING)
+            self.deps.add(cu, unmet)
+        else:
+            cu._set_state(CUState.PENDING)
+            # Asynchronous interface (§4.2): enqueue and return immediately.
+            self.ctx.store.push("cds:incoming", cu.id)
         return cu
 
     def compute_units(self) -> List[ComputeUnit]:
@@ -335,17 +573,37 @@ class ComputeDataService:
         return list(self._decisions)
 
     def wait(self, timeout: float = 120.0) -> bool:
-        """Block until every submitted CU is terminal.  True on success."""
-        deadline = time.monotonic() + timeout
-        while time.monotonic() < deadline:
-            with self._lock:
-                cus = list(self._cus)
-            if all(c.state in CUState.TERMINAL for c in cus):
-                return True
-            time.sleep(0.01)
-        return False
+        """Block until every submitted CU is terminal.  True on success.
+
+        Event-driven: a keyspace subscription on ``cu:`` state transitions
+        wakes the waiter on the very mutation (new submissions also write a
+        state field, so a workload growing mid-wait re-checks too); the
+        coarse in-wait poll only guards against lost notifications.
+        """
+        woke = threading.Event()
+
+        def _cb(ev: StoreEvent) -> None:
+            if ev.field == "state":
+                woke.set()
+
+        token = self.ctx.store.subscribe(_cb, prefix="cu:")
+        try:
+            deadline = time.monotonic() + timeout
+            while True:
+                woke.clear()
+                with self._lock:
+                    cus = list(self._cus)
+                if all(c.state in CUState.TERMINAL for c in cus):
+                    return True
+                remaining = deadline - time.monotonic()
+                if remaining <= 0:
+                    return False
+                woke.wait(min(remaining, 0.25))
+        finally:
+            self.ctx.store.unsubscribe(token)
 
     def cancel(self) -> None:
         self._stop.set()
+        self.deps.stop()
         if self._thread is not None:
             self._thread.join(timeout=2.0)

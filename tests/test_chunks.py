@@ -126,7 +126,7 @@ def test_first_replica_seals_via_store():
     topo = _topo("site:a")
     with PilotManager(topology=topo) as mgr:
         pd = mgr.start_pilot_data(service_url="mem://site:a/pd", affinity="site:a")
-        du = mgr.submit_du(name="s", files={"a": b"z" * 256}, target=pd)
+        du = mgr.session.submit_du(name="s", files={"a": b"z" * 256}, target=pd).du
         assert du.wait() == DUState.READY
         assert mgr.store.hget(f"du:{du.id}", "sealed") is True
         with pytest.raises(RuntimeError, match="immutable"):
@@ -139,7 +139,7 @@ def test_reattach_preserves_seal_and_manifest():
     topo = _topo("site:a")
     with PilotManager(topology=topo) as mgr:
         pd = mgr.start_pilot_data(service_url="mem://site:a/pd", affinity="site:a")
-        du = mgr.submit_du(name="orig", files={"a": b"q" * 300}, chunk_size=128, target=pd)
+        du = mgr.session.submit_du(name="orig", files={"a": b"q" * 300}, chunk_size=128, target=pd).du
         assert du.wait() == DUState.READY
         clone = DataUnit(DataUnitDescription(), mgr.store, du_id=du.id)
         assert clone.sealed
@@ -178,9 +178,9 @@ def test_partial_replicas_first_class():
     with PilotManager(topology=topo) as mgr:
         src = mgr.start_pilot_data(service_url="mem://site:a/src", affinity="site:a")
         part = mgr.start_pilot_data(service_url="mem://site:b/p", affinity="site:b")
-        du = mgr.submit_du(
+        du = mgr.session.submit_du(
             name="p", files={"blob": b"d" * 4096}, chunk_size=1024, target=src
-        )
+        ).du
         du.wait()
         assert du.n_chunks == 4
         mgr.transfer.replicate_chunks(du, src, part, [0, 1])
@@ -208,9 +208,9 @@ def test_multi_source_striped_stage_in():
         dst = mgr.start_pilot_data(
             service_url="mem://site:dst/sb", affinity="site:dst"
         )
-        du = mgr.submit_du(
+        du = mgr.session.submit_du(
             name="m", files={"blob": b"e" * 8192}, chunk_size=1024, target=pa
-        )
+        ).du
         du.wait()
         # pb holds the odd half
         mgr.transfer.replicate_chunks(du, pa, pb, [1, 3, 5, 7])
@@ -235,9 +235,9 @@ def test_striped_beats_single_source():
         full = mgr.start_pilot_data(
             service_url="mem://site:full/pd", affinity="site:full"
         )
-        du = mgr.submit_du(
+        du = mgr.session.submit_du(
             name="v", files={"blob": b"w" * 16384}, chunk_size=1024, target=full
-        )
+        ).du
         du.wait()
         d1 = mgr.start_pilot_data(service_url="mem://site:d1/sb", affinity="site:d1")
         t_mono = mgr.transfer.stage_in(du, d1, "site:d1", use_cache=False)
@@ -259,9 +259,9 @@ def test_concurrent_stagers_split_chunks():
         dst = mgr.start_pilot_data(
             service_url="mem://site:dst/sb", affinity="site:dst"
         )
-        du = mgr.submit_du(
+        du = mgr.session.submit_du(
             name="race", files={"blob": b"r" * 8192}, chunk_size=512, target=src
-        )
+        ).du
         du.wait()
         mgr.transfer.reset_records()
         threads = [
@@ -350,7 +350,7 @@ def test_merge_dropped_buffer_raises():
     topo = _topo("site:a")
     with PilotManager(topology=topo) as mgr:
         pd = mgr.start_pilot_data(service_url="mem://site:a/pd", affinity="site:a")
-        du = mgr.submit_du(name="d", files={"x": b"1" * 64}, target=pd)
+        du = mgr.session.submit_du(name="d", files={"x": b"1" * 64}, target=pd).du
         du.wait()
         du.drop_local_buffer()
         with pytest.raises(RuntimeError, match="buffer dropped"):
@@ -361,7 +361,7 @@ def test_partition_dropped_buffer_raises():
     topo = _topo("site:a")
     with PilotManager(topology=topo) as mgr:
         pd = mgr.start_pilot_data(service_url="mem://site:a/pd", affinity="site:a")
-        du = mgr.submit_du(name="d", files={"x": b"1" * 64}, target=pd)
+        du = mgr.session.submit_du(name="d", files={"x": b"1" * 64}, target=pd).du
         du.wait()
         du.drop_local_buffer()
         with pytest.raises(RuntimeError, match="no local buffer"):
@@ -408,9 +408,9 @@ def test_fractional_chunk_locality_scoring():
     with PilotManager(topology=topo) as mgr:
         pa = mgr.start_pilot_data(service_url="mem://site:a/pd", affinity="site:a")
         pb = mgr.start_pilot_data(service_url="mem://site:b/pd", affinity="site:b")
-        du = mgr.submit_du(
+        du = mgr.session.submit_du(
             name="loc", files={"blob": b"l" * 4096}, chunk_size=1024, target=pa
-        )
+        ).du
         du.wait()
         mgr.transfer.replicate_chunks(du, pa, pb, [0])  # 1/4 of the bytes
         pilots = {
@@ -418,7 +418,7 @@ def test_fractional_chunk_locality_scoring():
             for s in ("site:a", "site:b", "site:c")
         }
         [p.wait_active() for p in pilots.values()]
-        cu = mgr.submit_cu(executable="noop-loc", input_data=[du.id])
+        cu = mgr.session.submit_cu(executable="noop-loc", input_data=[du]).cu
         engine = mgr.cds.engine
         loc = {
             s: engine.chunk_locality(cu, p) for s, p in pilots.items()

@@ -1,0 +1,458 @@
+"""Pilot-API v2 dataflow semantics: declarative sessions, typed futures,
+DU-readiness gating, and the failure cascade.
+
+Covers the edge cases the redesign exists for: whole DAGs submitted in one
+shot (no user-side waits), diamond dependencies, consumers submitted before
+their producers, multi-output CUs, failed producers cancelling downstream
+waiters with a clear error, identical release ordering across scheduler
+modes, and the output-DU failure path (partial writes never leak into a
+retry or a FAILED CU's outputs)."""
+
+import threading
+import time
+
+import pytest
+
+from repro.core import (
+    ComputeFailedError,
+    CUState,
+    DataUnitDescription,
+    DataUnitFailedError,
+    DUState,
+    FUNCTIONS,
+    FutureTimeoutError,
+    PilotManager,
+    Session,
+    Topology,
+    gather,
+)
+
+SITE_A, SITE_B = "grid:sitea", "grid:siteb"
+
+
+def _topo() -> Topology:
+    topo = Topology()
+    topo.register(SITE_A, bandwidth=20e6, latency=0.05)
+    topo.register(SITE_B, bandwidth=20e6, latency=0.05)
+    return topo
+
+
+@pytest.fixture(params=["sync", "async"])
+def sess(request):
+    with Session(topology=_topo(), scheduler_mode=request.param) as s:
+        yield s
+
+
+def _register_wordlen_pipeline():
+    """map: uppercase each input file; reduce: total byte count."""
+
+    def mapper(cu_ctx):
+        for du in cu_ctx.input_dus():
+            for rel in du.manifest:
+                cu_ctx.write_output(rel, cu_ctx.read_input(du.id, rel).upper())
+        return "mapped"
+
+    def reducer(cu_ctx):
+        total = 0
+        for du in cu_ctx.input_dus():
+            for rel in du.manifest:
+                data = cu_ctx.read_input(du.id, rel)
+                assert data == data.upper()  # upstream really ran first
+                total += len(data)
+        if cu_ctx.cu.description.output_data:
+            cu_ctx.write_output("total", str(total).encode())
+        return total
+
+    FUNCTIONS.register("df-map", mapper)
+    FUNCTIONS.register("df-reduce", reducer)
+
+
+# --------------------------------------------------------------- happy DAGs
+def test_three_stage_dag_one_shot(sess):
+    """map → shuffle → reduce submitted upfront, wired by object; the
+    runtime alone sequences the stages (acceptance criterion for both
+    scheduler modes via the fixture)."""
+    _register_wordlen_pipeline()
+    sess.start_pilot_data(service_url=f"mem://{SITE_B}/pd", affinity=SITE_B)
+    p = sess.start_pilot(resource_url=f"sim://{SITE_A}", slots=2)
+    p.wait_active()
+    parts = [
+        sess.submit_du(name=f"part{i}", files={f"p{i}": b"ab" * (100 + i)})
+        for i in range(3)
+    ]
+    maps = [
+        sess.submit_cu(
+            executable="df-map",
+            input_data=[part],
+            output_data=[DataUnitDescription(name=f"inter{i}")],
+        )
+        for i, part in enumerate(parts)
+    ]
+    shuffle = sess.submit_cu(
+        executable="df-map",
+        input_data=[m.output for m in maps],
+        output_data=[DataUnitDescription(name="shuffled")],
+    )
+    reduce_ = sess.submit_cu(
+        executable="df-reduce",
+        input_data=[shuffle.output],
+        output_data=[DataUnitDescription(name="result")],
+    )
+    # no user-side waits above this line
+    expected = sum(2 * (100 + i) for i in range(3))
+    assert reduce_.result(timeout=60) == expected
+    assert [m.result() for m in maps] == ["mapped"] * 3
+    out = reduce_.output.result()
+    assert out.sealed and out.state == DUState.READY
+    pd = sess.ctx.lookup(out.locations[0])
+    assert pd.fetch_du_file(out.id, "total") == str(expected).encode()
+
+
+def test_diamond_dag(sess):
+    """A → (B, C) → D: D must observe both branch outputs."""
+    _register_wordlen_pipeline()
+    p = sess.start_pilot(resource_url=f"sim://{SITE_A}", slots=2)
+    p.wait_active()
+    src = sess.submit_du(name="src", files={"x": b"seed-bytes"})
+    a = sess.submit_cu(
+        executable="df-map",
+        input_data=[src],
+        output_data=[DataUnitDescription(name="a-out")],
+    )
+    b = sess.submit_cu(
+        executable="df-map",
+        input_data=[a.output],
+        output_data=[DataUnitDescription(name="b-out")],
+    )
+    c = sess.submit_cu(
+        executable="df-map",
+        input_data=[a.output],
+        output_data=[DataUnitDescription(name="c-out")],
+    )
+    d = sess.submit_cu(
+        executable="df-reduce",
+        input_data=[b.output, c.output],
+        output_data=[DataUnitDescription(name="d-out")],
+    )
+    assert d.result(timeout=60) == 2 * len(b"seed-bytes")
+
+
+def test_consumer_submitted_before_producer(sess):
+    """The ISSUE's race: a consumer must park in Waiting, not stage an
+    unsealed DU immediately."""
+    _register_wordlen_pipeline()
+    p = sess.start_pilot(resource_url=f"sim://{SITE_A}", slots=2)
+    p.wait_active()
+    placeholder = sess.create_du(name="future-data")
+    consumer = sess.submit_cu(executable="df-reduce", input_data=[placeholder])
+    deadline = time.monotonic() + 5
+    while consumer.state != CUState.WAITING and time.monotonic() < deadline:
+        time.sleep(0.005)
+    assert consumer.state == CUState.WAITING
+    assert consumer.id in sess.cds.deps.waiting()
+    src = sess.submit_du(name="late-src", files={"f": b"xyz"})
+    sess.submit_cu(
+        executable="df-map", input_data=[src], output_data=[placeholder]
+    )
+    assert consumer.result(timeout=60) == 3
+    assert consumer.id not in sess.cds.deps.waiting()
+
+
+def test_multi_output_cu(sess):
+    def splitter(cu_ctx):
+        cu_ctx.write_output("evens", b"02468", index=0)
+        cu_ctx.write_output("odds", b"13579", index=1)
+        return "split"
+
+    FUNCTIONS.register("df-split", splitter)
+    _register_wordlen_pipeline()
+    p = sess.start_pilot(resource_url=f"sim://{SITE_A}", slots=2)
+    p.wait_active()
+    split = sess.submit_cu(
+        executable="df-split",
+        output_data=[
+            DataUnitDescription(name="evens"),
+            DataUnitDescription(name="odds"),
+        ],
+    )
+    consumers = [
+        sess.submit_cu(executable="df-reduce", input_data=[out])
+        for out in split.outputs
+    ]
+    assert gather(consumers, timeout=60) == [5, 5]
+    assert {o.result().manifest.popitem()[0] for o in split.outputs} == {
+        "evens",
+        "odds",
+    }
+
+
+# ------------------------------------------------------------ failure paths
+def test_failed_producer_fails_downstream_waiters(sess):
+    _register_wordlen_pipeline()
+
+    def boom(cu_ctx):
+        cu_ctx.write_output("half", b"junk")  # partial write, then crash
+        raise RuntimeError("disk on fire")
+
+    FUNCTIONS.register("df-boom", boom)
+    p = sess.start_pilot(resource_url=f"sim://{SITE_A}", slots=2)
+    p.wait_active()
+    bad = sess.submit_cu(
+        executable="df-boom",
+        max_retries=0,
+        output_data=[DataUnitDescription(name="bad-out")],
+    )
+    mid = sess.submit_cu(
+        executable="df-map",
+        input_data=[bad.output],
+        output_data=[DataUnitDescription(name="mid-out")],
+    )
+    leaf = sess.submit_cu(executable="df-reduce", input_data=[mid.output])
+    # the whole downstream chain fails with the upstream cause in the error
+    with pytest.raises(ComputeFailedError, match="disk on fire"):
+        mid.result(timeout=30)
+    with pytest.raises(ComputeFailedError, match="failed"):
+        leaf.result(timeout=30)
+    assert leaf.state == CUState.FAILED
+    # the failed producer's output DU: FAILED, unsealed, and NO partial
+    # content leaked from the failed attempt
+    with pytest.raises(DataUnitFailedError):
+        bad.output.result(timeout=5)
+    assert bad.output.state == DUState.FAILED
+    assert not bad.output.sealed
+    assert bad.output.manifest == {}
+    # workload is fully terminal: session wait returns promptly
+    assert sess.wait(timeout=10)
+
+
+def test_input_already_failed_fails_at_submit(sess):
+    _register_wordlen_pipeline()
+
+    FUNCTIONS.register("df-boom2", lambda cu_ctx: 1 / 0)
+    p = sess.start_pilot(resource_url=f"sim://{SITE_A}", slots=1)
+    p.wait_active()
+    bad = sess.submit_cu(
+        executable="df-boom2",
+        max_retries=0,
+        output_data=[DataUnitDescription(name="bad2-out")],
+    )
+    bad.wait(timeout=30)
+    late = sess.submit_cu(executable="df-reduce", input_data=[bad.output])
+    assert late.state == CUState.FAILED
+    assert "failed" in late.error
+
+
+def test_cancel_waiting_consumer_and_cascade(sess):
+    _register_wordlen_pipeline()
+    p = sess.start_pilot(resource_url=f"sim://{SITE_A}", slots=1)
+    p.wait_active()
+    placeholder = sess.create_du(name="never-coming")
+    consumer = sess.submit_cu(
+        executable="df-map",
+        input_data=[placeholder],
+        output_data=[DataUnitDescription(name="consumer-out")],
+    )
+    deadline = time.monotonic() + 5
+    while consumer.state != CUState.WAITING and time.monotonic() < deadline:
+        time.sleep(0.005)
+    consumer.cancel()
+    assert consumer.state == CUState.CANCELED
+    # cancellation cascades: its own output DU fails so *its* consumers
+    # are released too instead of hanging
+    assert consumer.output.state == DUState.FAILED
+    with pytest.raises(ComputeFailedError, match="canceled"):
+        consumer.result(timeout=5)
+
+
+def test_retry_does_not_append_onto_partial_outputs(sess):
+    """Regression (ISSUE satellite): a CU that raises after partial
+    write_output calls must not leave half-written files for the retry to
+    append onto — the final output contains exactly the winning attempt's
+    files."""
+    attempts = []
+
+    def flaky_writer(cu_ctx):
+        attempts.append(1)
+        if len(attempts) == 1:
+            cu_ctx.write_output("stale-partial", b"BAD")
+            raise IOError("transient")
+        cu_ctx.write_output("good", b"GOOD")
+        return len(attempts)
+
+    FUNCTIONS.register("df-flaky-writer", flaky_writer)
+    p = sess.start_pilot(resource_url=f"sim://{SITE_A}", slots=1)
+    p.wait_active()
+    cu = sess.submit_cu(
+        executable="df-flaky-writer",
+        max_retries=2,
+        output_data=[DataUnitDescription(name="flaky-out")],
+    )
+    assert cu.result(timeout=60) == 2
+    out = cu.output.result()
+    assert out.manifest == {"good": 4}  # no 'stale-partial' leak
+    assert out.sealed
+    pd = sess.ctx.lookup(out.locations[0])
+    assert pd.fetch_du_file(out.id, "good") == b"GOOD"
+
+
+def test_sealed_du_rejected_as_output(sess):
+    _register_wordlen_pipeline()
+    src = sess.submit_du(name="sealed-src", files={"a": b"x"})
+    sess.start_pilot_data(service_url=f"mem://{SITE_A}/pd", affinity=SITE_A)
+    du = sess.submit_du(name="sealed", files={"b": b"y"}).result()
+    if not du.sealed:
+        du.seal()
+    with pytest.raises(ValueError, match="sealed"):
+        sess.submit_cu(
+            executable="df-map", input_data=[src], output_data=[du]
+        )
+
+
+def test_output_du_is_single_writer(sess):
+    _register_wordlen_pipeline()
+    out = sess.create_du(name="contested")
+    sess.submit_cu(executable="df-map", output_data=[out])
+    with pytest.raises(ValueError, match="single-writer"):
+        sess.submit_cu(executable="df-map", output_data=[out])
+
+
+def test_unknown_input_du_rejected_without_zombie(sess):
+    """Regression: a submission rejected for a bad data reference must
+    leave NO tracked non-terminal CU (which would wedge wait() forever)
+    and NO orphaned producer claim on output DUs."""
+    from repro.core import ComputeUnitDescription
+
+    _register_wordlen_pipeline()
+    out = sess.create_du(name="clean-out")
+    with pytest.raises(KeyError, match="unknown input DU"):
+        sess.cds.submit_compute_unit(
+            ComputeUnitDescription(
+                executable="df-map",
+                input_data=["du-does-not-exist"],
+                output_data=[out.id],
+            )
+        )
+    t0 = time.monotonic()
+    assert sess.wait(timeout=5)  # no zombie CU poisons the wait
+    assert time.monotonic() - t0 < 1.0
+    # the output DU was not claimed by the rejected CU: a corrected
+    # resubmission may still produce it
+    assert sess.store.hget(f"du:{out.id}", "producer") is None
+    src = sess.submit_du(name="ok-src", files={"a": b"zz"})
+    p = sess.start_pilot(resource_url=f"sim://{SITE_A}", slots=1)
+    p.wait_active()
+    cu = sess.submit_cu(
+        executable="df-map", input_data=[src], output_data=[out]
+    )
+    assert cu.result(timeout=30) == "mapped"
+
+
+# ------------------------------------------------------------ release order
+def test_sync_and_async_release_ordering_identical():
+    """The DU-readiness gate releases consumers in DU-materialization
+    order, and both scheduler modes share one gate implementation — with
+    producer completion order pinned externally, the release sequences
+    must match across modes."""
+    _register_wordlen_pipeline()
+    completion_order = [2, 0, 3, 1]
+
+    def run(mode):
+        gates = [threading.Event() for _ in range(4)]
+
+        def gated_producer(cu_ctx, i):
+            assert gates[i].wait(timeout=30)
+            cu_ctx.write_output("out", bytes([i]) * 16)
+            return i
+
+        FUNCTIONS.register("df-gated", gated_producer)
+        with Session(topology=_topo(), scheduler_mode=mode) as s:
+            p = s.start_pilot(resource_url=f"sim://{SITE_A}", slots=4)
+            p.wait_active()
+            tags = {}
+            consumers = []
+            for i in range(4):
+                prod = s.submit_cu(
+                    executable="df-gated",
+                    args=(i,),
+                    output_data=[DataUnitDescription(name=f"o{i}")],
+                )
+                cons = s.submit_cu(
+                    executable="df-reduce", input_data=[prod.output]
+                )
+                tags[cons.id] = f"consumer-{i}"
+                consumers.append(cons)
+            for i in completion_order:
+                gates[i].set()
+                time.sleep(0.3)  # let seal → release settle before the next
+            assert s.wait(timeout=60)
+            assert all(c.state == CUState.DONE for c in consumers)
+            return [tags[c] for c in s.cds.deps.release_log if c in tags]
+
+    order_sync = run("sync")
+    order_async = run("async")
+    assert order_sync == [f"consumer-{i}" for i in completion_order]
+    assert order_sync == order_async
+
+
+# ------------------------------------------------------- futures & shims
+def test_future_api_surface(sess):
+    _register_wordlen_pipeline()
+    p = sess.start_pilot(resource_url=f"sim://{SITE_A}", slots=1)
+    p.wait_active()
+    src = sess.submit_du(name="fsrc", files={"a": b"abc"})
+    cu = sess.submit_cu(
+        executable="df-map",
+        input_data=[src],
+        output_data=[DataUnitDescription(name="fout")],
+    )
+    hits = []
+    cu.add_done_callback(lambda f: hits.append(("cu", f.done())))
+    cu.output.add_done_callback(lambda f: hits.append(("du", f.done())))
+    assert cu.result(timeout=30) == "mapped"
+    deadline = time.monotonic() + 5
+    while len(hits) < 2 and time.monotonic() < deadline:
+        time.sleep(0.01)
+    assert sorted(hits) == [("cu", True), ("du", True)]
+    # a callback added after completion fires immediately, on the caller
+    late = []
+    cu.add_done_callback(lambda f: late.append(threading.get_ident()))
+    assert late and cu.done()
+    # timeout semantics
+    stuck = sess.submit_cu(
+        executable="df-map", input_data=[sess.create_du(name="never")]
+    )
+    with pytest.raises(FutureTimeoutError):
+        stuck.result(timeout=0.1)
+    stuck.cancel()
+
+
+def test_v1_shims_warn_and_still_work():
+    _register_echo = FUNCTIONS.register("df-echo", lambda cu_ctx: "v1")
+    with PilotManager(topology=_topo()) as m:
+        p = m.start_pilot(resource_url=f"sim://{SITE_A}", slots=1)
+        p.wait_active()
+        with pytest.warns(DeprecationWarning, match="Pilot-API v1"):
+            du = m.submit_du(name="v1du", files={"a": b"z" * 64})
+        with pytest.warns(DeprecationWarning, match="Pilot-API v1"):
+            cu = m.submit_cu(executable="df-echo", input_data=[du.id])
+        assert cu.wait(timeout=30) == CUState.DONE
+        assert cu.result == "v1"  # v1 handle: result is the attribute
+
+
+def test_empty_source_du_does_not_gate(sess):
+    """Regression: a v1-style empty DU from submit_du (no files, no
+    producer) is vacuously consumable — only explicit create_du
+    placeholders and declared outputs gate consumers."""
+    _register_wordlen_pipeline()
+    p = sess.start_pilot(resource_url=f"sim://{SITE_A}", slots=1)
+    p.wait_active()
+    empty = sess.submit_du(name="empty-src")
+    cu = sess.submit_cu(executable="df-reduce", input_data=[empty])
+    assert cu.result(timeout=30) == 0
+
+
+def test_empty_session_wait_returns_immediately():
+    with Session(topology=_topo()) as s:
+        t0 = time.monotonic()
+        assert s.wait(timeout=5)
+        assert time.monotonic() - t0 < 1.0

@@ -15,6 +15,7 @@ from repro.core import (
     PilotComputeDescription,
     PilotComputeService,
     PilotManager,
+    Session,
     PlacementStrategy,
     RuntimeContext,
     Topology,
@@ -67,7 +68,7 @@ def test_unknown_scheduler_mode_rejected():
 # ------------------------------------------------------- async end-to-end
 def test_async_mode_completes_workload():
     _register_noop()
-    with PilotManager(topology=_topo(), scheduler_mode="async") as m:
+    with Session(topology=_topo(), scheduler_mode="async") as m:
         pd = m.start_pilot_data(
             service_url=f"mem://{SITE_B}/pd", affinity=SITE_B
         )
@@ -76,7 +77,7 @@ def test_async_mode_completes_workload():
         du = m.submit_du(name="in", files={"a": b"z" * 4096}, target=pd)
         du.wait()
         cus = [
-            m.submit_cu(executable="sched-noop", input_data=[du.id])
+            m.submit_cu(executable="sched-noop", input_data=[du])
             for _ in range(4)
         ]
         assert m.wait(timeout=30)
@@ -93,7 +94,7 @@ def test_pipelining_overlap_staging_during_execution():
     """Staging of CU B's inputs must START before CU A completes (the
     definition of transfer pipelining on a 1-slot pilot)."""
     _register_noop()
-    with PilotManager(
+    with Session(
         topology=_topo(), scheduler_mode="async", time_scale=0.05
     ) as m:
         pd = m.start_pilot_data(
@@ -106,10 +107,10 @@ def test_pipelining_overlap_staging_during_execution():
         du_a.wait(), du_b.wait()
         # sim_compute 2.0 × time_scale 0.05 → ~100 ms wall per CU
         cu_a = m.submit_cu(
-            executable="sched-noop", input_data=[du_a.id], sim_compute_s=2.0
+            executable="sched-noop", input_data=[du_a], sim_compute_s=2.0
         )
         cu_b = m.submit_cu(
-            executable="sched-noop", input_data=[du_b.id], sim_compute_s=2.0
+            executable="sched-noop", input_data=[du_b], sim_compute_s=2.0
         )
         assert m.wait(timeout=60)
         assert cu_a.state == CUState.DONE and cu_b.state == CUState.DONE
@@ -136,7 +137,7 @@ def test_bulk_batches_multi_du_same_source():
     """Multi-DU inputs from one source PD coalesce into one costed bulk
     transfer: a single setup latency instead of one per DU."""
     _register_noop()
-    with PilotManager(topology=_topo(), scheduler_mode="async") as m:
+    with Session(topology=_topo(), scheduler_mode="async") as m:
         pd = m.start_pilot_data(
             service_url=f"mem://{SITE_B}/pd", affinity=SITE_B
         )
@@ -150,7 +151,7 @@ def test_bulk_batches_multi_du_same_source():
         ]
         [du.wait() for du in dus]
         cu = m.submit_cu(
-            executable="sched-noop", input_data=[du.id for du in dus]
+            executable="sched-noop", input_data=list(dus)
         )
         assert m.wait(timeout=30)
         assert cu.state == CUState.DONE
@@ -172,12 +173,11 @@ def test_bulk_batches_multi_du_same_source():
 
 def test_replica_cache_short_circuits_and_invalidates():
     _register_noop()
-    with PilotManager(topology=_topo()) as m:
+    with Session(topology=_topo()) as m:
         pd_b = m.start_pilot_data(
             service_url=f"mem://{SITE_B}/pd", affinity=SITE_B
         )
-        du = m.submit_du(name="hot", files={"a": b"h" * 2048}, target=pd_b)
-        du.wait()
+        du = m.submit_du(name="hot", files={"a": b"h" * 2048}, target=pd_b).result()
         ts = m.transfer
         pd1, linked1 = ts.resolve_access(du, SITE_A)
         assert pd1 is pd_b and not linked1
@@ -254,7 +254,7 @@ def test_sync_and_async_modes_make_identical_decisions():
     _register_noop()
 
     def run(mode: str):
-        with PilotManager(topology=_topo(), scheduler_mode=mode) as m:
+        with Session(topology=_topo(), scheduler_mode=mode) as m:
             pd = m.start_pilot_data(
                 service_url=f"mem://{SITE_B}/pd", affinity=SITE_B
             )
@@ -269,7 +269,7 @@ def test_sync_and_async_modes_make_identical_decisions():
             for i in range(6):
                 m.submit_cu(
                     executable="sched-noop",
-                    input_data=[du.id] if i % 2 == 0 else [],
+                    input_data=[du] if i % 2 == 0 else [],
                 )
             deadline = time.monotonic() + 10
             while len(m.cds.decisions()) < 6 and time.monotonic() < deadline:

@@ -1,5 +1,6 @@
 """End-to-end behaviour tests for the Pilot-Data runtime (threaded, real
-execution; simulated transfer clock)."""
+execution; simulated transfer clock) — driven through the Pilot-API v2
+:class:`Session` facade (typed futures, object-wired data dependencies)."""
 
 import time
 
@@ -13,10 +14,12 @@ from repro.core import (
     PilotManager,
     PilotState,
     QuotaExceeded,
+    Session,
     make_tpu_fleet_topology,
     replicate_group,
     replicate_sequential,
 )
+from repro.core.data_unit import DataUnitDescription
 
 
 @pytest.fixture()
@@ -26,10 +29,9 @@ def topo():
 
 
 @pytest.fixture()
-def mgr(topo):
-    m = PilotManager(topology=topo)
-    yield m
-    m.shutdown()
+def sess(topo):
+    with Session(topology=topo) as s:
+        yield s
 
 
 def _register_echo():
@@ -40,59 +42,59 @@ def _register_echo():
     return echo
 
 
-def test_pilot_lifecycle(mgr):
-    p = mgr.start_pilot(resource_url="sim://cluster:pod0:host0", slots=2)
+def test_pilot_lifecycle(sess):
+    p = sess.start_pilot(resource_url="sim://cluster:pod0:host0", slots=2)
     assert p.wait_active() == PilotState.ACTIVE
     p.cancel()
     assert p.state == PilotState.CANCELED
 
 
-def test_cu_executes_and_returns(mgr):
+def test_cu_executes_and_returns(sess):
     _register_echo()
-    p = mgr.start_pilot(resource_url="sim://cluster:pod0:host0")
+    p = sess.start_pilot(resource_url="sim://cluster:pod0:host0")
     p.wait_active()
-    cu = mgr.submit_cu(executable="echo", kwargs={"payload": 7})
+    cu = sess.submit_cu(executable="echo", kwargs={"payload": 7})
     assert cu.wait() == CUState.DONE
-    assert cu.result == 7
+    assert cu.result() == 7
 
 
-def test_du_staged_to_affine_pd_and_linked(mgr):
+def test_du_staged_to_affine_pd_and_linked(sess):
     """DU at pod0 shared FS → pod0 pilot links (no bytes), pod1 copies."""
-    mgr.start_pilot_data(
+    sess.start_pilot_data(
         service_url="sharedfs://cluster:pod0/scratch", affinity="cluster:pod0"
     )
-    p0 = mgr.start_pilot(resource_url="sim://cluster:pod0:host0")
-    p1 = mgr.start_pilot(resource_url="sim://cluster:pod1:host0")
+    p0 = sess.start_pilot(resource_url="sim://cluster:pod0:host0")
+    p1 = sess.start_pilot(resource_url="sim://cluster:pod1:host0")
     p0.wait_active(), p1.wait_active()
-    du = mgr.submit_du(name="ref", files={"a": b"z" * 4096})
+    du = sess.submit_du(name="ref", files={"a": b"z" * 4096})
     assert du.wait() == DUState.READY
 
     def read_len(cu_ctx):
         return len(cu_ctx.read_input(du.id, "a"))
 
     FUNCTIONS.register("read_len", read_len)
-    c0 = mgr.submit_cu(executable="read_len", input_data=[du.id], pilot=p0.id)
-    c1 = mgr.submit_cu(executable="read_len", input_data=[du.id], pilot=p1.id)
+    c0 = sess.submit_cu(executable="read_len", input_data=[du], pilot=p0)
+    c1 = sess.submit_cu(executable="read_len", input_data=[du], pilot=p1)
     assert c0.wait() == CUState.DONE and c1.wait() == CUState.DONE
-    assert c0.result == c1.result == 4096
-    recs = {(r.dst_pd, r.linked) for r in mgr.transfer.records() if r.du_id == du.id}
-    linked = [r for r in mgr.transfer.records() if r.du_id == du.id and r.linked]
+    assert c0.result() == c1.result() == 4096
+    recs = {(r.dst_pd, r.linked) for r in sess.transfer.records() if r.du_id == du.id}
+    linked = [r for r in sess.transfer.records() if r.du_id == du.id and r.linked]
     copied = [
         r
-        for r in mgr.transfer.records()
+        for r in sess.transfer.records()
         if r.du_id == du.id and not r.linked and r.src_pd is not None
     ]
     assert linked, recs  # pod0 pilot used the logical link
     assert copied  # pod1 pilot had to move bytes
 
 
-def test_affinity_constraint_respected(mgr):
+def test_affinity_constraint_respected(sess):
     _register_echo()
-    p0 = mgr.start_pilot(resource_url="sim://cluster:pod0:host0")
-    p1 = mgr.start_pilot(resource_url="sim://cluster:pod1:host0")
+    p0 = sess.start_pilot(resource_url="sim://cluster:pod0:host0")
+    p1 = sess.start_pilot(resource_url="sim://cluster:pod1:host0")
     p0.wait_active(), p1.wait_active()
     cus = [
-        mgr.submit_cu(executable="echo", affinity="cluster:pod1")
+        sess.submit_cu(executable="echo", affinity="cluster:pod1")
         for _ in range(4)
     ]
     for cu in cus:
@@ -100,74 +102,76 @@ def test_affinity_constraint_respected(mgr):
         assert cu.pilot_id == p1.id
 
 
-def test_scheduler_places_cu_near_data(mgr):
+def test_scheduler_places_cu_near_data(sess):
     """No explicit binding: the CDS should pick the data-local pilot."""
     _register_echo()
-    mgr.start_pilot_data(
+    sess.start_pilot_data(
         service_url="sharedfs://cluster:pod1/scratch", affinity="cluster:pod1"
     )
-    p0 = mgr.start_pilot(resource_url="sim://cluster:pod0:host0")
-    p1 = mgr.start_pilot(resource_url="sim://cluster:pod1:host0")
+    p0 = sess.start_pilot(resource_url="sim://cluster:pod0:host0")
+    p1 = sess.start_pilot(resource_url="sim://cluster:pod1:host0")
     p0.wait_active(), p1.wait_active()
-    du = mgr.submit_du(name="big", files={"blob": b"q" * (1 << 20)})
+    du = sess.submit_du(name="big", files={"blob": b"q" * (1 << 20)})
     assert du.wait() == DUState.READY
-    cu = mgr.submit_cu(executable="echo", input_data=[du.id])
+    cu = sess.submit_cu(executable="echo", input_data=[du])
     assert cu.wait() == CUState.DONE
     assert cu.pilot_id == p1.id
-    decision = [d for d in mgr.cds.decisions() if d["cu"] == cu.id][0]
+    decision = [d for d in sess.decisions() if d["cu"] == cu.id][0]
     assert decision["pilot"] == p1.id
 
 
 def test_push_mode_prestages(topo):
-    with PilotManager(topology=topo, data_mode="push") as m:
+    with Session(topology=topo, data_mode="push") as s:
         _register_echo()
-        p = m.start_pilot(resource_url="sim://cluster:pod0:host0")
+        p = s.start_pilot(resource_url="sim://cluster:pod0:host0")
         p.wait_active()
-        du = m.submit_du(name="d", files={"a": b"x" * 128})
+        du = s.submit_du(name="d", files={"a": b"x" * 128})
         # In push mode the manager stages before queueing; once the CU
         # starts, its sandbox already holds the DU.
-        cu = m.submit_cu(executable="echo", input_data=[du.id])
+        cu = s.submit_cu(executable="echo", input_data=[du])
         assert cu.wait() == CUState.DONE
         assert p.sandbox.has_du(du.id)
 
 
-def test_pilot_cache_reuse(mgr):
+def test_pilot_cache_reuse(sess):
     """Second CU on the same pilot must not re-transfer the DU."""
     _register_echo()
-    p = mgr.start_pilot(resource_url="sim://cluster:pod1:host0", slots=1)
+    p = sess.start_pilot(resource_url="sim://cluster:pod1:host0", slots=1)
     p.wait_active()
-    du = mgr.submit_du(name="d", files={"a": b"x" * 2048})
-    cu1 = mgr.submit_cu(executable="echo", input_data=[du.id], pilot=p.id)
+    du = sess.submit_du(name="d", files={"a": b"x" * 2048})
+    cu1 = sess.submit_cu(executable="echo", input_data=[du], pilot=p)
     assert cu1.wait() == CUState.DONE
-    n_before = len([r for r in mgr.transfer.records() if r.du_id == du.id])
-    cu2 = mgr.submit_cu(executable="echo", input_data=[du.id], pilot=p.id)
+    n_before = len([r for r in sess.transfer.records() if r.du_id == du.id])
+    cu2 = sess.submit_cu(executable="echo", input_data=[du], pilot=p)
     assert cu2.wait() == CUState.DONE
-    n_after = len([r for r in mgr.transfer.records() if r.du_id == du.id])
+    n_after = len([r for r in sess.transfer.records() if r.du_id == du.id])
     assert n_after == n_before  # cache hit: zero new transfers
 
 
-def test_output_du_flow(mgr):
-    p = mgr.start_pilot(resource_url="sim://cluster:pod0:host0")
+def test_output_du_flow(sess):
+    p = sess.start_pilot(resource_url="sim://cluster:pod0:host0")
     p.wait_active()
-    du_in = mgr.submit_du(name="in", files={"x": b"abc"})
-    du_out = mgr.submit_du(name="out")
+    du_in = sess.submit_du(name="in", files={"x": b"abc"})
 
     def transform(cu_ctx):
         data = cu_ctx.read_input(du_in.id, "x")
         cu_ctx.write_output("y", data.upper())
 
     FUNCTIONS.register("transform", transform)
-    cu = mgr.submit_cu(
-        executable="transform", input_data=[du_in.id], output_data=[du_out.id]
+    cu = sess.submit_cu(
+        executable="transform",
+        input_data=[du_in],
+        output_data=[DataUnitDescription(name="out")],
     )
     assert cu.wait() == CUState.DONE
+    du_out = cu.output
     assert du_out.state == DUState.READY
     assert du_out.sealed
-    pd = mgr.ctx.lookup(du_out.locations[0])
+    pd = sess.ctx.lookup(du_out.locations[0])
     assert pd.fetch_du_file(du_out.id, "y") == b"ABC"
 
 
-def test_cu_failure_retries_then_fails(mgr):
+def test_cu_failure_retries_then_fails(sess):
     attempts = []
 
     def flaky(cu_ctx):
@@ -175,43 +179,43 @@ def test_cu_failure_retries_then_fails(mgr):
         raise ValueError("boom")
 
     FUNCTIONS.register("flaky", flaky)
-    p = mgr.start_pilot(resource_url="sim://cluster:pod0:host0")
+    p = sess.start_pilot(resource_url="sim://cluster:pod0:host0")
     p.wait_active()
-    cu = mgr.submit_cu(executable="flaky", max_retries=2)
+    cu = sess.submit_cu(executable="flaky", max_retries=2)
     assert cu.wait(timeout=20) == CUState.FAILED
     assert len(attempts) == 3  # initial + 2 retries
     assert "boom" in cu.error
 
 
 def test_heartbeat_failure_recovery(topo):
-    with PilotManager(
+    with Session(
         topology=topo, enable_heartbeat_monitor=True, heartbeat_timeout_s=0.3
-    ) as m:
+    ) as s:
 
         def slow(cu_ctx):
             time.sleep(0.4)
             return "done"
 
         FUNCTIONS.register("slow2", slow)
-        p0 = m.start_pilot(resource_url="sim://cluster:pod0:host0")
-        p1 = m.start_pilot(resource_url="sim://cluster:pod1:host0")
+        p0 = s.start_pilot(resource_url="sim://cluster:pod0:host0")
+        p1 = s.start_pilot(resource_url="sim://cluster:pod1:host0")
         p0.wait_active(), p1.wait_active()
-        cu = m.submit_cu(executable="slow2", pilot=p1.id, max_retries=3)
+        cu = s.submit_cu(executable="slow2", pilot=p1, max_retries=3)
         time.sleep(0.15)
         p1.fail()  # crash: heartbeats stop, store untouched
         assert cu.wait(timeout=30) == CUState.DONE
         assert cu.pilot_id == p0.id  # recovered elsewhere
-        assert p1.id in m.heartbeat_monitor.failures
-        assert m.pilot_states()[p1.id] == PilotState.FAILED
+        assert p1.id in s.heartbeat_monitor.failures
+        assert s.pilot_states()[p1.id] == PilotState.FAILED
 
 
 def test_straggler_duplication_exactly_once(topo):
-    with PilotManager(
+    with Session(
         topology=topo,
         enable_straggler_mitigation=True,
         straggler_factor=2.0,
-    ) as m:
-        m.straggler_mitigator.min_samples = 2
+    ) as s:
+        s.straggler_mitigator.min_samples = 2
 
         def fast(cu_ctx):
             time.sleep(0.02)
@@ -228,87 +232,89 @@ def test_straggler_duplication_exactly_once(topo):
 
         FUNCTIONS.register("fast", fast)
         FUNCTIONS.register("sometimes_slow", sometimes_slow)
-        p0 = m.start_pilot(resource_url="sim://cluster:pod0:host0", slots=2)
-        p1 = m.start_pilot(resource_url="sim://cluster:pod1:host0", slots=2)
+        p0 = s.start_pilot(resource_url="sim://cluster:pod0:host0", slots=2)
+        p1 = s.start_pilot(resource_url="sim://cluster:pod1:host0", slots=2)
         p0.wait_active(), p1.wait_active()
         for _ in range(3):
-            assert m.submit_cu(executable="fast").wait() == CUState.DONE
-        cu = m.submit_cu(executable="sometimes_slow", pilot=p0.id)
+            assert s.submit_cu(executable="fast").wait() == CUState.DONE
+        cu = s.submit_cu(executable="sometimes_slow", pilot=p0)
         assert cu.wait(timeout=30) == CUState.DONE
-        assert cu.id in m.straggler_mitigator.duplicates
+        assert cu.id in s.straggler_mitigator.duplicates
         # winner CAS: exactly one completion recorded
-        assert m.store.hget(f"cu:{cu.id}", "winner") is not None
+        assert s.store.hget(f"cu:{cu.id}", "winner") is not None
 
 
 def test_walltime_requeues(topo):
-    with PilotManager(topology=topo) as m:
+    with Session(topology=topo) as s:
 
         def sleepy(cu_ctx):
             time.sleep(0.3)
             return 1
 
         FUNCTIONS.register("sleepy", sleepy)
-        p_short = m.start_pilot(
+        p_short = s.start_pilot(
             resource_url="sim://cluster:pod0:host0", walltime_s=0.1
         )
-        p_long = m.start_pilot(resource_url="sim://cluster:pod1:host0")
+        p_long = s.start_pilot(resource_url="sim://cluster:pod1:host0")
         p_short.wait_active(), p_long.wait_active()
-        cu = m.submit_cu(executable="sleepy", pilot=p_short.id, max_retries=3)
+        cu = s.submit_cu(executable="sleepy", pilot=p_short, max_retries=3)
         assert cu.wait(timeout=30) == CUState.DONE
         # The short pilot retired; someone (usually p_long) finished the CU.
-        assert m.pilot_states()[p_short.id] == PilotState.DONE
+        assert s.pilot_states()[p_short.id] == PilotState.DONE
 
 
-def test_pd_quota(mgr):
-    pd = mgr.start_pilot_data(
+def test_pd_quota(sess):
+    pd = sess.start_pilot_data(
         service_url="mem://cluster:pod0:host0/tiny",
         affinity="cluster:pod0:host0",
         size_quota=10,
     )
-    du = mgr.submit_du(name="toolarge", files={"a": b"x" * 100}, target=None)
+    du = sess.submit_du(name="toolarge", files={"a": b"x" * 100}, target=None)
     with pytest.raises(QuotaExceeded):
-        pd.put_du(du)
+        pd.put_du(du.du)
 
 
-def test_replication_strategies_on_live_pds(mgr):
-    src = mgr.start_pilot_data(
+def test_replication_strategies_on_live_pds(sess):
+    src = sess.start_pilot_data(
         service_url="sharedfs://cluster:pod0/src", affinity="cluster:pod0"
     )
     targets = [
-        mgr.start_pilot_data(
+        sess.start_pilot_data(
             service_url=f"mem://cluster:pod1:host{h}/repl",
             affinity=f"cluster:pod1:host{h}",
         )
         for h in range(2)
     ]
-    du = mgr.submit_du(name="data", files={"blob": b"r" * (1 << 16)}, target=src)
-    assert du.wait() == DUState.READY
-    t_grp = replicate_group(du, src, targets, mgr.ctx)
+    du = sess.submit_du(
+        name="data", files={"blob": b"r" * (1 << 16)}, target=src
+    ).result()
+    t_grp = replicate_group(du, src, targets, sess.ctx)
     assert all(t.has_du(du.id) for t in targets)
     assert all(t.verify_du(du) for t in targets)
     assert set(du.locations) == {src.id, *[t.id for t in targets]}
     # sequential on fresh targets for comparison
     targets2 = [
-        mgr.start_pilot_data(
+        sess.start_pilot_data(
             service_url=f"mem://cluster:pod1:host{h}/repl2",
             affinity=f"cluster:pod1:host{h}",
         )
         for h in range(2)
     ]
-    t_seq = replicate_sequential(du, src, targets2, mgr.ctx)
+    t_seq = replicate_sequential(du, src, targets2, sess.ctx)
     assert t_grp <= t_seq + 1e-9
 
 
-def test_demand_replicator(mgr):
-    src = mgr.start_pilot_data(
+def test_demand_replicator(sess):
+    src = sess.start_pilot_data(
         service_url="sharedfs://cluster:pod0/src2", affinity="cluster:pod0"
     )
-    pod1_pd = mgr.start_pilot_data(
+    pod1_pd = sess.start_pilot_data(
         service_url="sharedfs://cluster:pod1/cache", affinity="cluster:pod1"
     )
-    du = mgr.submit_du(name="popular", files={"b": b"p" * 1024}, target=src)
-    du.wait()
-    rep = DemandReplicator(mgr.ctx, threshold=2)
+    du = sess.submit_du(
+        name="popular", files={"b": b"p" * 1024}, target=src
+    ).result()
+    rep = DemandReplicator(sess.ctx, threshold=2)
     rep.observe_staging(du, "cluster:pod1:host0")
     assert rep.maybe_replicate(du, "cluster:pod1:host0", [pod1_pd]) is None
     rep.observe_staging(du, "cluster:pod1:host1")
@@ -319,29 +325,29 @@ def test_demand_replicator(mgr):
 def test_reconnect_second_manager_sees_state(topo):
     """A second client attached to the same store resolves CU/pilot state
     (the paper's re-connect-via-URL semantics)."""
-    with PilotManager(topology=topo) as m:
+    with Session(topology=topo) as s:
         _register_echo()
-        p = m.start_pilot(resource_url="sim://cluster:pod0:host0")
+        p = s.start_pilot(resource_url="sim://cluster:pod0:host0")
         p.wait_active()
-        cu = m.submit_cu(executable="echo")
+        cu = s.submit_cu(executable="echo")
         assert cu.wait() == CUState.DONE
-        with PilotManager(topology=topo, store=m.store) as m2:
+        with PilotManager(topology=topo, store=s.store) as m2:
             assert m2.cu_states()[cu.id] == CUState.DONE
             assert m2.pilot_states()[p.id] == PilotState.ACTIVE
 
 
 def test_store_outage_survival(topo):
-    with PilotManager(topology=topo) as m:
+    with Session(topology=topo) as s:
         _register_echo()
-        p = m.start_pilot(resource_url="sim://cluster:pod0:host0")
+        p = s.start_pilot(resource_url="sim://cluster:pod0:host0")
         p.wait_active()
-        m.store.fail_for(0.2)  # transient outage mid-flight
+        s.store.fail_for(0.2)  # transient outage mid-flight
         cu = None
         # submission may need to ride out the outage
         deadline = time.monotonic() + 5
         while cu is None and time.monotonic() < deadline:
             try:
-                cu = m.submit_cu(executable="echo")
+                cu = s.submit_cu(executable="echo")
             except Exception:
                 time.sleep(0.05)
         assert cu is not None
