@@ -6,6 +6,11 @@ more than the threshold.  Makespans are simulated (deterministic transfer
 clock), so a drift beyond the threshold means the scheduler/transfer code
 path actually got slower, not that the runner was noisy.
 
+The gate also verifies every ``*.claim.*`` row in the CURRENT artifact
+evaluates True — the recovery-path claims (no DU lost under churn, lineage
+recomputation completes the DAG, monitor op counts O(changes)) gate PRs
+exactly like scheduling regressions do.
+
 Usage:
     python -m benchmarks.check_regression \
         --baseline benchmarks/baseline_quick.json \
@@ -25,17 +30,37 @@ from typing import Dict
 #: deterministic critical-path staging totals
 GATED = re.compile(r"\.makespan$|\.blocking_stage_sim$")
 
+#: rows whose ``derived`` field is a True/False claim (the boolean is the
+#: last colon-separated token, e.g. "800<=2x600(1.33x):True" or "True")
+CLAIM = re.compile(r"\.claim\.")
 
-def load_rows(path: str) -> Dict[str, float]:
+
+def _load(path: str) -> dict:
     with open(path, "r", encoding="utf-8") as fh:
         payload = json.load(fh)
     if payload.get("schema") != "bench-rows/v1":
         raise SystemExit(f"{path}: unexpected schema {payload.get('schema')!r}")
+    return payload
+
+
+def load_rows(path: str) -> Dict[str, float]:
     return {
         r["name"]: float(r["us_per_call"])
-        for r in payload["rows"]
+        for r in _load(path)["rows"]
         if GATED.search(r["name"])
     }
+
+
+def load_claims(path: str) -> Dict[str, str]:
+    return {
+        r["name"]: str(r["derived"])
+        for r in _load(path)["rows"]
+        if CLAIM.search(r["name"])
+    }
+
+
+def claim_holds(derived: str) -> bool:
+    return derived.rsplit(":", 1)[-1].strip() == "True"
 
 
 def main() -> None:
@@ -78,14 +103,46 @@ def main() -> None:
     if missing:
         print(f"\nWARNING: {len(missing)} baseline row(s) missing from the "
               f"current run: {', '.join(missing)}", file=sys.stderr)
-    if regressions:
+
+    # claim gate: every claim in the current artifact must evaluate True,
+    # and no claim the baseline knows may vanish from the current run
+    claims = load_claims(args.current)
+    baseline_claims = load_claims(args.baseline)
+    failed_claims = sorted(
+        name for name, derived in claims.items() if not claim_holds(derived)
+    )
+    missing_claims = sorted(set(baseline_claims) - set(claims))
+    print(f"\nclaims: {len(claims)} checked, {len(failed_claims)} false")
+    for name in failed_claims:
+        print(f"  FALSE: {name} = {claims[name]}")
+    if missing_claims:
+        # a vanished claim is a failure, not a warning: the gate must not
+        # pass silently exactly when the bench producing the claim broke
         print(
-            f"\nFAIL: {len(regressions)} makespan row(s) regressed more than "
-            f"{args.threshold:.0%} — rebaseline only with a justification.",
+            f"\nFAIL: {len(missing_claims)} baseline claim(s) missing "
+            f"from the current run: {', '.join(missing_claims)}",
             file=sys.stderr,
         )
+
+    if regressions or failed_claims or missing_claims:
+        if regressions:
+            print(
+                f"\nFAIL: {len(regressions)} makespan row(s) regressed more "
+                f"than {args.threshold:.0%} — rebaseline only with a "
+                f"justification.",
+                file=sys.stderr,
+            )
+        if failed_claims or missing_claims:
+            print(
+                f"\nFAIL: {len(failed_claims)} benchmark claim(s) evaluated "
+                f"False, {len(missing_claims)} missing.",
+                file=sys.stderr,
+            )
         sys.exit(1)
-    print(f"\nOK: no makespan regression beyond {args.threshold:.0%}.")
+    print(
+        f"\nOK: no makespan regression beyond {args.threshold:.0%}; all "
+        f"claims hold."
+    )
 
 
 if __name__ == "__main__":

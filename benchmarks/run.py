@@ -12,6 +12,9 @@ can archive a perf trajectory artifact per run.
                        + async-vs-sync pipelined staging comparison
   bench_dataflow     — Pilot-API v2 DAG: one-shot declarative submission
                        (sync + async) vs v1 submit-wait-submit
+  bench_faults       — makespan-under-churn: kill k of n pilots
+                       mid-workload; replication-factor healing + lineage
+                       recomputation; monitor op-count O(changes) proof
   bench_cost_model   — §6.1 calculus vs oracle + replication degree
   bench_roofline     — assignment §Roofline terms from dry-run artifacts
 """
@@ -44,6 +47,7 @@ def main() -> None:
     from . import (
         bench_cost_model,
         bench_dataflow,
+        bench_faults,
         bench_placement,
         bench_replication,
         bench_roofline,
@@ -57,6 +61,7 @@ def main() -> None:
         "placement": lambda: bench_placement.run(),
         "scale": lambda: bench_scale.run(n_tasks=128 if args.quick else 1024),
         "dataflow": lambda: bench_dataflow.run(),
+        "faults": lambda: bench_faults.run(quick=args.quick),
         "cost_model": lambda: bench_cost_model.run(),
         "roofline": lambda: bench_roofline.run(),
     }

@@ -40,7 +40,12 @@ from .data_unit import (
     merge_dus,
     partition_du,
 )
-from .faults import HeartbeatMonitor, StragglerMitigator, requeue_orphans
+from .faults import (
+    HeartbeatMonitor,
+    StragglerMitigator,
+    fail_cu_terminal,
+    requeue_orphans,
+)
 from .futures import (
     ComputeFailedError,
     CUFuture,
@@ -68,7 +73,13 @@ from .pilot import (
     QuotaExceeded,
     RuntimeContext,
 )
-from .replication import DemandReplicator, replicate_group, replicate_sequential
+from .recovery import FaultManager, ReplicaManager
+from .replication import (
+    DemandReplicator,
+    replicate_group,
+    replicate_sequential,
+    select_heal_targets,
+)
 from .scheduler import AsyncScheduler, SchedulerEvent
 from .services import (
     ComputeDataService,
@@ -92,6 +103,7 @@ __all__ = [
     "ChunkInfo", "DEFAULT_CHUNK_SIZE",
     "DataUnit", "DataUnitDescription", "DUState", "merge_dus", "partition_du",
     "HeartbeatMonitor", "StragglerMitigator", "requeue_orphans",
+    "fail_cu_terminal", "FaultManager", "ReplicaManager", "select_heal_targets",
     "PilotManager",
     "PilotCompute", "PilotComputeDescription", "PilotData", "PilotDataDescription",
     "PilotState", "QuotaExceeded", "RuntimeContext",

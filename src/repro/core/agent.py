@@ -31,7 +31,7 @@ from typing import Any, Dict, List, Optional
 from .affinity import match_affinity
 from .compute_unit import CUState, ComputeUnit, FUNCTIONS
 from .data_unit import DataUnit, DUState
-from .pilot import PilotState, RuntimeContext
+from .pilot import HEARTBEATS_KEY, PilotState, RuntimeContext
 
 GLOBAL_QUEUE = "queue:global"
 
@@ -114,6 +114,29 @@ class PilotAgent:
         self._started_at: Optional[float] = None
         self._lock = threading.Lock()
         self._running: Dict[str, float] = {}  # cu_id -> start time
+        # Own pilot/sandbox state tracked off keyspace notifications, so
+        # the claim-loop SUSPECT/FAILED checks are memory reads instead of
+        # per-iteration store ops (assignment is atomic; no lock needed).
+        self._own_state_cache: Optional[str] = ctx.store.hget(
+            f"pilot:{pilot.id}", "state"
+        )
+        self._sandbox_failed_flag = False
+        self._sub_tokens = [
+            ctx.store.subscribe(
+                self._on_pilot_event, prefix=f"pilot:{pilot.id}"
+            ),
+            ctx.store.subscribe(
+                self._on_sandbox_event, prefix=f"pd:{pilot.sandbox.id}"
+            ),
+        ]
+
+    def _on_pilot_event(self, ev) -> None:
+        if ev.op == "hset" and ev.field == "state":
+            self._own_state_cache = ev.value
+
+    def _on_sandbox_event(self, ev) -> None:
+        if ev.op == "hset" and ev.field == "state":
+            self._sandbox_failed_flag = ev.value == PilotState.FAILED
 
     # ------------------------------------------------------------ lifecycle
     def start(self) -> None:
@@ -125,11 +148,17 @@ class PilotAgent:
 
     def stop(self) -> None:
         self._stop.set()
+        self._unsubscribe()
 
     def kill(self) -> None:
         """Simulated node crash: stop heartbeating immediately, abandon CUs."""
         self._dead.set()
         self._stop.set()
+
+    def _unsubscribe(self) -> None:
+        for token in self._sub_tokens:
+            self.ctx.store.unsubscribe(token)
+        self._sub_tokens = []
 
     def join(self, timeout: float = 5.0) -> None:
         for t in self._threads:
@@ -141,6 +170,15 @@ class PilotAgent:
 
     # ----------------------------------------------------------- main loop
     def _main(self) -> None:
+        try:
+            self._main_loop()
+        finally:
+            # every exit path — retire, cancel, hardened-FAILED, crash —
+            # drops the store subscriptions, or dead agents' callbacks
+            # would tax every future mutation and pin the agent in memory
+            self._unsubscribe()
+
+    def _main_loop(self) -> None:
         store, pilot = self.ctx.store, self.pilot
         # Simulated batch-queue wait (T_Q_pilot).
         self.ctx.sleep_sim(pilot.description.queue_time_s)
@@ -159,12 +197,37 @@ class PilotAgent:
             },
         )
         self._started_at = time.monotonic()
+        self._heartbeat()  # liveness visible the instant we turn ACTIVE
         queues = [pilot.queue_name, GLOBAL_QUEUE]
         while not self._stop.is_set():
             self._heartbeat()
             if self._walltime_exceeded():
                 self._retire()
                 return
+            own_state = self._own_state()
+            if own_state == PilotState.FAILED and self._sandbox_failed():
+                # The monitor hardened us to FAILED (we stalled past the
+                # threshold) AND the FaultManager purged our sandbox — our
+                # replicas can never register again.  FAILED is terminal,
+                # so stop claiming; in-flight workers decline their wins.
+                # (Standalone-monitor mode never fails the sandbox: there a
+                # falsely-failed-but-alive agent keeps working — its
+                # replicas still register and the winner CAS dedups
+                # against the re-queued copy.  That also means a CU popped
+                # in the ms-wide FAILED→purge window is a deliberate
+                # tradeoff: it is declined and handed back once the purge
+                # lands, costing at most one store-side attempt — whereas
+                # gating on FAILED alone would deadlock single-pilot
+                # standalone deployments on a monitor false positive.)
+                self._drop_heartbeat()  # we re-wrote it above; retract
+                return
+            if own_state == PilotState.SUSPECT:
+                # Grace period: the monitor flagged us SUSPECT (missed
+                # heartbeats).  Drain in-flight CUs but claim nothing new —
+                # recovery must not race a half-alive pilot.  The heartbeat
+                # we just wrote flips us back to ACTIVE if we're merely slow.
+                time.sleep(max(self.ctx.poll_s, 0.01))
+                continue
             if not self._slots.acquire(timeout=0.02):
                 continue
             try:
@@ -175,6 +238,14 @@ class PilotAgent:
                 continue
             if item is None:
                 self._slots.release()
+                continue
+            if self._own_state() == PilotState.SUSPECT or self._sandbox_failed():
+                # SUSPECT (or a recovery purge) landed while we were
+                # blocked in the pop: hand the item back instead of racing
+                # recovery with a fresh claim
+                store.push(GLOBAL_QUEUE, item)
+                self._slots.release()
+                time.sleep(max(self.ctx.poll_s, 0.01))
                 continue
             cu_id = item["cu"] if isinstance(item, dict) else item
             is_dup = isinstance(item, dict) and item.get("dup", False)
@@ -205,13 +276,14 @@ class PilotAgent:
             worker.start()
         if not self._dead.is_set():
             store.hset(f"pilot:{pilot.id}", "state", PilotState.DONE)
+            self._drop_heartbeat()
 
     def _heartbeat(self) -> None:
         if self._dead.is_set():
             return
         try:
             self.ctx.store.hset(
-                f"pilot:{self.pilot.id}", "heartbeat", time.monotonic()
+                HEARTBEATS_KEY, self.pilot.id, time.monotonic()
             )
             with self._lock:
                 self.ctx.store.hset(
@@ -219,6 +291,23 @@ class PilotAgent:
                 )
         except Exception:
             pass  # transient store outage: agents survive (§4.2)
+
+    def _own_state(self) -> Optional[str]:
+        return self._own_state_cache
+
+    def _sandbox_failed(self) -> bool:
+        """True once fault recovery purged this pilot's sandbox PD — the
+        point of no return: replicas written here can never register."""
+        return self._sandbox_failed_flag
+
+    def _drop_heartbeat(self) -> None:
+        """Remove this pilot's heartbeat entry on orderly shutdown so the
+        shared hash (the monitor's single per-tick scan) doesn't grow with
+        historical pilot churn."""
+        try:
+            self.ctx.store.hdel(HEARTBEATS_KEY, self.pilot.id)
+        except Exception:
+            pass
 
     def _walltime_exceeded(self) -> bool:
         wt = self.pilot.description.walltime_s
@@ -238,6 +327,7 @@ class PilotAgent:
                 cu._set_state(CUState.PENDING)
                 store.push(GLOBAL_QUEUE, {"cu": cu.id, "dup": False})
         store.hset(f"pilot:{self.pilot.id}", "state", PilotState.DONE)
+        self._drop_heartbeat()
 
     # -------------------------------------------------------- CU execution
     def _run_cu(self, cu: ComputeUnit, is_dup: bool) -> None:
@@ -274,6 +364,29 @@ class PilotAgent:
             cu.timings.run_end = time.monotonic()
             if self._dead.is_set():
                 return  # node died mid-flight: results are lost
+            if self._sandbox_failed():
+                # The monitor declared us dead (false positive: we were
+                # merely stalled) and recovery purged our sandbox.
+                # Claiming the win now would seal output DUs whose
+                # replicas the FAILED sandbox can no longer register —
+                # silent data loss.  Decline, and if orphan recovery's
+                # one-shot requeue ran BEFORE we claimed (so it missed
+                # this CU), hand it back ourselves — otherwise it would
+                # sit in STAGING/RUNNING with no winner forever.  Only if
+                # the claim is still OURS (nobody re-claimed after a
+                # recovery requeue) — else we'd flip another agent's
+                # in-flight attempt back to PENDING.
+                if (
+                    not is_dup
+                    and store.hget(f"cu:{cu.id}", "pilot") == pilot.id
+                ):
+                    for st in (CUState.STAGING, CUState.RUNNING):
+                        if cu._cas_state(st, CUState.PENDING):
+                            store.push(
+                                GLOBAL_QUEUE, {"cu": cu.id, "dup": False}
+                            )
+                            break
+                return
             # ---- exactly-once completion (first finisher wins) ----
             if not store.hcas(f"cu:{cu.id}", "winner", None, pilot.id):
                 return  # a duplicate finished first; discard its buffers
@@ -305,7 +418,13 @@ class PilotAgent:
             cu.error = f"{type(exc).__name__}: {exc}"
             store.hset(f"cu:{cu.id}", "error", cu.error)
             store.hset(f"cu:{cu.id}", "traceback", traceback.format_exc())
-            cu.attempts += 1
+            # the store-side counter is authoritative: orphan recovery may
+            # have burned attempts while no live handle was reachable
+            cu.attempts = (
+                max(cu.attempts, int(store.hget(f"cu:{cu.id}", "attempts", 0)))
+                + 1
+            )
+            store.hset(f"cu:{cu.id}", "attempts", cu.attempts)
             if cu.attempts <= desc.max_retries and not self._dead.is_set():
                 # retry with backoff via the global queue (the failed
                 # attempt's buffered output writes were discarded, so the

@@ -145,9 +145,21 @@ class ComputeUnit:
         self.result: Any = None
         self.error: Optional[str] = None
         self.attempts = 0
+        prior = store.hgetall(f"cu:{self.id}") if cu_id is not None else {}
+        if prior.get("state") is not None:
+            # Re-attach to an existing CU record (reconnect semantics, like
+            # DataUnit): the store is authoritative — adopt its counters
+            # instead of resetting the record from under a live workload.
+            self.attempts = int(prior.get("attempts", 0))
+            self.error = prior.get("error")
+            return
         store.hset(f"cu:{self.id}", "state", CUState.NEW)
         store.hset(f"cu:{self.id}", "desc", description.to_json())
         store.hset(f"cu:{self.id}", "pilot", None)
+        # store-side attempt counter: orphan recovery must be able to bump
+        # retries even when no live ComputeUnit handle exists (a crash-
+        # looping pilot would otherwise requeue the same CU forever)
+        store.hset(f"cu:{self.id}", "attempts", 0)
 
     @property
     def url(self) -> str:

@@ -87,6 +87,7 @@ class CoordinationStore:
         self._wal_path = wal_path
         self._wal_file = None
         self._op_count = 0
+        self._ops_total = 0
         self._seq = 0
         self._subs: Dict[int, Tuple[str, Callable[[StoreEvent], None]]] = {}
         self._sub_next = 0
@@ -102,8 +103,17 @@ class CoordinationStore:
             self._fail_until = time.monotonic() + seconds
 
     def _check_up(self) -> None:
+        self._ops_total += 1
         if time.monotonic() < self._fail_until:
             raise CoordinationUnavailable("coordination store unavailable")
+
+    @property
+    def ops_total(self) -> int:
+        """Count of store operations issued so far (every public op checks
+        liveness exactly once, so this is the op counter the O(changes)
+        monitor micro-benchmarks read deltas from)."""
+        with self._lock:
+            return self._ops_total
 
     # ------------------------------------------------------------ durability
     def _log(self, op: str, *args: Any) -> None:

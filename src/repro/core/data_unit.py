@@ -52,6 +52,11 @@ class DUState:
     NEW = "New"
     PENDING = "Pending"  # staging to first PD in flight
     READY = "Ready"  # >= 1 full replica materialized; sealed
+    #: every replica was lost (pilot churn) and the runtime is rebuilding
+    #: the content — by re-ingesting the local buffer or by re-running the
+    #: recorded producer CU (lineage recomputation); consumers re-park on
+    #: the DU until it re-seals
+    RECOVERING = "Recovering"
     FAILED = "Failed"
     DELETED = "Deleted"
 
@@ -88,6 +93,10 @@ class DataUnitDescription:
     size_hint: int = 0
     #: physical chunking granularity for this DU's replicas
     chunk_size: int = DEFAULT_CHUNK_SIZE
+    #: minimum number of live FULL replicas the runtime keeps for this DU;
+    #: the ReplicaManager re-replicates (chunk-striped, failure-domain-
+    #: aware) whenever pilot churn drops holdings below this
+    replication_factor: int = 1
 
     def to_json(self) -> Dict:
         return {
@@ -96,6 +105,7 @@ class DataUnitDescription:
             "affinity": self.affinity,
             "size_hint": self.size_hint,
             "chunk_size": self.chunk_size,
+            "replication_factor": self.replication_factor,
         }
 
 
@@ -149,6 +159,9 @@ class DataUnit:
                 description.chunk_size = prior.get(
                     "chunk_size", description.chunk_size
                 )
+                description.replication_factor = prior.get(
+                    "replication_factor", description.replication_factor
+                )
                 self._manifest = dict(prior.get("manifest", {}))
                 self._checksums = dict(prior.get("checksums", {}))
                 self._chunks = [
@@ -166,6 +179,10 @@ class DataUnit:
         store.hset(f"du:{self.id}", "checksums", dict(self._checksums))
         store.hset(f"du:{self.id}", "sealed", False)
         store.hset(f"du:{self.id}", "chunk_size", description.chunk_size)
+        store.hset(
+            f"du:{self.id}", "replication_factor",
+            description.replication_factor,
+        )
         self._ensure_chunks()
 
     # ------------------------------------------------------------- identity
@@ -203,6 +220,15 @@ class DataUnit:
     def locations_version(self) -> int:
         with self._lock:
             return self._loc_version
+
+    @property
+    def replication_factor(self) -> int:
+        return int(
+            self._store.hget(
+                f"du:{self.id}", "replication_factor",
+                self.description.replication_factor,
+            )
+        )
 
     def checksum(self, relpath: str) -> int:
         return self._checksums[relpath]
@@ -352,6 +378,34 @@ class DataUnit:
             self._loc_version += 1
             self._store.hset(f"du:{self.id}", "locations", locs)
             self._store.hdel(f"du:{self.id}:chunks", pd_id)
+
+    def has_full_coverage(self) -> bool:
+        """True iff the union of all registered holders (full AND partial)
+        still covers every chunk — i.e. a full replica can be rebuilt by
+        striping, no lineage recomputation needed."""
+        self._ensure_chunks()
+        held: set = set()
+        for idxs in self.chunk_holders().values():
+            held.update(idxs)
+        with self._lock:
+            return len(held) >= len(self._chunks)
+
+    def begin_recovery(self) -> None:
+        """All replicas of this sealed DU were lost: reopen it for a
+        producer re-run (lineage recomputation).
+
+        Clears every holding, un-seals the DU and parks it in
+        ``Recovering`` — consumers submitted against it gate on the
+        re-seal exactly like they gated on the first materialization.
+        Assumes the producer is deterministic (re-runs rewrite the same
+        logical content)."""
+        with self._lock:
+            self._loc_version += 1
+            self._store.hset(f"du:{self.id}", "locations", [])
+            for pd_id in list(self._store.hgetall(f"du:{self.id}:chunks")):
+                self._store.hdel(f"du:{self.id}:chunks", pd_id)
+            self._store.hset(f"du:{self.id}", "sealed", False)
+            self._store.hset(f"du:{self.id}", "state", DUState.RECOVERING)
 
     # ----------------------------------------------------------- mutation
     def add_file(self, relpath: str, data: bytes) -> None:

@@ -162,9 +162,20 @@ class DUFuture:
     def error(self) -> Optional[str]:
         return self._store.hget(f"du:{self.id}", "error")
 
+    @property
+    def recovering(self) -> bool:
+        """True while the runtime rebuilds this DU after total replica
+        loss (lineage recomputation / buffer re-ingest).  A recovering
+        future is NOT done; ``result()`` keeps waiting and resolves when
+        the re-run re-seals the DU — or raises if recovery fails."""
+        return self.state == DUState.RECOVERING
+
     # ------------------------------------------------------------- futures
     def done(self) -> bool:
-        return self.state in self._SETTLED or self.sealed
+        state = self.state
+        if state == DUState.RECOVERING:
+            return False  # un-sealed for rewrite; the re-seal settles it
+        return state in self._SETTLED or self.sealed
 
     def wait(self, timeout: float = 30.0) -> str:
         """Block until settled; returns the DU state (compat with

@@ -22,6 +22,7 @@ from .compute_unit import ComputeUnitDescription, FUNCTIONS
 from .coordination import CoordinationStore
 from .data_unit import DataUnitDescription
 from .faults import HeartbeatMonitor, StragglerMitigator
+from .recovery import FaultManager
 from .pilot import (
     PilotComputeDescription,
     PilotDataDescription,
@@ -47,6 +48,8 @@ class PilotManager:
         delayed_scheduling_s: float = 0.0,
         enable_heartbeat_monitor: bool = False,
         heartbeat_timeout_s: float = 0.5,
+        suspect_timeout_s: Optional[float] = None,
+        enable_fault_manager: bool = False,
         enable_straggler_mitigation: bool = False,
         straggler_factor: float = 2.5,
         scheduler_mode: str = "sync",
@@ -83,9 +86,24 @@ class PilotManager:
         self._session = None  # lazy Pilot-API v2 facade (see .session)
         self.heartbeat_monitor: Optional[HeartbeatMonitor] = None
         self.straggler_mitigator: Optional[StragglerMitigator] = None
-        if enable_heartbeat_monitor:
+        self.fault_manager: Optional[FaultManager] = None
+        if enable_fault_manager:
+            # Full self-healing pipeline: pilot death purges the dead
+            # sandbox's replicas, re-enforces replication factors and
+            # recomputes lost DUs by lineage (implies the monitor).
+            self.fault_manager = FaultManager(self.ctx, cds=self.cds)
             self.heartbeat_monitor = HeartbeatMonitor(
-                self.ctx, timeout_s=heartbeat_timeout_s
+                self.ctx,
+                timeout_s=heartbeat_timeout_s,
+                suspect_timeout_s=suspect_timeout_s,
+                on_suspect=self.fault_manager.on_pilot_suspect,
+                on_failure=self.fault_manager.on_pilot_failed,
+            ).start()
+        elif enable_heartbeat_monitor:
+            self.heartbeat_monitor = HeartbeatMonitor(
+                self.ctx,
+                timeout_s=heartbeat_timeout_s,
+                suspect_timeout_s=suspect_timeout_s,
             ).start()
         if enable_straggler_mitigation:
             self.straggler_mitigator = StragglerMitigator(
@@ -170,6 +188,9 @@ class PilotManager:
             self.heartbeat_monitor.stop()
         if self.straggler_mitigator:
             self.straggler_mitigator.stop()
+        if self.fault_manager:
+            with contextlib.suppress(Exception):
+                self.fault_manager.stop()
         self.store.close()
 
     def __enter__(self) -> "PilotManager":

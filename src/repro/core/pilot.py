@@ -23,11 +23,23 @@ class PilotState:
     NEW = "New"
     PROVISIONING = "Provisioning"  # waiting in the resource's queue (T_Q_pilot)
     ACTIVE = "Active"
+    #: grace period: heartbeats missed but below the failure threshold —
+    #: the pilot is non-placeable (schedulers route around it, its agent
+    #: stops pulling new work) while in-flight CUs drain; a fresh heartbeat
+    #: returns it to ACTIVE, continued silence hardens it to FAILED
+    SUSPECT = "Suspect"
     DONE = "Done"
     FAILED = "Failed"
     CANCELED = "Canceled"
 
     TERMINAL = (DONE, FAILED, CANCELED)
+    #: states a scheduler may bind new work to
+    PLACEABLE = (NEW, PROVISIONING, ACTIVE)
+
+#: shared hash of per-pilot heartbeat timestamps — ONE ``hgetall`` reads
+#: every pilot's liveness (the HeartbeatMonitor's per-tick scan is a single
+#: hash-field scan instead of O(pilots) record reads)
+HEARTBEATS_KEY = "heartbeats"
 
 
 @dataclasses.dataclass
@@ -170,7 +182,11 @@ class PilotData:
     ) -> int:
         """Record newly-held chunks; returns bytes newly accounted (chunks
         already held are not double-counted, so racing stagers stay
-        consistent)."""
+        consistent).  A PD marked FAILED (its pilot died and recovery
+        purged it) records nothing: a dying agent's still-running stage-in
+        must not re-register the dead sandbox as a replica holder."""
+        if self.state == PilotState.FAILED:
+            return 0
         chunks = du.chunks
         with self._lock:
             held = self._du_chunks.setdefault(du.id, set())
@@ -353,7 +369,10 @@ class PilotCompute:
         st.hset(f"pilot:{self.id}", "affinity", description.affinity)
         st.hset(f"pilot:{self.id}", "slots", description.slots)
         st.hset(f"pilot:{self.id}", "queue_time_s", description.queue_time_s)
-        st.hset(f"pilot:{self.id}", "heartbeat", time.monotonic())
+        # sandbox PD id at the top level: recovery must find the dead
+        # pilot's replica holdings without a live PilotCompute handle
+        st.hset(f"pilot:{self.id}", "sandbox_pd", self.sandbox.id)
+        st.hset(HEARTBEATS_KEY, self.id, time.monotonic())
         self.agent = PilotAgent(self, ctx)
 
     @property
@@ -387,6 +406,7 @@ class PilotCompute:
     def cancel(self) -> None:
         self.agent.stop()
         self.ctx.store.hset(f"pilot:{self.id}", "state", PilotState.CANCELED)
+        self.ctx.store.hdel(HEARTBEATS_KEY, self.id)
 
     def fail(self) -> None:
         """Simulate a hard node failure (fault-injection tests).

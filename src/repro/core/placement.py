@@ -75,7 +75,7 @@ class PlacementEngine:
     def pilot_tq_estimate(self, pilot: PilotCompute) -> float:
         """Expected wait before ``pilot`` could start one more CU."""
         st = pilot.state
-        if st in PilotState.TERMINAL:
+        if st not in PilotState.PLACEABLE:
             return float("inf")
         tq = 0.0
         if st == PilotState.PROVISIONING:
@@ -141,11 +141,15 @@ class PlacementEngine:
     def candidates(
         self, cu: ComputeUnit, pilots: Sequence[PilotCompute]
     ) -> List[Candidate]:
-        """All affinity-admissible, non-terminal pilots with their costs."""
+        """All affinity-admissible, placeable pilots with their costs.
+        Terminal pilots never qualify; neither do SUSPECT ones — a pilot
+        in its missed-heartbeat grace period drains in-flight work but
+        must not be handed anything new (it may be about to fail, and
+        recovery would race the binding)."""
         constraint = cu.description.affinity
         out: List[Candidate] = []
         for p in pilots:
-            if p.state in PilotState.TERMINAL:
+            if p.state not in PilotState.PLACEABLE:
                 continue
             if constraint and not match_affinity(constraint, p.affinity):
                 continue

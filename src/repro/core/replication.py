@@ -138,6 +138,69 @@ def replicate_group(
     return total
 
 
+def _site_of(label: str) -> str:
+    """Failure-domain key of an affinity label: the site subtree (first
+    two components).  A whole site — its shared FS, its pilots — is the
+    unit that tends to die together (walltime kill, maintenance window)."""
+    parts = label.split(":")
+    return ":".join(parts[:2]) if len(parts) >= 2 else label
+
+
+def select_heal_targets(
+    ctx: RuntimeContext,
+    du: DataUnit,
+    candidates: Sequence[PilotData],
+    n: int,
+    held: Sequence[str] = (),
+) -> List[PilotData]:
+    """Pick up to ``n`` PDs to host new replicas of ``du``,
+    failure-domain-aware: candidates in sites that do NOT already hold a
+    replica rank first (so re-replication spreads copies across domains
+    instead of piling them where the next churn event takes them all),
+    then by transfer cost from the surviving holders, then by free space.
+    Deterministic for a fixed candidate set.
+    """
+    if n <= 0 or not candidates:
+        return []
+    held_sites = {_site_of(label) for label in held}
+    src_labels = [label for label in held if label]
+
+    def cost(pd: PilotData) -> float:
+        if not src_labels:
+            return 0.0  # healing from the local buffer: location-agnostic
+        return min(
+            estimate_tx(du.size, s, pd.affinity, ctx.topology)
+            for s in src_labels
+        )
+
+    ranked = sorted(
+        candidates,
+        key=lambda pd: (
+            _site_of(pd.affinity) in held_sites,  # new domains first
+            cost(pd),
+            -pd.free_bytes,
+            pd.id,
+        ),
+    )
+    # never stack two new replicas into the same failure domain while an
+    # untouched domain remains available
+    out: List[PilotData] = []
+    used_sites = set(held_sites)
+    for pd in ranked:
+        if len(out) >= n:
+            break
+        if _site_of(pd.affinity) in used_sites:
+            continue
+        out.append(pd)
+        used_sites.add(_site_of(pd.affinity))
+    for pd in ranked:
+        if len(out) >= n:
+            break
+        if pd not in out:
+            out.append(pd)
+    return out
+
+
 class DemandReplicator:
     """PD2P-style demand-based replication policy.
 

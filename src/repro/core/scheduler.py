@@ -167,7 +167,13 @@ class AsyncScheduler:
             self.cds.place(cu)  # prefetch rides the pre-push hook
         elif ev.kind == "cu-state" and ev.value in CUState.TERMINAL:
             self.cds.recheck_delayed()
-        elif ev.kind == "pilot-state" and ev.value == "Active":
+        elif ev.kind == "pilot-state" and ev.value in (
+            "Active", "Suspect", "Failed"
+        ):
+            # Active: capacity appeared.  Suspect/Failed: capacity VANISHED
+            # — delayed CUs parked for that pilot must re-place elsewhere
+            # (suspect pilots are non-placeable while their in-flight work
+            # drains), and the fault pipeline's re-queues need a pass.
             self.cds.recheck_delayed()
 
     def _begin_prefetch(self, cu, pilot) -> None:

@@ -462,6 +462,12 @@ class ComputeDataService:
         if desc.pilot is not None:
             # Application-level direct binding (§4.3.2 control level (i)).
             pilot: PilotCompute = self.ctx.lookup(desc.pilot)
+            if pilot.state not in PilotState.PLACEABLE:
+                # Pinned to a dead/suspect pilot (it may be the very pilot
+                # whose failure re-queued this CU): fall back to the global
+                # queue so any live pilot can pull it.
+                self.ctx.store.push(GLOBAL_QUEUE, {"cu": cu.id, "dup": False})
+                return None
             self._push_to_pilot(cu, pilot)
             return pilot
         with self._lock:
@@ -525,7 +531,16 @@ class ComputeDataService:
                 self.ctx.transfer_service.stage_in(
                     du, pilot.sandbox, pilot.affinity
                 )
-        self.ctx.store.push(pilot.queue_name, {"cu": cu.id, "dup": False})
+        item = {"cu": cu.id, "dup": False}
+        self.ctx.store.push(pilot.queue_name, item)
+        # Close the check-then-push race against pilot death: fault
+        # recovery drains a dead pilot's queue exactly once, so a push
+        # landing AFTER that drain would strand the CU forever.  The
+        # monitor sets FAILED before the drain runs; re-checking here
+        # guarantees either the drain sees our item or we see FAILED.
+        if pilot.state not in PilotState.PLACEABLE:
+            if self.ctx.store.qremove(pilot.queue_name, item):
+                self.ctx.store.push(GLOBAL_QUEUE, item)
 
     def recheck_delayed(self) -> List[tuple]:
         """Re-check delayed CUs (step 3); returns [(cu, pilot)] placed onto

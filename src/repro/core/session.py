@@ -100,6 +100,20 @@ class Session:
     def straggler_mitigator(self):
         return self.manager.straggler_mitigator
 
+    @property
+    def fault_manager(self):
+        """The self-healing pipeline (``enable_fault_manager=True``):
+        replica purge on pilot death, replication-factor enforcement,
+        lineage recomputation.  None when not enabled."""
+        return self.manager.fault_manager
+
+    def recovering_dus(self) -> List[str]:
+        """DU ids currently being rebuilt after total replica loss
+        (state ``Recovering``); empty when the data layer is healthy."""
+        from .recovery import recovering_dus
+
+        return recovering_dus(self.store)
+
     def start_pilot(self, **kw) -> PilotCompute:
         return self.manager.start_pilot(**kw)
 

@@ -98,6 +98,9 @@ class TransferService:
         self.cache_hits = 0
         self.cache_misses = 0
         self._batch_ids = itertools.count()
+        #: PDs purged after pilot death — never planned as a source or
+        #: served from a cached resolution again
+        self._dead_pds: Set[str] = set()
 
     # ------------------------------------------------------------- costing
     def simulated_transfer_time(
@@ -152,6 +155,35 @@ class TransferService:
     def reset_records(self) -> None:
         with self._lock:
             self._records.clear()
+
+    def purge_pd(self, pd_id: str) -> None:
+        """A PD died (its pilot failed): stop using it immediately.
+
+        Releases every in-flight staging claim destined for it (stagers
+        waiting on those claims wake and re-plan against live holders
+        instead of blocking out their full timeout) and evicts every
+        cached resolution/estimate that names it as source or destination.
+        Location-version bumps from the holdings purge invalidate the rest.
+        """
+        with self._lock:
+            self._dead_pds.add(pd_id)
+            for key in list(self._inflight):
+                if key[1] != pd_id:
+                    continue
+                for _, done in self._inflight.pop(key):
+                    done.set()
+            self._resolve_cache = {
+                k: v for k, v in self._resolve_cache.items()
+                if v[1] != pd_id
+            }
+            self._estimate_cache = {
+                k: v for k, v in self._estimate_cache.items()
+                if k[2] != pd_id
+            }
+
+    def is_dead(self, pd_id: str) -> bool:
+        with self._lock:
+            return pd_id in self._dead_pds
 
     def ingest(self, du: DataUnit, dst: PilotData) -> float:
         """Initial staging of a freshly-described DU into its first PD."""
@@ -235,8 +267,10 @@ class TransferService:
     ) -> List[Tuple[PilotData, Set[int]]]:
         """Live PDs (full or partial holders) usable as chunk sources."""
         out: List[Tuple[PilotData, Set[int]]] = []
+        with self._lock:
+            dead = set(self._dead_pds)
         for pd_id, idxs in sorted(du.chunk_holders().items()):
-            if pd_id == dst.id or pd_id not in self.ctx.objects:
+            if pd_id == dst.id or pd_id in dead or pd_id not in self.ctx.objects:
                 continue
             pd = self.ctx.lookup(pd_id)
             if idxs:
@@ -425,10 +459,12 @@ class TransferService:
     def _resolve_uncached(
         self, du: DataUnit, location: str
     ) -> Tuple[Optional[PilotData], bool]:
+        with self._lock:
+            dead = set(self._dead_pds)
         replicas = [
             self.ctx.lookup(pd_id)
             for pd_id in du.locations
-            if pd_id in self.ctx.objects
+            if pd_id in self.ctx.objects and pd_id not in dead
         ]
         for pd in replicas:
             if self.is_linkable(pd, location):

@@ -1,0 +1,543 @@
+"""Self-healing data layer: failure-domain-aware recovery, replication-
+factor enforcement, lineage recomputation, SUSPECT grace periods, and the
+orphan-requeue regression fixes."""
+
+import time
+
+import pytest
+
+from repro.core import (
+    ComputeUnit,
+    ComputeUnitDescription,
+    CUState,
+    ComputeFailedError,
+    DataUnit,
+    DataUnitDescription,
+    DUState,
+    FaultManager,
+    FUNCTIONS,
+    HeartbeatMonitor,
+    PilotManager,
+    PilotState,
+    RuntimeContext,
+    Session,
+    StragglerMitigator,
+    Topology,
+    CoordinationStore,
+    make_tpu_fleet_topology,
+    requeue_orphans,
+)
+from repro.core.pilot import HEARTBEATS_KEY
+
+
+MB = 1_000_000
+
+
+@pytest.fixture()
+def topo():
+    t, _ = make_tpu_fleet_topology(pods=3, hosts_per_pod=2)
+    return t
+
+
+def _wait_until(pred, timeout=10.0, interval=0.005):
+    deadline = time.monotonic() + timeout
+    while time.monotonic() < deadline:
+        if pred():
+            return True
+        time.sleep(interval)
+    return pred()
+
+
+# --------------------------------------------------------------- kill-pilot
+def test_kill_pilot_mid_running_recovers_elsewhere(topo):
+    with Session(
+        topology=topo, enable_fault_manager=True, heartbeat_timeout_s=0.3
+    ) as s:
+        def slow(cu_ctx):
+            time.sleep(0.6)
+            return "survived"
+
+        FUNCTIONS.register("ft-slow-run", slow)
+        p0 = s.start_pilot(resource_url="sim://cluster:pod0:host0")
+        p1 = s.start_pilot(resource_url="sim://cluster:pod1:host0")
+        p0.wait_active(), p1.wait_active()
+        cu = s.submit_cu(executable="ft-slow-run", pilot=p1, max_retries=3)
+        assert _wait_until(lambda: cu.state == CUState.RUNNING, timeout=5)
+        p1.fail()  # crash mid-RUNNING: heartbeats stop, store untouched
+        assert cu.result(timeout=30) == "survived"
+        assert cu.pilot_id == p0.id
+        assert p1.id in s.heartbeat_monitor.failures
+        # the FaultManager processed the failure (purge + requeue audit)
+        assert _wait_until(
+            lambda: any(e["pilot"] == p1.id for e in s.fault_manager.log),
+            timeout=5,
+        )
+
+
+def test_kill_pilot_mid_staging_recovers_elsewhere():
+    topo = Topology()
+    topo.register("wan:sitea", bandwidth=0.5 * MB, latency=0.05)
+    topo.register("wan:siteb", bandwidth=0.5 * MB, latency=0.05)
+    with Session(
+        topology=topo,
+        enable_fault_manager=True,
+        heartbeat_timeout_s=0.3,
+        time_scale=0.2,
+    ) as s:
+        def read_all(cu_ctx):
+            du = cu_ctx.input_dus()[0]
+            return sum(
+                len(cu_ctx.read_input(du.id, r)) for r in du.manifest
+            )
+
+        FUNCTIONS.register("ft-read-all", read_all)
+        pd = s.start_pilot_data(
+            service_url="sharedfs://wan:sitea/scratch", affinity="wan:sitea"
+        )
+        pa = s.start_pilot(resource_url="sim://wan:sitea")
+        pb = s.start_pilot(resource_url="sim://wan:siteb")
+        pa.wait_active(), pb.wait_active()
+        du = s.submit_du(
+            name="big", files={"d": b"x" * MB}, target=pd
+        ).result()
+        # pinned to siteb: staging must cross the 0.5 MB/s WAN link
+        # (~2 sim-s -> ~0.4 wall-s at time_scale), so the kill lands
+        # mid-STAGING
+        cu = s.submit_cu(
+            executable="ft-read-all", input_data=[du], pilot=pb,
+            max_retries=3,
+        )
+        assert _wait_until(lambda: cu.state == CUState.STAGING, timeout=5)
+        pb.fail()
+        assert cu.result(timeout=30) == MB
+        assert cu.pilot_id == pa.id
+        # the dead sandbox was purged from the DU's replica bookkeeping
+        assert pb.sandbox.id not in du.locations
+        assert pb.sandbox.id not in du.chunk_holders()
+
+
+# ------------------------------------------------------- stale-replica purge
+def test_purge_invalidates_transfer_cache_and_placement(topo):
+    with Session(
+        topology=topo, enable_fault_manager=True, heartbeat_timeout_s=0.3
+    ) as s:
+        def read_one(cu_ctx):
+            du = cu_ctx.input_dus()[0]
+            return len(cu_ctx.read_input(du.id, "a"))
+
+        FUNCTIONS.register("ft-read-one", read_one)
+        p0 = s.start_pilot(resource_url="sim://cluster:pod0:host0")
+        p1 = s.start_pilot(resource_url="sim://cluster:pod1:host0")
+        p0.wait_active(), p1.wait_active()
+        du_f = s.submit_du(name="d", files={"a": b"z" * 65536})
+        du = du_f.du
+        cu = s.submit_cu(executable="ft-read-one", input_data=[du_f], pilot=p1)
+        assert cu.result(timeout=20) == 65536
+        assert du.locations == [p1.sandbox.id]
+        ts = s.transfer
+        # prime the replica-resolution cache with the (soon dead) holder
+        pd, _ = ts.resolve_access(du, p0.affinity)
+        assert pd.id == p1.sandbox.id
+        cached_cost = ts.estimate_stage_cost(du, p0.affinity, p0.sandbox)
+        assert cached_cost > 0.0
+        p1.fail()
+        assert _wait_until(
+            lambda: any(e["pilot"] == p1.id for e in s.fault_manager.log),
+            timeout=5,
+        )
+        assert ts.is_dead(p1.sandbox.id)
+        # holdings purged -> placement/locality no longer sees the dead PD
+        assert p1.sandbox.id not in du.locations
+        assert p1.sandbox.id not in du.chunk_holders()
+        # the cached resolution must not serve the dead PD again; the
+        # buffer-backed DU was re-replicated onto a live PD by recovery
+        assert _wait_until(lambda: len(du.locations) >= 1, timeout=5)
+        pd2, _ = ts.resolve_access(du, p0.affinity)
+        assert pd2 is not None and pd2.id != p1.sandbox.id
+
+
+# ------------------------------------------------- replication-factor healing
+def test_replication_factor_healing_from_partial_sources(topo):
+    with PilotManager(topology=topo) as mgr:
+        p2 = mgr.start_pilot(resource_url="sim://cluster:pod2:host0")
+        p2.wait_active()
+        pd_a = mgr.start_pilot_data(
+            service_url="sharedfs://cluster:pod0/a", affinity="cluster:pod0"
+        )
+        pd_b = mgr.start_pilot_data(
+            service_url="sharedfs://cluster:pod1/b", affinity="cluster:pod1"
+        )
+        desc = DataUnitDescription(
+            name="r2",
+            files={"blob": b"r" * 8192},
+            chunk_size=1024,
+            replication_factor=2,
+        )
+        du = mgr.cds.submit_data_unit(desc, target=p2.sandbox)
+        assert du.wait() == DUState.READY and du.n_chunks == 8
+        # partial replicas: each explicit PD holds half the chunks
+        pd_a.copy_chunks_from(du, p2.sandbox, [0, 1, 2, 3])
+        pd_b.copy_chunks_from(du, p2.sandbox, [4, 5, 6, 7])
+        du.drop_local_buffer()  # healing must come from chunk holders
+        assert du.locations == [p2.sandbox.id]
+
+        fm = FaultManager(mgr.ctx, cds=mgr.cds)
+        try:
+            mgr.store.hset(f"pilot:{p2.id}", "state", PilotState.FAILED)
+            fm._handle_failure(p2.id)
+            # sole full replica died; the two partial holders still cover
+            # every chunk -> chunk-striped healing rebuilds full replicas
+            # (failure-domain-aware: one per surviving site)
+            assert p2.sandbox.id not in du.locations
+            assert _wait_until(
+                lambda: {pd_a.id, pd_b.id} <= set(du.locations), timeout=10
+            )
+            assert pd_a.verify_du(du) and pd_b.verify_du(du)
+            heals = [
+                r for r in mgr.transfer.records()
+                if r.du_id == du.id and r.chunks
+                and r.src_pd in (pd_a.id, pd_b.id)
+            ]
+            assert heals, "healing must fetch from the partial holders"
+            # chunk-level: each heal moved only the 4 missing chunks, not
+            # a whole-DU copy
+            assert {r.chunks for r in heals} == {4}
+            actions = fm.log[-1]["actions"]
+            assert actions[du.id] == "healed"
+        finally:
+            fm.stop()
+
+
+def test_replication_factor_enforced_at_submission(topo):
+    """factor=2 at submission: the ReplicaManager proactively creates the
+    second replica in a different failure domain."""
+    with Session(topology=topo, enable_fault_manager=True) as s:
+        pd_a = s.start_pilot_data(
+            service_url="sharedfs://cluster:pod0/a", affinity="cluster:pod0"
+        )
+        pd_b = s.start_pilot_data(
+            service_url="sharedfs://cluster:pod1/b", affinity="cluster:pod1"
+        )
+        du_f = s.submit_du(
+            name="r2", files={"x": b"q" * 4096}, replication_factor=2
+        )
+        assert du_f.wait() == DUState.READY
+        du = du_f.du
+        assert _wait_until(lambda: len(du.locations) >= 2, timeout=10)
+        # failure-domain-aware: one replica per site, not two in one domain
+        assert set(du.locations) == {pd_a.id, pd_b.id}
+        assert s.fault_manager.replicas.heals
+
+
+# ------------------------------------------------------ lineage recomputation
+def test_lineage_recomputation_two_stage_dag(topo):
+    with Session(
+        topology=topo, enable_fault_manager=True, heartbeat_timeout_s=0.3
+    ) as s:
+        runs = []
+
+        def produce(cu_ctx):
+            runs.append(1)
+            time.sleep(0.3)  # keep the RECOVERING window observable
+            du = cu_ctx.input_dus()[0]
+            data = cu_ctx.read_input(du.id, "src")
+            cu_ctx.write_output("y", data.upper())
+            return len(runs)
+
+        def consume(cu_ctx):
+            du = cu_ctx.input_dus()[0]
+            return cu_ctx.read_input(du.id, "y")
+
+        FUNCTIONS.register("ft-produce", produce)
+        FUNCTIONS.register("ft-consume", consume)
+        p1 = s.start_pilot(resource_url="sim://cluster:pod0:host0")
+        p2 = s.start_pilot(resource_url="sim://cluster:pod1:host0")
+        p1.wait_active(), p2.wait_active()
+        src = s.submit_du(name="src", files={"src": b"abc" * 1000})
+        prod = s.submit_cu(
+            executable="ft-produce",
+            input_data=[src],
+            output_data=[DataUnitDescription(name="inter")],
+            pilot=p1,
+        )
+        inter = prod.output
+        assert prod.result(timeout=20) == 1
+        inter_du = inter.result(timeout=10)
+        # content now lives ONLY in the dead-pilot-to-be's sandbox
+        inter_du.drop_local_buffer()
+        assert inter_du.locations == [p1.sandbox.id]
+        p1.fail()
+        # every replica is gone -> RECOVERING surfaces on the future while
+        # the recorded producer is re-queued (lineage recomputation)
+        assert _wait_until(lambda: inter.recovering, timeout=10)
+        assert not inter.done()
+        assert inter.id in s.recovering_dus()
+        cons = s.submit_cu(executable="ft-consume", input_data=[inter])
+        assert cons.result(timeout=30) == b"ABC" * 1000
+        assert len(runs) == 2  # producer really re-ran
+        assert prod.id in s.fault_manager.recomputed
+        assert inter.state == DUState.READY and inter.sealed
+        assert p1.sandbox.id not in inter.locations
+
+
+def test_recover_du_reattaches_store_only_handle(topo):
+    """Reconnected-manager scenario (§4.2): the DU exists only in the
+    store.  Recovery must re-attach a live handle from the persisted
+    manifest and heal — not skip and leave a READY DU with no replicas."""
+    with PilotManager(topology=topo) as mgr:
+        p = mgr.start_pilot(resource_url="sim://cluster:pod2:host0")
+        p.wait_active()
+        pd_a = mgr.start_pilot_data(
+            service_url="sharedfs://cluster:pod0/a", affinity="cluster:pod0"
+        )
+        pd_b = mgr.start_pilot_data(
+            service_url="sharedfs://cluster:pod1/b", affinity="cluster:pod1"
+        )
+        du = mgr.cds.submit_data_unit(
+            DataUnitDescription(
+                name="remote", files={"blob": b"m" * 8192}, chunk_size=1024
+            ),
+            target=p.sandbox,
+        )
+        assert du.wait() == DUState.READY
+        pd_a.copy_chunks_from(du, p.sandbox, [0, 1, 2, 3])
+        pd_b.copy_chunks_from(du, p.sandbox, [4, 5, 6, 7])
+        # simulate a reconnected manager: no live handle anywhere
+        mgr.ctx.objects.pop(du.id)
+        fm = FaultManager(mgr.ctx, cds=mgr.cds)
+        try:
+            mgr.store.hset(f"pilot:{p.id}", "state", PilotState.FAILED)
+            fm._handle_failure(p.id)
+            assert fm.log[-1]["actions"][du.id] == "healed"
+            locs = mgr.store.hget(f"du:{du.id}", "locations", [])
+            assert locs and p.sandbox.id not in locs
+            # the re-attached handle was registered for later resolution
+            assert du.id in mgr.ctx.objects
+        finally:
+            fm.stop()
+
+
+def test_lineage_unrecoverable_without_producer_fails(topo):
+    """A sealed source DU with no producer, no buffer and no replicas is
+    unrecoverable: it must FAIL loudly, not hang consumers."""
+    with PilotManager(topology=topo) as mgr:
+        p = mgr.start_pilot(resource_url="sim://cluster:pod0:host0")
+        p.wait_active()
+        du = mgr.cds.submit_data_unit(
+            DataUnitDescription(name="orphaned", files={"a": b"x" * 1024}),
+            target=p.sandbox,
+        )
+        assert du.wait() == DUState.READY
+        du.drop_local_buffer()
+        fm = FaultManager(mgr.ctx, cds=mgr.cds)
+        try:
+            mgr.store.hset(f"pilot:{p.id}", "state", PilotState.FAILED)
+            fm._handle_failure(p.id)
+            assert du.state == DUState.FAILED
+            assert "no producer" in mgr.store.hget(f"du:{du.id}", "error")
+            assert fm.log[-1]["actions"][du.id] == "lost"
+        finally:
+            fm.stop()
+
+
+# ---------------------------------------------------- SUSPECT grace periods
+def test_suspect_grace_period_then_reinstate_then_fail():
+    store = CoordinationStore()
+    ctx = RuntimeContext(store=store, topology=Topology())
+    suspects, failures = [], []
+    store.hset("pilot:px", "state", PilotState.ACTIVE)
+    now = time.monotonic()
+    mon = HeartbeatMonitor(
+        ctx,
+        timeout_s=0.5,
+        suspect_timeout_s=0.1,
+        on_suspect=suspects.append,
+        on_failure=failures.append,
+    )
+    try:
+        # fresh heartbeat: stays ACTIVE
+        store.hset(HEARTBEATS_KEY, "px", now)
+        mon._tick(now=now + 0.05)
+        assert store.hget("pilot:px", "state") == PilotState.ACTIVE
+        # grace window: SUSPECT, not FAILED
+        mon._tick(now=now + 0.2)
+        assert store.hget("pilot:px", "state") == PilotState.SUSPECT
+        assert suspects == ["px"] and failures == []
+        # heartbeats resume inside the grace window: reinstated
+        store.hset(HEARTBEATS_KEY, "px", now + 0.25)
+        mon._tick(now=now + 0.3)
+        assert store.hget("pilot:px", "state") == PilotState.ACTIVE
+        # hard silence: SUSPECT then FAILED
+        mon._tick(now=now + 0.45)
+        assert store.hget("pilot:px", "state") == PilotState.SUSPECT
+        mon._tick(now=now + 0.8)
+        assert store.hget("pilot:px", "state") == PilotState.FAILED
+        assert failures == ["px"]
+    finally:
+        mon.stop()
+
+
+def test_suspect_pilot_is_not_placeable(topo):
+    with Session(topology=topo) as s:
+        def echo(cu_ctx):
+            return "ok"
+
+        FUNCTIONS.register("ft-echo", echo)
+        p0 = s.start_pilot(resource_url="sim://cluster:pod0:host0", slots=2)
+        p1 = s.start_pilot(resource_url="sim://cluster:pod1:host0", slots=2)
+        p0.wait_active(), p1.wait_active()
+        s.store.hset(f"pilot:{p1.id}", "state", PilotState.SUSPECT)
+        cus = [s.submit_cu(executable="ft-echo") for _ in range(4)]
+        for cu in cus:
+            assert cu.wait(timeout=20) == CUState.DONE
+            # placement skipped the suspect pilot AND its agent claimed
+            # nothing new off the global queue
+            assert cu.pilot_id == p0.id
+        # reinstated: pinned work flows again
+        s.store.hset(f"pilot:{p1.id}", "state", PilotState.ACTIVE)
+        cu = s.submit_cu(executable="ft-echo", pilot=p1)
+        assert cu.wait(timeout=20) == CUState.DONE
+        assert cu.pilot_id == p1.id
+
+
+def test_falsely_failed_pilot_hands_work_back(topo):
+    """Monitor false positive AFTER the recovery purge: a pilot marked
+    FAILED whose sandbox was purged — while its agent is actually alive —
+    must neither claim new work nor black-hole its in-flight CU; the
+    declined attempt is handed back and completes elsewhere."""
+    with Session(topology=topo) as s:
+        def slowish(cu_ctx):
+            time.sleep(0.4)
+            return "done"
+
+        FUNCTIONS.register("ft-slowish", slowish)
+        p0 = s.start_pilot(resource_url="sim://cluster:pod0:host0")
+        p1 = s.start_pilot(resource_url="sim://cluster:pod1:host0")
+        p0.wait_active(), p1.wait_active()
+        cu = s.submit_cu(executable="ft-slowish", pilot=p1, max_retries=3)
+        assert _wait_until(lambda: cu.state == CUState.RUNNING, timeout=5)
+        # false positive hardened all the way: pilot FAILED + sandbox
+        # purged by recovery, but the agent never actually died
+        s.store.hset(f"pilot:{p1.id}", "state", PilotState.FAILED)
+        s.store.hset(f"pd:{p1.sandbox.id}", "state", PilotState.FAILED)
+        assert cu.result(timeout=30) == "done"
+        assert cu.pilot_id == p0.id  # the live survivor won it
+        # the falsely-failed agent stopped claiming entirely
+        cu2 = s.submit_cu(executable="ft-slowish")
+        assert cu2.result(timeout=30) == "done"
+        assert cu2.pilot_id == p0.id
+
+
+# ------------------------------------------- orphan-requeue regression fixes
+def test_requeue_orphans_bumps_store_attempts_without_live_handle(topo):
+    """A crash-looping pilot must NOT retry an orphan forever when no live
+    ComputeUnit handle resolves (regression: attempts were only bumped via
+    ctx.lookup)."""
+    with PilotManager(topology=topo) as mgr:
+        store, ctx = mgr.store, mgr.ctx
+        out = DataUnit(DataUnitDescription(name="out"), store)
+        ctx.register(out)
+        desc = ComputeUnitDescription(
+            executable="nope", max_retries=2, output_data=[out.id]
+        )
+        cu = ComputeUnit(desc, store)  # NOT registered: lookup raises
+        store.hset(f"du:{out.id}", "producer", cu.id)
+        rounds = 0
+        while store.hget(f"cu:{cu.id}", "state") != CUState.FAILED:
+            rounds += 1
+            assert rounds <= 10, "orphan requeued forever (attempts not bumped)"
+            # simulate the crash-looping pilot re-claiming the CU and dying
+            store.hset(f"cu:{cu.id}", "state", CUState.RUNNING)
+            store.hset(f"cu:{cu.id}", "pilot", "pc-crashloop")
+            requeue_orphans(ctx, "pc-crashloop")
+        assert rounds == 3  # initial + max_retries, then terminal
+        assert int(store.hget(f"cu:{cu.id}", "attempts")) == 3
+        # cascade reached the output DU even with no live CU handle
+        assert store.hget(f"du:{out.id}", "state") == DUState.FAILED
+        assert cu.id in store.hget(f"du:{out.id}", "error")
+
+
+def test_exhausted_orphan_cascades_to_waiting_consumers(topo):
+    """Orphan retries exhausted -> CU FAILED through the full dataflow
+    cascade: output DUs FAILED, parked consumers released with the cause
+    (regression: _set_state(FAILED) bypassed the cascade and consumers
+    hung)."""
+    with Session(
+        topology=topo, enable_fault_manager=True, heartbeat_timeout_s=0.3
+    ) as s:
+        def doomed(cu_ctx):
+            time.sleep(0.6)
+            cu_ctx.write_output("y", b"never")
+            return 1
+
+        def reader(cu_ctx):
+            return 1
+
+        FUNCTIONS.register("ft-doomed", doomed)
+        FUNCTIONS.register("ft-reader", reader)
+        p0 = s.start_pilot(resource_url="sim://cluster:pod0:host0")
+        p1 = s.start_pilot(resource_url="sim://cluster:pod1:host0")
+        p0.wait_active(), p1.wait_active()
+        prod = s.submit_cu(
+            executable="ft-doomed",
+            output_data=[DataUnitDescription(name="never")],
+            pilot=p1,
+            max_retries=0,
+        )
+        cons = s.submit_cu(executable="ft-reader", input_data=[prod.output])
+        assert _wait_until(lambda: cons.state == CUState.WAITING, timeout=5)
+        assert _wait_until(lambda: prod.state == CUState.RUNNING, timeout=5)
+        p1.fail()
+        assert prod.wait(timeout=20) == CUState.FAILED
+        assert "retries are exhausted" in prod.error
+        assert prod.output.state == DUState.FAILED
+        assert cons.wait(timeout=20) == CUState.FAILED
+        with pytest.raises(ComputeFailedError) as exc:
+            cons.result(timeout=5)
+        assert prod.output.id in str(exc.value)
+
+
+# ----------------------------------------------------- O(changes) monitors
+def test_heartbeat_monitor_tick_is_single_scan():
+    store = CoordinationStore()
+    ctx = RuntimeContext(store=store, topology=Topology())
+    now = time.monotonic()
+    for i in range(50):
+        store.hset(f"pilot:p{i}", "state", PilotState.ACTIVE)
+        store.hset(HEARTBEATS_KEY, f"p{i}", now)
+    mon = HeartbeatMonitor(ctx, timeout_s=10.0)
+    try:
+        before = store.ops_total
+        mon._tick(now=now)
+        quiet_50 = store.ops_total - before
+        for i in range(50, 200):
+            store.hset(f"pilot:p{i}", "state", PilotState.ACTIVE)
+            store.hset(HEARTBEATS_KEY, f"p{i}", now)
+        before = store.ops_total
+        mon._tick(now=now)
+        quiet_200 = store.ops_total - before
+        # one hgetall regardless of pilot count
+        assert quiet_50 == quiet_200 == 1
+    finally:
+        mon.stop()
+
+
+def test_straggler_tick_is_o_changes():
+    store = CoordinationStore()
+    ctx = RuntimeContext(store=store, topology=Topology())
+    mit = StragglerMitigator(ctx, min_samples=1)
+    try:
+        # feed completions + a large RUNNING population via events
+        for i in range(100):
+            desc = ComputeUnitDescription(executable="x", sim_compute_s=0.0)
+            cu = ComputeUnit(desc, store)
+            ctx.register(cu)
+            store.hset(f"cu:{cu.id}", "state", CUState.RUNNING)
+        store.hset(
+            "cu:done-sample", "timings", {"t_c": 100.0}
+        )  # huge median -> nothing past threshold
+        before = store.ops_total
+        mit._tick()
+        assert store.ops_total - before == 0  # quiet tick: zero store ops
+    finally:
+        mit.stop()
