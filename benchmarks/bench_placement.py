@@ -24,7 +24,7 @@ when PDs are co-located; in scenario 5 data-local pilots get most tasks.
 from __future__ import annotations
 
 import time
-from typing import Dict, List, Optional
+from typing import Dict, List
 
 from repro.core import (
     CUState,

@@ -17,15 +17,7 @@ from typing import List
 
 import numpy as np
 
-from repro.core import (
-    DataUnitDescription,
-    PilotDataDescription,
-    PilotManager,
-    estimate_tx,
-    make_grid_topology,
-    replicate_group,
-    replicate_sequential,
-)
+from repro.core import DataUnitDescription, PilotManager, estimate_tx, make_grid_topology, replicate_group, replicate_sequential
 
 from .common import GB, MB, emit
 

@@ -11,10 +11,15 @@ evaluates True — the recovery-path claims (no DU lost under churn, lineage
 recomputation completes the DAG, monitor op counts O(changes)) gate PRs
 exactly like scheduling regressions do.
 
+With ``--markdown PATH`` the same per-row comparison (makespans and
+claims, including failures) is appended to ``PATH`` as GitHub-flavored
+tables — CI points this at ``$GITHUB_STEP_SUMMARY`` so every run shows the
+current-vs-baseline table on the workflow summary page, pass or fail.
+
 Usage:
     python -m benchmarks.check_regression \
         --baseline benchmarks/baseline_quick.json \
-        --current BENCH_<run>.json [--threshold 0.20]
+        --current BENCH_<run>.json [--threshold 0.20] [--markdown PATH]
 """
 
 from __future__ import annotations
@@ -63,6 +68,53 @@ def claim_holds(derived: str) -> bool:
     return derived.rsplit(":", 1)[-1].strip() == "True"
 
 
+def write_markdown(
+    path: str,
+    compared: list,
+    new_rows: list,
+    claims: Dict[str, str],
+    failed_claims: list,
+    missing_claims: list,
+    missing: list,
+    threshold: float,
+) -> None:
+    """Append the comparison as GitHub-flavored tables (the CI bench job
+    points this at ``$GITHUB_STEP_SUMMARY``)."""
+    lines = ["## Quick-bench regression gate", ""]
+    lines.append(
+        f"Gated makespan rows vs baseline (threshold {threshold:.0%}):"
+    )
+    lines.append("")
+    lines.append("| row | baseline (µs) | current (µs) | delta | status |")
+    lines.append("| --- | ---: | ---: | ---: | --- |")
+    for name, b, c, delta in compared:
+        status = "❌ REGRESSION" if delta > threshold else "✅"
+        shown = "inf" if delta == float("inf") else f"{delta:+.1%}"
+        lines.append(f"| `{name}` | {b:.0f} | {c:.0f} | {shown} | {status} |")
+    for name, c in new_rows:
+        lines.append(f"| `{name}` | (new) | {c:.0f} | — | ✅ |")
+    for name in missing:
+        lines.append(f"| `{name}` | — | (missing) | — | ⚠️ |")
+    lines.append("")
+    lines.append(
+        f"Claims: {len(claims)} checked, {len(failed_claims)} false, "
+        f"{len(missing_claims)} missing."
+    )
+    lines.append("")
+    lines.append("| claim | derived | status |")
+    lines.append("| --- | --- | --- |")
+    for name, derived in sorted(claims.items()):
+        ok = claim_holds(derived)
+        lines.append(
+            f"| `{name}` | `{derived}` | {'✅' if ok else '❌ FALSE'} |"
+        )
+    for name in missing_claims:
+        lines.append(f"| `{name}` | (missing from current run) | ❌ |")
+    lines.append("")
+    with open(path, "a", encoding="utf-8") as fh:
+        fh.write("\n".join(lines) + "\n")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--baseline", required=True)
@@ -73,6 +125,13 @@ def main() -> None:
         default=0.20,
         help="max allowed fractional makespan regression (default 20%%)",
     )
+    ap.add_argument(
+        "--markdown",
+        default=None,
+        metavar="PATH",
+        help="append the comparison as a GitHub-flavored markdown table "
+        "(for $GITHUB_STEP_SUMMARY)",
+    )
     args = ap.parse_args()
 
     base = load_rows(args.baseline)
@@ -82,6 +141,7 @@ def main() -> None:
 
     regressions = []
     missing = []
+    compared = []
     print(f"{'row':<44} {'baseline':>12} {'current':>12} {'delta':>8}")
     for name, b in sorted(base.items()):
         if name not in cur:
@@ -96,10 +156,12 @@ def main() -> None:
             delta = 0.0 if c <= 0 else float("inf")
         flag = " <-- REGRESSION" if delta > args.threshold else ""
         print(f"{name:<44} {b:>12.0f} {c:>12.0f} {delta:>+7.1%}{flag}")
+        compared.append((name, b, c, delta))
         if delta > args.threshold:
             regressions.append((name, b, c, delta))
-    for name in sorted(set(cur) - set(base)):
-        print(f"{name:<44} {'(new)':>12} {cur[name]:>12.0f}        ")
+    new_rows = [(n, cur[n]) for n in sorted(set(cur) - set(base))]
+    for name, c in new_rows:
+        print(f"{name:<44} {'(new)':>12} {c:>12.0f}        ")
     if missing:
         print(f"\nWARNING: {len(missing)} baseline row(s) missing from the "
               f"current run: {', '.join(missing)}", file=sys.stderr)
@@ -122,6 +184,20 @@ def main() -> None:
             f"\nFAIL: {len(missing_claims)} baseline claim(s) missing "
             f"from the current run: {', '.join(missing_claims)}",
             file=sys.stderr,
+        )
+
+    if args.markdown:
+        # written BEFORE the exit decision: a failing run still gets its
+        # table on the workflow summary page
+        write_markdown(
+            args.markdown,
+            compared,
+            new_rows,
+            claims,
+            failed_claims,
+            missing_claims,
+            missing,
+            args.threshold,
         )
 
     if regressions or failed_claims or missing_claims:

@@ -14,7 +14,7 @@ from __future__ import annotations
 
 import heapq
 import time
-from typing import Dict, Iterable, List, Tuple
+from typing import Dict, Iterable
 
 from repro.backends.base import BackendProfile
 

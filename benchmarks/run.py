@@ -15,6 +15,9 @@ can archive a perf trajectory artifact per run.
   bench_faults       — makespan-under-churn: kill k of n pilots
                        mid-workload; replication-factor healing + lineage
                        recomputation; monitor op-count O(changes) proof
+  bench_tiering      — storage hierarchy: mem-tier caching + quota
+                       eviction vs flat re-staging for a working set
+                       larger than DRAM; eviction-correctness claim
   bench_cost_model   — §6.1 calculus vs oracle + replication degree
   bench_roofline     — assignment §Roofline terms from dry-run artifacts
 """
@@ -53,6 +56,7 @@ def main() -> None:
         bench_roofline,
         bench_scale,
         bench_staging,
+        bench_tiering,
     )
 
     benches = {
@@ -62,6 +66,7 @@ def main() -> None:
         "scale": lambda: bench_scale.run(n_tasks=128 if args.quick else 1024),
         "dataflow": lambda: bench_dataflow.run(),
         "faults": lambda: bench_faults.run(quick=args.quick),
+        "tiering": lambda: bench_tiering.run(),
         "cost_model": lambda: bench_cost_model.run(),
         "roofline": lambda: bench_roofline.run(),
     }

@@ -4,7 +4,6 @@ Run: PYTHONPATH=src python scripts_build_experiments.py
 """
 
 import glob
-import json
 import os
 import sys
 

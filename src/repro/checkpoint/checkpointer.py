@@ -30,14 +30,7 @@ from typing import Any, Dict, List, Optional, Tuple
 
 import numpy as np
 
-from ..core import (
-    CoordinationStore,
-    DataUnit,
-    DataUnitDescription,
-    PilotData,
-    RuntimeContext,
-    replicate_group,
-)
+from ..core import DataUnit, DataUnitDescription, PilotData, RuntimeContext, replicate_group
 
 
 def _flatten(tree: Any, prefix: str = "") -> List[Tuple[str, Any]]:

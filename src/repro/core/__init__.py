@@ -88,6 +88,18 @@ from .services import (
     PilotDataService,
 )
 from .session import Session
+from .tiering import (
+    EvictionPolicy,
+    PinRegistry,
+    TIERS,
+    TierManager,
+    Victim,
+    classify_tier,
+    list_eviction_policies,
+    make_eviction_policy,
+    register_eviction_policy,
+    tier_rank,
+)
 from .transfer import TransferRecord, TransferService
 
 __all__ = [
@@ -114,4 +126,7 @@ __all__ = [
     "FutureError", "FutureTimeoutError",
     "ComputeFailedError", "DataUnitFailedError",
     "TransferRecord", "TransferService",
+    "EvictionPolicy", "PinRegistry", "TIERS", "TierManager", "Victim",
+    "classify_tier", "list_eviction_policies", "make_eviction_policy",
+    "register_eviction_policy", "tier_rank",
 ]

@@ -26,14 +26,19 @@ from __future__ import annotations
 import threading
 import time
 import traceback
-from typing import Any, Dict, List, Optional
+from typing import Dict, List, Optional
 
 from .affinity import match_affinity
 from .compute_unit import CUState, ComputeUnit, FUNCTIONS
-from .data_unit import DataUnit, DUState
-from .pilot import HEARTBEATS_KEY, PilotState, RuntimeContext
+from .data_unit import DataUnit
+from .pilot import HEARTBEATS_KEY, PilotState, QuotaExceeded, RuntimeContext
 
 GLOBAL_QUEUE = "queue:global"
+
+#: staging attempts a CU may abandon to quota backpressure (sandbox full
+#: of OTHER live consumers' pinned inputs) before the hit counts as a
+#: real failure; each wait re-queues without burning a retry attempt
+MAX_QUOTA_WAITS = 100
 
 
 class CUContext:
@@ -333,19 +338,44 @@ class PilotAgent:
     def _run_cu(self, cu: ComputeUnit, is_dup: bool) -> None:
         store, pilot, ctx = self.ctx.store, self.pilot, self.ctx
         desc = cu.description
+        tm = ctx.tier_manager
         try:
             with self._lock:
                 self._running[cu.id] = time.monotonic()
+            if tm is not None:
+                # pin inputs for the attempt (idempotent — submission
+                # already pinned them): quota eviction must never drop a
+                # Staging/Running CU's input chunks from under it
+                tm.pins.pin_inputs(cu)
             store.hset(f"cu:{cu.id}", "pilot", pilot.id)
             cu.timings.stage_start = time.monotonic()
             # ---- stage inputs (pull-mode data management, §4.2) ----
             sim_stage = 0.0
-            for du_id in desc.input_data:
-                du: DataUnit = ctx.lookup(du_id)
-                sim_stage += ctx.transfer_service.stage_in(
-                    du, pilot.sandbox, pilot.affinity,
-                    use_cache=desc.cache_inputs,
-                )
+            try:
+                for du_id in desc.input_data:
+                    du: DataUnit = ctx.lookup(du_id)
+                    sim_stage += ctx.transfer_service.stage_in(
+                        du, pilot.sandbox, pilot.affinity,
+                        use_cache=desc.cache_inputs,
+                    )
+            except QuotaExceeded:
+                # Sandbox full and eviction blocked — typically by ANOTHER
+                # live consumer's pinned inputs.  That is backpressure,
+                # not a failure: hand the CU back (its own pins unbind in
+                # Pending, freeing the bytes) and retry once the holder
+                # drains, without burning a retry attempt.  The store-side
+                # wait counter bounds livelock: past the cap it falls
+                # through to the normal failure/retry path.
+                if is_dup:
+                    return
+                waits = int(store.hget(f"cu:{cu.id}", "quota_waits", 0)) + 1
+                store.hset(f"cu:{cu.id}", "quota_waits", waits)
+                if waits <= MAX_QUOTA_WAITS and not self._dead.is_set():
+                    if cu._cas_state(CUState.STAGING, CUState.PENDING):
+                        time.sleep(max(self.ctx.poll_s, 0.01))  # pace
+                        store.push(GLOBAL_QUEUE, {"cu": cu.id, "dup": False})
+                        return
+                raise
             cu.timings.stage_end = time.monotonic()
             cu.timings.sim_stage_s = sim_stage
             cu.timings.sim_prefetch_s = (
@@ -439,4 +469,9 @@ class PilotAgent:
         finally:
             with self._lock:
                 self._running.pop(cu.id, None)
+            if tm is not None and cu.state in CUState.TERMINAL:
+                # terminal attempts release the inputs for eviction;
+                # requeued/declined attempts keep the pin until a later
+                # attempt settles (the registry also self-heals lazily)
+                tm.pins.unpin_owner(cu.id)
             self._slots.release()

@@ -43,7 +43,7 @@ import os
 import queue
 import threading
 import time
-from typing import Any, Callable, Dict, Iterator, List, Optional, Tuple
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 
 class CoordinationUnavailable(RuntimeError):

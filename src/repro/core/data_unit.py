@@ -372,9 +372,33 @@ class DataUnit:
         """Register a full replica at ``pd_id`` (all chunks at once)."""
         self._add_chunks(pd_id, range(self.n_chunks))
 
+    def _drop_chunks(self, pd_id: str, indices: Iterable[int]) -> None:
+        """Unregister chunks evicted from ``pd_id`` (quota eviction / cache
+        demotion).  The location version bumps so resolve/estimate caches
+        invalidate, and a holder that no longer covers every chunk is
+        demoted from ``locations`` back to a partial holder.  The seal is
+        untouched: eviction drops *redundant* replicas, never content."""
+        dropped = set(int(i) for i in indices)
+        if not dropped:
+            return
+        self._ensure_chunks()
+        with self._lock:
+            held = set(self._store.hget(f"du:{self.id}:chunks", pd_id, []))
+            held -= dropped
+            self._loc_version += 1
+            if held:
+                self._store.hset(f"du:{self.id}:chunks", pd_id, sorted(held))
+            else:
+                self._store.hdel(f"du:{self.id}:chunks", pd_id)
+            if len(held) < len(self._chunks):
+                locs = self.locations
+                if pd_id in locs:
+                    locs = [loc for loc in locs if loc != pd_id]
+                    self._store.hset(f"du:{self.id}", "locations", locs)
+
     def _remove_location(self, pd_id: str) -> None:
         with self._lock:
-            locs = [l for l in self.locations if l != pd_id]
+            locs = [loc for loc in self.locations if loc != pd_id]
             self._loc_version += 1
             self._store.hset(f"du:{self.id}", "locations", locs)
             self._store.hdel(f"du:{self.id}:chunks", pd_id)

@@ -89,6 +89,8 @@ def fail_cu_terminal(
         cu.error = reason
     except KeyError:
         pass
+    if ctx.tier_manager is not None:
+        ctx.tier_manager.pins.unpin_owner(cu_id)
     return True
 
 

@@ -15,7 +15,7 @@ from __future__ import annotations
 
 import contextlib
 import warnings
-from typing import Dict, List, Optional
+from typing import Dict, Optional
 
 from .affinity import Topology
 from .compute_unit import ComputeUnitDescription, FUNCTIONS
@@ -29,6 +29,7 @@ from .pilot import (
     RuntimeContext,
 )
 from .scheduler import AsyncScheduler
+from .tiering import TierManager
 from .services import (
     ComputeDataService,
     PilotComputeService,
@@ -55,6 +56,10 @@ class PilotManager:
         scheduler_mode: str = "sync",
         placement_strategy: str = "cost",
         stage_workers: int = 4,
+        eviction_policy: str = "lru",
+        tier_cache_bytes: int = 0,
+        tier_promote_after: int = 2,
+        tier_auto_promote: bool = True,
     ):
         if scheduler_mode not in ("sync", "async"):
             raise ValueError(
@@ -83,6 +88,18 @@ class PilotManager:
             self.scheduler = AsyncScheduler(
                 self.cds, stage_workers=stage_workers
             )
+        # storage-hierarchy layer: tier classification + access stats,
+        # quota-driven eviction (replaces hard QuotaExceeded), and — with
+        # tier_cache_bytes > 0 — hot-DU promotion into a per-site mem-tier
+        # cache PD, off the critical path like the async prefetch
+        self.tier_manager = TierManager(
+            self.ctx,
+            cds=self.cds,
+            eviction_policy=eviction_policy,
+            cache_bytes=tier_cache_bytes,
+            promote_after=tier_promote_after,
+            auto_promote=tier_auto_promote,
+        )
         self._session = None  # lazy Pilot-API v2 facade (see .session)
         self.heartbeat_monitor: Optional[HeartbeatMonitor] = None
         self.straggler_mitigator: Optional[StragglerMitigator] = None
@@ -191,6 +208,9 @@ class PilotManager:
         if self.fault_manager:
             with contextlib.suppress(Exception):
                 self.fault_manager.stop()
+        if self.tier_manager is not None:
+            with contextlib.suppress(Exception):
+                self.tier_manager.stop()
         self.store.close()
 
     def __enter__(self) -> "PilotManager":

@@ -66,6 +66,9 @@ class RuntimeContext:
     #: topology label of the submission host — ingest transfers (DU local
     #: buffer → first PD) are costed over this uplink when set
     submission_label: Optional[str] = None
+    #: attached lazily by the TierManager (avoids an import cycle): owns
+    #: tier classification, access stats, and quota-driven eviction
+    tier_manager: Optional[Any] = None
 
     def sleep_sim(self, sim_seconds: float) -> None:
         if self.time_scale > 0 and sim_seconds > 0:
@@ -90,6 +93,10 @@ class PilotDataDescription:
     affinity: str  # topology label, e.g. "cluster:pod0"
     size_quota: int = 1 << 40  # bytes
     name: str = ""
+    #: explicit storage-tier override ("dram-cache" / "node-local" /
+    #: "site-shared" / "archival"); empty = derive from the backend's
+    #: scheme/profile (see repro.core.tiering.classify_tier)
+    tier: str = ""
 
     def to_json(self) -> Dict[str, Any]:
         return dataclasses.asdict(self)
@@ -126,6 +133,10 @@ class PilotData:
         ctx.topology.ensure(self.affinity)
         self._lock = threading.RLock()
         self._used = 0
+        #: bytes admitted by in-flight writes, not yet accounted — the
+        #: check-and-reserve admission that keeps racing stagers from
+        #: jointly overshooting the quota
+        self._reserved = 0
         self._dus: Dict[str, int] = {}  # du_id -> bytes held
         self._du_chunks: Dict[str, set] = {}  # du_id -> held chunk indices
         self._du_total: Dict[str, int] = {}  # du_id -> total chunks in DU
@@ -177,6 +188,57 @@ class PilotData:
         return [i for i in range(du.n_chunks) if i not in held]
 
     # ------------------------------------------------------------- content
+    def _reserve_space(self, du: DataUnit, nbytes: int) -> int:
+        """Atomically admit ``nbytes`` against the quota (check-and-reserve
+        under the lock, so racing stagers cannot jointly overshoot), with
+        tier-aware eviction: when the write would exceed ``size_quota``
+        the TierManager reclaims *redundant* chunk replicas (policy-
+        ordered, invariant-guarded) and admission retries; only when
+        eviction frees nothing does ``QuotaExceeded`` surface.  The caller
+        must pair with :meth:`_release_reservation` once accounted."""
+        while True:
+            with self._lock:
+                avail = self.description.size_quota - self._used - self._reserved
+                if nbytes <= avail:
+                    self._reserved += nbytes
+                    return nbytes
+                need = nbytes - avail
+            tm = self.ctx.tier_manager
+            freed = (
+                tm.make_room(self, need, exclude_du=du.id)
+                if tm is not None
+                else 0
+            )
+            with self._lock:
+                avail = self.description.size_quota - self._used - self._reserved
+                if nbytes <= avail:
+                    self._reserved += nbytes
+                    return nbytes
+            if freed <= 0:
+                raise QuotaExceeded(
+                    f"{self.url}: need {nbytes}B, free {avail}B"
+                )
+            # eviction made progress but not enough yet: try another round
+
+    def _release_reservation(self, nbytes: int) -> None:
+        with self._lock:
+            self._reserved = max(0, self._reserved - nbytes)
+
+    def _put_chunk_bytes(self, key: str, data: bytes) -> None:
+        """Idempotent chunk write: chunk content is immutable (checksummed
+        in the DU manifest), so a key that already holds the right bytes —
+        an eviction-race re-plan, or a write-once object store revisited —
+        is kept as-is.  A mismatching key (stale file from a previous run
+        on a persistent filesystem backend) is replaced."""
+        if self.backend.exists(key):
+            try:
+                if self.backend.get(key) == data:
+                    return
+            except Exception:
+                pass
+            self.backend.delete(key)
+        self.backend.put(key, data)
+
     def _account_chunks(
         self, du: DataUnit, indices: List[int], register: bool
     ) -> int:
@@ -212,13 +274,13 @@ class PilotData:
         chunks = du.chunks
         todo = [i for i in indices if i not in self._du_chunks.get(du.id, set())]
         nbytes = sum(chunks[i].size for i in todo)
-        if nbytes > self.free_bytes:
-            raise QuotaExceeded(
-                f"{self.url}: need {nbytes}B, free {self.free_bytes}B"
-            )
-        for i in todo:
-            self.backend.put(chunk_key(du.id, i), du.chunk_data(i))
-        self._account_chunks(du, todo, register)
+        self._reserve_space(du, nbytes)
+        try:
+            for i in todo:
+                self._put_chunk_bytes(chunk_key(du.id, i), du.chunk_data(i))
+            self._account_chunks(du, todo, register)
+        finally:
+            self._release_reservation(nbytes)
         return nbytes
 
     def put_du(self, du: DataUnit, register: bool = True) -> int:
@@ -244,13 +306,15 @@ class PilotData:
         chunks = du.chunks
         todo = [i for i in indices if i not in self._du_chunks.get(du.id, set())]
         nbytes = sum(chunks[i].size for i in todo)
-        if nbytes > self.free_bytes:
-            raise QuotaExceeded(
-                f"{self.url}: need {nbytes}B, free {self.free_bytes}B"
-            )
-        for i in todo:
-            self.backend.put(chunk_key(du.id, i), src.backend.get(chunk_key(du.id, i)))
-        self._account_chunks(du, todo, register)
+        self._reserve_space(du, nbytes)
+        try:
+            for i in todo:
+                self._put_chunk_bytes(
+                    chunk_key(du.id, i), src.backend.get(chunk_key(du.id, i))
+                )
+            self._account_chunks(du, todo, register)
+        finally:
+            self._release_reservation(nbytes)
         return nbytes
 
     def copy_du_from(self, du: DataUnit, src: "PilotData", register: bool = True) -> int:
@@ -293,6 +357,40 @@ class PilotData:
                 return False
         return True
 
+    def evict_chunks(self, du: DataUnit, indices: List[int]) -> int:
+        """Drop a subset of a DU's locally-held chunks (quota eviction /
+        cache demotion).  Returns bytes freed.
+
+        Bookkeeping stays exact: the chunks leave this PD's accounting and
+        the DU's ``du:<id>:chunks`` registry (bumping the location version
+        so transfer caches invalidate), and if this PD no longer covers
+        every chunk it is demoted from ``locations`` to a partial holder.
+        Safety (last-copy / replication-factor / pin / in-flight checks)
+        is the TierManager's job — this method only executes the drop.
+        """
+        chunks = du.chunks
+        with self._lock:
+            held = self._du_chunks.get(du.id)
+            if not held:
+                return 0
+            todo = sorted(i for i in indices if i in held)
+            if not todo:
+                return 0
+            nbytes = sum(chunks[i].size for i in todo if i < len(chunks))
+            held.difference_update(todo)
+            self._dus[du.id] = max(0, self._dus.get(du.id, 0) - nbytes)
+            self._used = max(0, self._used - nbytes)
+            if not held:
+                self._dus.pop(du.id, None)
+                self._du_chunks.pop(du.id, None)
+                self._du_total.pop(du.id, None)
+                self._du_objs.pop(du.id, None)
+            self.ctx.store.hset(f"pd:{self.id}", "dus", sorted(self._dus))
+        for i in todo:
+            self.backend.delete(chunk_key(du.id, i))
+        du._drop_chunks(self.id, todo)
+        return nbytes
+
     def remove_du(self, du: DataUnit) -> None:
         with self._lock:
             nbytes = self._dus.pop(du.id, 0)
@@ -325,6 +423,10 @@ class PilotComputeDescription:
     queue_time_s: float = 0.0
     walltime_s: float = float("inf")
     name: str = ""
+    #: DRAM budget of the pilot's sandbox PD — the memory tier is finite,
+    #: so working sets larger than this churn through quota eviction
+    #: instead of growing without bound
+    sandbox_quota: int = 1 << 40
 
     def __post_init__(self) -> None:
         if not self.affinity:
@@ -360,6 +462,7 @@ class PilotCompute:
             PilotDataDescription(
                 service_url=f"mem://{description.affinity}/sandbox-{self.id}",
                 affinity=description.affinity,
+                size_quota=description.sandbox_quota,
                 name=f"sandbox-{self.id}",
             ),
             ctx,

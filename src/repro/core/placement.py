@@ -26,7 +26,7 @@ import abc
 import dataclasses
 import random
 import threading
-from typing import Callable, Dict, List, Optional, Sequence
+from typing import Callable, Dict, List, Sequence
 
 from .affinity import match_affinity
 from .compute_unit import ComputeUnit
@@ -46,6 +46,13 @@ class Candidate:
     #: Partial replicas score partially — the chunk-granular replacement
     #: for the old boolean has-replica test.
     locality: float = 1.0
+    #: effective tier bandwidth (bytes/s): the bytes-weighted backend
+    #: bandwidth of the best *local* holder of each input chunk — a DU
+    #: cached in a DRAM-tier PD at the pilot scores ~20 GB/s where the
+    #: same bytes on a site-shared parallel FS score ~4 GB/s and a chunk
+    #: with no local copy scores 0.  Locality says how MUCH is local;
+    #: this says how FAST the local copy serves.
+    tier_bw: float = 0.0
 
     @property
     def score(self) -> float:
@@ -114,38 +121,75 @@ class PlacementEngine:
             t_stage += ts.estimate_stage_cost(du, pilot.affinity, pilot.sandbox)
         return t_stage
 
-    def chunk_locality(self, cu: ComputeUnit, pilot: PilotCompute) -> float:
-        """Fraction of the CU's input bytes whose chunks are already at the
-        pilot — in its sandbox or in any PD linkable from its location.
-        A DU replicated halfway scores 0.5, not 0 (the chunk-granular
-        upgrade of the old boolean ``has_du`` locality test)."""
+    def _chunk_presence(self, cu: ComputeUnit, pilot: PilotCompute) -> tuple:
+        """ONE scan over the CU's input chunk holders at ``pilot``,
+        returning ``(locality, tier_bw)`` — the locality fraction and the
+        bytes-weighted bandwidth of each chunk's best local holder.  The
+        two scores share the per-holder store reads (``chunk_holders`` +
+        linkability), which would otherwise be paid twice per candidate
+        on the placement hot path."""
         ts = self.ctx.transfer_service
         total = 0
         local = 0
+        weighted = 0.0
+        sandbox_bw = pilot.sandbox.backend.profile.bandwidth
         for du_id in cu.description.input_data:
             du = self.ctx.lookup(du_id)
             chunks = du.chunks
             total += du.size
             if not chunks:
                 continue
-            here = set(pilot.sandbox.chunks_held(du.id))
+            best: Dict[int, float] = {
+                i: sandbox_bw for i in pilot.sandbox.chunks_held(du.id)
+            }
             for pd_id, idxs in du.chunk_holders().items():
                 if pd_id == pilot.sandbox.id or pd_id not in self.ctx.objects:
                     continue
                 pd = self.ctx.lookup(pd_id)
-                if ts.is_linkable(pd, pilot.affinity):
-                    here.update(idxs)
-            local += sum(chunks[i].size for i in here if i < len(chunks))
-        return 1.0 if total == 0 else local / total
+                if not ts.is_linkable(pd, pilot.affinity):
+                    continue
+                bw = pd.backend.profile.bandwidth
+                for i in idxs:
+                    if bw > best.get(i, 0.0):
+                        best[i] = bw
+            for i, bw in best.items():
+                if i < len(chunks):
+                    local += chunks[i].size
+                    weighted += chunks[i].size * bw
+        if total == 0:
+            return 1.0, 0.0
+        return local / total, weighted / total
+
+    def chunk_locality(self, cu: ComputeUnit, pilot: PilotCompute) -> float:
+        """Fraction of the CU's input bytes whose chunks are already at the
+        pilot — in its sandbox or in any PD linkable from its location.
+        A DU replicated halfway scores 0.5, not 0 (the chunk-granular
+        upgrade of the old boolean ``has_du`` locality test)."""
+        return self._chunk_presence(cu, pilot)[0]
+
+    def tier_bandwidth(self, cu: ComputeUnit, pilot: PilotCompute) -> float:
+        """Bytes-weighted effective bandwidth of the CU's input chunks at
+        ``pilot``: each chunk contributes its best local (sandbox or
+        linkable) holder's backend bandwidth, chunks with no local copy
+        contribute 0.  Distinguishes two fully-local candidates whose
+        replicas live in different storage tiers."""
+        return self._chunk_presence(cu, pilot)[1]
 
     def candidates(
-        self, cu: ComputeUnit, pilots: Sequence[PilotCompute]
+        self,
+        cu: ComputeUnit,
+        pilots: Sequence[PilotCompute],
+        tier_bw: bool = False,
     ) -> List[Candidate]:
         """All affinity-admissible, placeable pilots with their costs.
         Terminal pilots never qualify; neither do SUSPECT ones — a pilot
         in its missed-heartbeat grace period drains in-flight work but
         must not be handed anything new (it may be about to fail, and
-        recovery would race the binding)."""
+        recovery would race the binding).
+
+        ``tier_bw`` additionally scores each candidate's effective tier
+        bandwidth — an extra O(chunks × holders) scan per pilot, so it is
+        computed only for strategies that declare ``uses_tier_bw``."""
         constraint = cu.description.affinity
         out: List[Candidate] = []
         for p in pilots:
@@ -153,12 +197,14 @@ class PlacementEngine:
                 continue
             if constraint and not match_affinity(constraint, p.affinity):
                 continue
+            locality, bw = self._chunk_presence(cu, p)
             out.append(
                 Candidate(
                     pilot=p,
                     t_queue=self.pilot_tq_estimate(p),
                     t_stage=self.stage_estimate(cu, p),
-                    locality=self.chunk_locality(cu, p),
+                    locality=locality,
+                    tier_bw=bw if tier_bw else 0.0,
                 )
             )
         return out
@@ -171,6 +217,9 @@ class PlacementStrategy(abc.ABC):
 
     #: registry key; subclasses override
     name: str = "?"
+    #: strategies that rank on Candidate.tier_bw set this True so the
+    #: engine computes it (it costs an extra per-chunk holder scan)
+    uses_tier_bw: bool = False
 
     @abc.abstractmethod
     def rank(
@@ -223,13 +272,22 @@ class CostStrategy(PlacementStrategy):
 class DataLocalStrategy(PlacementStrategy):
     """Compute-to-data: fractional chunk locality dominates the ordering —
     the pilot already holding the most input bytes (partial replicas
-    count pro rata) wins; residual staging cost and queue wait break
-    ties."""
+    count pro rata) wins; among equally-local candidates the one whose
+    replicas sit in the *faster storage tier* (effective tier bandwidth)
+    ranks first; residual staging cost and queue wait break ties."""
+
+    uses_tier_bw = True
 
     def rank(self, cu, candidates):
         return sorted(
             candidates,
-            key=lambda c: (-c.locality, c.t_stage, c.t_queue, c.pilot.id),
+            key=lambda c: (
+                -c.locality,
+                -c.tier_bw,
+                c.t_stage,
+                c.t_queue,
+                c.pilot.id,
+            ),
         )
 
 

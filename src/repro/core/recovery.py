@@ -37,7 +37,7 @@ from __future__ import annotations
 
 import queue
 import threading
-from typing import Dict, List, Optional, Set
+from typing import Dict, List, Set
 
 from .agent import GLOBAL_QUEUE
 from .compute_unit import CUState, ComputeUnit
@@ -281,8 +281,8 @@ class FaultManager:
             return
         store = self.ctx.store
         locs = [
-            l for l in store.hget(f"du:{du_id}", "locations", [])
-            if l != pd_id
+            loc for loc in store.hget(f"du:{du_id}", "locations", [])
+            if loc != pd_id
         ]
         store.hset(f"du:{du_id}", "locations", locs)
         store.hdel(f"du:{du_id}:chunks", pd_id)

@@ -23,7 +23,7 @@ from __future__ import annotations
 
 import threading
 import time
-from typing import Callable, Dict, List, Optional, Sequence, Set
+from typing import Callable, Dict, List, Optional, Set
 
 from .agent import GLOBAL_QUEUE
 from .compute_unit import ComputeUnit, ComputeUnitDescription, CUState
@@ -182,6 +182,8 @@ class DependencyTracker:
                 store.hset(f"cu:{cu.id}", "error", msg)
                 # transitive cascade: this CU will never produce its outputs
                 cu._fail_outputs(f"producer {cu.url} failed: {msg}")
+                if self.ctx.tier_manager is not None:
+                    self.ctx.tier_manager.pins.unpin_owner(cu.id)
 
     # -------------------------------------------------------------- interface
     def add(self, cu: ComputeUnit, unmet: Set[str]) -> None:
@@ -191,6 +193,12 @@ class DependencyTracker:
         synthetic re-check event per DU closes the window on the tracker
         thread (where all release decisions are serialized).
         """
+        tm = self.ctx.tier_manager
+        if tm is not None:
+            # a Waiting consumer's inputs (the already-ready ones
+            # included) are pinned against quota eviction until the CU
+            # settles — re-parks during lineage recovery re-pin too
+            tm.pins.pin_inputs(cu)
         with self._lock:
             self._unmet[cu.id] = set(unmet)
             for du_id in unmet:
@@ -393,6 +401,11 @@ class ComputeDataService:
         self.ctx.register(cu)
         cu.timings.submitted = time.monotonic()
         self._claim_outputs(cu)
+        if self.ctx.tier_manager is not None:
+            # pin declared inputs from submission until the CU settles:
+            # Waiting/Pending/Running consumers' inputs are never eviction
+            # victims (the registry drops pins of terminal CUs lazily)
+            self.ctx.tier_manager.pins.pin_inputs(cu)
         with self._lock:
             self._cus.append(cu)
         try:
@@ -472,7 +485,12 @@ class ComputeDataService:
             return pilot
         with self._lock:
             pilots = list(self._pilots)
-        ranked = self.strategy.rank(cu, self.engine.candidates(cu, pilots))
+        ranked = self.strategy.rank(
+            cu,
+            self.engine.candidates(
+                cu, pilots, tier_bw=self.strategy.uses_tier_bw
+            ),
+        )
         if not ranked:
             self.ctx.store.push(GLOBAL_QUEUE, {"cu": cu.id, "dup": False})
             return None

@@ -34,7 +34,7 @@ from __future__ import annotations
 import warnings
 from typing import Any, Dict, Iterable, List, Optional, Sequence, Union
 
-from .compute_unit import ComputeUnit, ComputeUnitDescription
+from .compute_unit import ComputeUnitDescription
 from .data_unit import DataUnit, DataUnitDescription
 from .futures import CUFuture, DUFuture, FutureDispatcher, gather
 from .pilot import PilotCompute, PilotData
@@ -106,6 +106,12 @@ class Session:
         replica purge on pilot death, replication-factor enforcement,
         lineage recomputation.  None when not enabled."""
         return self.manager.fault_manager
+
+    @property
+    def tier_manager(self):
+        """The storage-hierarchy layer: tier classification, access
+        stats, quota-driven eviction, and mem-tier cache promotion."""
+        return self.manager.tier_manager
 
     def recovering_dus(self) -> List[str]:
         """DU ids currently being rebuilt after total replica loss

@@ -34,10 +34,14 @@ import threading
 import time
 from typing import Dict, List, Optional, Sequence, Set, Tuple
 
+from ..backends import KeyNotFound
 from .affinity import match_affinity
 from .cost_model import cheapest_replica
 from .data_unit import DataUnit
 from .pilot import PilotData, RuntimeContext
+
+#: re-plans allowed when an eviction races a planned fetch before raising
+MAX_REPLANS = 3
 
 
 @dataclasses.dataclass
@@ -101,6 +105,12 @@ class TransferService:
         #: PDs purged after pilot death — never planned as a source or
         #: served from a cached resolution again
         self._dead_pds: Set[str] = set()
+        #: (src_pd_id, du_id) -> count of in-flight fetches reading from
+        #: that source; quota eviction skips leased holdings so a planned
+        #: copy's source cannot vanish mid-transfer
+        self._src_leases: Dict[Tuple[str, str], int] = {}
+        #: monotonic stamp for du:access records (tier access statistics)
+        self._access_seq = itertools.count(1)
 
     # ------------------------------------------------------------- costing
     def simulated_transfer_time(
@@ -184,6 +194,49 @@ class TransferService:
     def is_dead(self, pd_id: str) -> bool:
         with self._lock:
             return pd_id in self._dead_pds
+
+    # ------------------------------------------------- eviction interlocks
+    def _lease_sources(self, du: DataUnit, groups: List["_FetchGroup"]) -> None:
+        with self._lock:
+            for g in groups:
+                if g.src is not None:
+                    k = (g.src.id, du.id)
+                    self._src_leases[k] = self._src_leases.get(k, 0) + 1
+
+    def _unlease_sources(self, du: DataUnit, groups: List["_FetchGroup"]) -> None:
+        with self._lock:
+            for g in groups:
+                if g.src is not None:
+                    k = (g.src.id, du.id)
+                    n = self._src_leases.get(k, 0) - 1
+                    if n > 0:
+                        self._src_leases[k] = n
+                    else:
+                        self._src_leases.pop(k, None)
+
+    def source_leased(self, pd_id: str, du_id: str) -> bool:
+        """True while an in-flight fetch reads this DU from this PD — the
+        TierManager must not evict the holding out from under it."""
+        with self._lock:
+            return self._src_leases.get((pd_id, du_id), 0) > 0
+
+    def inflight_chunks(self, du_id: str, dst_pd_id: str) -> Set[int]:
+        """Chunks currently claimed by stagers moving toward ``dst_pd_id``
+        — eviction must not drop what a transfer is about to account."""
+        with self._lock:
+            out: Set[int] = set()
+            for idxs, _ in self._inflight.get((du_id, dst_pd_id), []):
+                out |= idxs
+            return out
+
+    def _note_access(self, du: DataUnit, location: str) -> None:
+        """Publish one access record for the tier layer's frequency/recency
+        statistics (rides the store's existing event stream)."""
+        self.ctx.store.hset(
+            "du:access",
+            du.id,
+            {"location": location, "n": next(self._access_seq)},
+        )
 
     def ingest(self, du: DataUnit, dst: PilotData) -> float:
         """Initial staging of a freshly-described DU into its first PD."""
@@ -370,37 +423,74 @@ class TransferService:
         register: bool = True,
         pipelined: bool = False,
         batch_id: Optional[str] = None,
+        location: Optional[str] = None,
+        _depth: int = 0,
     ) -> float:
         """Materialize planned striped waves; simulated time is the max
-        over the (parallel) per-source waves."""
+        over the (parallel) per-source waves.
+
+        Sources are leased for the duration (quota eviction skips leased
+        holdings); if an eviction still raced the plan — the source lost
+        the chunks between planning and leasing — the missing remainder is
+        **re-planned** against the current holders instead of failing the
+        stage-in."""
         if not groups:
             return 0.0
+        where = location or dst.affinity
         striped = len(groups) > 1
         done_sims: List[float] = []
-        for g in groups:
-            t0 = time.monotonic()
-            if g.src is None:
-                dst.put_chunks(du, g.indices, register=register)
-            else:
-                dst.copy_chunks_from(du, g.src, g.indices, register=register)
-            self.record(
-                TransferRecord(
-                    du_id=du.id,
-                    src_pd=g.src.id if g.src is not None else None,
-                    dst_pd=dst.id,
-                    nbytes=g.nbytes,
-                    sim_seconds=g.sim_seconds,
-                    wall_seconds=time.monotonic() - t0,
-                    wall_start=t0,
-                    pipelined=pipelined,
-                    batch_id=batch_id,
-                    chunks=len(g.indices),
-                    striped=striped,
+        raced: Set[int] = set()
+        self._lease_sources(du, groups)
+        try:
+            for g in groups:
+                t0 = time.monotonic()
+                try:
+                    if g.src is None:
+                        dst.put_chunks(du, g.indices, register=register)
+                    else:
+                        dst.copy_chunks_from(
+                            du, g.src, g.indices, register=register
+                        )
+                except (KeyError, KeyNotFound):
+                    if _depth >= MAX_REPLANS:
+                        raise
+                    held = set(dst.chunks_held(du.id))
+                    raced.update(i for i in g.indices if i not in held)
+                    continue
+                self.record(
+                    TransferRecord(
+                        du_id=du.id,
+                        src_pd=g.src.id if g.src is not None else None,
+                        dst_pd=dst.id,
+                        nbytes=g.nbytes,
+                        sim_seconds=g.sim_seconds,
+                        wall_seconds=time.monotonic() - t0,
+                        wall_start=t0,
+                        pipelined=pipelined,
+                        batch_id=batch_id,
+                        chunks=len(g.indices),
+                        striped=striped,
+                    )
                 )
-            )
-            done_sims.append(g.sim_seconds)
-        sim = max(done_sims)
+                done_sims.append(g.sim_seconds)
+        finally:
+            self._unlease_sources(du, groups)
+        sim = max(done_sims, default=0.0)
         self.ctx.sleep_sim(sim)
+        if raced:
+            # the repair wave runs strictly AFTER the first wave (and
+            # sleeps itself, recursively), so the honest model is the sum
+            replanned = self.plan_chunk_fetch(du, dst, where, only=raced)
+            sim += self._fetch_groups(
+                du,
+                dst,
+                replanned,
+                register=register,
+                pipelined=pipelined,
+                batch_id=batch_id,
+                location=where,
+                _depth=_depth + 1,
+            )
         return sim
 
     def heal_replica(
@@ -559,6 +649,10 @@ class TransferService:
             if not sandbox.has_du(du.id):
                 sandbox.put_du(du)
             return 0.0
+        # one demand-access record per stage-in (hit or miss alike): the
+        # TierManager's frequency/recency stats and promotion thresholds
+        # ride this store event
+        self._note_access(du, location)
         key = (du.id, sandbox.id)
         total_sim = 0.0
         while True:
@@ -602,7 +696,9 @@ class TransferService:
                 continue
             try:
                 groups = self.plan_chunk_fetch(du, sandbox, location, only=mine)
-                total_sim += self._fetch_groups(du, sandbox, groups)
+                total_sim += self._fetch_groups(
+                    du, sandbox, groups, location=location
+                )
             finally:
                 with self._lock:
                     entries = self._inflight.get(key, [])
@@ -711,6 +807,7 @@ class TransferService:
                         g.src.id if g.src is not None else None, []
                     ).append((du, g))
             wave_sims: List[float] = []
+            raced: List[Tuple[DataUnit, Set[int]]] = []
             for src_id, items in by_src.items():
                 t0 = time.monotonic()
                 src = items[0][1].src
@@ -720,10 +817,22 @@ class TransferService:
                 moved: List[Tuple[DataUnit, _FetchGroup]] = []
                 try:
                     for du, g in items:
-                        if src is None:
-                            sandbox.put_chunks(du, g.indices)
-                        else:
-                            sandbox.copy_chunks_from(du, src, g.indices)
+                        self._lease_sources(du, [g])
+                        try:
+                            if src is None:
+                                sandbox.put_chunks(du, g.indices)
+                            else:
+                                sandbox.copy_chunks_from(du, src, g.indices)
+                        except (KeyError, KeyNotFound):
+                            # eviction raced the plan: re-plan this DU's
+                            # remainder against current holders below
+                            held = set(sandbox.chunks_held(du.id))
+                            raced.append(
+                                (du, {i for i in g.indices if i not in held})
+                            )
+                            continue
+                        finally:
+                            self._unlease_sources(du, [g])
                         moved.append((du, g))
                 finally:
                     moved_bytes = sum(g.nbytes for _, g in moved)
@@ -759,9 +868,28 @@ class TransferService:
                                 )
                             )
                         wave_sims.append(sim)
-            total_sim = max(wave_sims, default=0.0)
-            if total_sim > 0.0:
-                self.ctx.sleep_sim(total_sim)
+            raced_sim = 0.0
+            for du, missing in raced:
+                if not missing:
+                    continue
+                replanned = self.plan_chunk_fetch(
+                    du, sandbox, location, only=missing
+                )
+                # repair fetches sleep themselves (sequentially, after the
+                # batched waves) — keep them out of the parallel-wave max
+                raced_sim += self._fetch_groups(
+                    du,
+                    sandbox,
+                    replanned,
+                    pipelined=pipelined,
+                    batch_id=bid,
+                    location=location,
+                    _depth=1,
+                )
+            batch_sim = max(wave_sims, default=0.0)
+            if batch_sim > 0.0:
+                self.ctx.sleep_sim(batch_sim)
+            total_sim = batch_sim + raced_sim
             if on_complete is not None:
                 # runs BEFORE claims release, so anyone woken by the
                 # release already sees the completion's side effects

@@ -14,7 +14,7 @@ from __future__ import annotations
 import io
 import queue
 import threading
-from typing import Dict, Iterator, List, Optional, Tuple
+from typing import Dict, Iterator, List, Optional
 
 import numpy as np
 

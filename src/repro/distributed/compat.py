@@ -9,7 +9,7 @@ of the tree stays version-agnostic.
 
 from __future__ import annotations
 
-from typing import Optional, Sequence, Tuple
+from typing import Optional, Sequence
 
 import jax
 

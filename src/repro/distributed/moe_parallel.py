@@ -9,7 +9,6 @@ partitions it automatically (the tensors are tiny at decode).
 
 from __future__ import annotations
 
-from typing import Tuple
 
 import jax
 from jax.sharding import PartitionSpec as P

@@ -25,8 +25,7 @@ This is the substrate; wiring a full arch through it is a config choice
 
 from __future__ import annotations
 
-import functools
-from typing import Any, Callable, Tuple
+from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
@@ -92,7 +91,6 @@ def pipeline_apply(
         return outs
 
     pspec = jax.tree.map(lambda _: P(axis), stage_params)
-    other_axes = tuple(a for a in mesh.axis_names if a != axis)
     in_x = P()  # microbatch stream replicated across the pipeline axis
     return shard_map(
         body,

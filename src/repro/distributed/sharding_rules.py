@@ -23,7 +23,7 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 from jax.sharding import PartitionSpec as P
 
-from ..configs.base import ModelConfig, ShapeConfig
+from ..configs.base import ModelConfig
 from .context import DistContext
 
 #: tree prefixes that stack per-layer params with one leading dim

@@ -21,7 +21,7 @@ Semantics (causal / sliding-window / GQA) are validated against
 from __future__ import annotations
 
 import functools
-from typing import Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp

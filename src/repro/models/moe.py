@@ -21,7 +21,7 @@ never-routed dummy experts (router logits pinned to -inf).
 
 from __future__ import annotations
 
-from typing import Dict, Optional, Tuple
+from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp

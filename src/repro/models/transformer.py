@@ -14,34 +14,16 @@ its own KV cache slice.
 
 from __future__ import annotations
 
-import functools
 from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from ..configs.base import ModelConfig
-from .attention import attention_block, init_attention, init_kv_cache
-from .layers import (
-    chunked_cross_entropy,
-    dt,
-    embed,
-    init_embedding,
-    init_mlp,
-    init_rmsnorm,
-    mlp,
-    rms_norm,
-    softmax_cross_entropy,
-    unembed,
-)
-from .mamba2 import (
-    init_mamba_block,
-    init_mamba_cache,
-    mamba_block,
-    mamba_decode_step,
-    mamba_dims,
-)
-from .moe import init_moe, moe_mlp_ep, moe_mlp_local
+from .attention import attention_block, init_attention
+from .layers import chunked_cross_entropy, dt, embed, init_embedding, init_mlp, init_rmsnorm, mlp, rms_norm, unembed
+from .mamba2 import init_mamba_block, mamba_block, mamba_decode_step, mamba_dims
+from .moe import init_moe
 
 ATTN_KINDS = ("attn", "global", "swa", "moe", "swa_moe", "shared_attn")
 

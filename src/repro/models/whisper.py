@@ -14,24 +14,8 @@ import jax
 import jax.numpy as jnp
 
 from ..configs.base import ModelConfig
-from .attention import (
-    attention_block,
-    cross_attention_block,
-    gqa_attention,
-    init_attention,
-    precompute_cross_kv,
-)
-from .layers import (
-    dt,
-    embed,
-    init_embedding,
-    init_mlp,
-    init_rmsnorm,
-    mlp,
-    rms_norm,
-    softmax_cross_entropy,
-    unembed,
-)
+from .attention import attention_block, cross_attention_block, init_attention, precompute_cross_kv
+from .layers import dt, embed, init_embedding, init_mlp, init_rmsnorm, mlp, rms_norm, unembed
 
 
 def _enc(cfg: ModelConfig):

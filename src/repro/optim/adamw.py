@@ -16,7 +16,7 @@ Design for scale:
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -93,7 +93,7 @@ def adamw_update(
 def global_norm(tree: Any) -> jnp.ndarray:
     leaves = jax.tree.leaves(tree)
     return jnp.sqrt(
-        sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves)
+        sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves)
     )
 
 

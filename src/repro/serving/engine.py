@@ -10,12 +10,11 @@ NOT ``train_step``").
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
 
-from ..configs.base import ModelConfig
 from ..models.registry import ModelApi
 
 

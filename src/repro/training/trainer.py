@@ -22,8 +22,6 @@ from __future__ import annotations
 import functools
 import io
 import json
-import threading
-import time
 from typing import Any, Dict, List, Optional
 
 import numpy as np
@@ -107,7 +105,6 @@ class PilotTrainer:
 
     # ------------------------------------------------------------ plumbing
     def _register_executable(self) -> None:
-        cfg = self.cfg
         api = self.api
         me = self
 

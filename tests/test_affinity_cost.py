@@ -6,19 +6,7 @@ import pytest
 pytest.importorskip("hypothesis", reason="property tests need hypothesis")
 from hypothesis import given, settings, strategies as st
 
-from repro.core import (
-    Topology,
-    cheapest_replica,
-    choose_replication_degree,
-    decide_placement,
-    estimate_td,
-    estimate_tr_group,
-    estimate_tr_sequential,
-    estimate_tx,
-    make_tpu_fleet_topology,
-    match_affinity,
-    straggler_threshold,
-)
+from repro.core import cheapest_replica, choose_replication_degree, decide_placement, estimate_td, estimate_tr_group, estimate_tr_sequential, estimate_tx, make_tpu_fleet_topology, match_affinity, straggler_threshold
 
 GB = 1e9
 

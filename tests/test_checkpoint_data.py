@@ -3,7 +3,7 @@
 import numpy as np
 import pytest
 
-from repro.checkpoint import Checkpointer, load_checkpoint_du
+from repro.checkpoint import Checkpointer
 from repro.core import (
     DUState,
     PilotManager,

@@ -7,17 +7,7 @@ import zlib
 
 import pytest
 
-from repro.core import (
-    ChunkInfo,
-    CoordinationStore,
-    DataUnit,
-    DataUnitDescription,
-    DUState,
-    PilotManager,
-    Topology,
-    merge_dus,
-    partition_du,
-)
+from repro.core import CoordinationStore, DataUnit, DataUnitDescription, DUState, PilotManager, Topology, merge_dus, partition_du
 
 
 @pytest.fixture()

@@ -1,6 +1,5 @@
 """Coordination store: queues, CAS, durability (WAL replay), outages."""
 
-import os
 import threading
 import time
 

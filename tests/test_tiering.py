@@ -1,0 +1,470 @@
+"""Tiered storage hierarchy: tier classification, quota-driven eviction
+(with its safety invariants), pin/lease interlocks, eviction-race
+re-planning, mem-tier promotion, and tier-aware placement."""
+
+import pytest
+
+from repro.core import (
+    ComputeUnit,
+    ComputeUnitDescription,
+    CoordinationStore,
+    DataUnit,
+    DataUnitDescription,
+    DUState,
+    FUNCTIONS,
+    PilotData,
+    PilotDataDescription,
+    QuotaExceeded,
+    RuntimeContext,
+    Session,
+    TierManager,
+    Topology,
+    TransferService,
+    Victim,
+    classify_tier,
+    list_eviction_policies,
+    make_eviction_policy,
+    tier_rank,
+)
+from repro.core.tiering import TIER_DRAM, TIER_NODE, TIER_SITE, TIER_ARCHIVE
+
+CHUNK = 64
+DU_BYTES = 4 * CHUNK  # 4 chunks per DU
+
+
+def _topo(*labels, bw=30e6, lat=0.01) -> Topology:
+    t = Topology()
+    for lbl in labels:
+        t.register(lbl, bandwidth=bw, latency=lat)
+    return t
+
+
+def make_ctx(*labels):
+    ctx = RuntimeContext(store=CoordinationStore(), topology=_topo(*labels))
+    TransferService(ctx)
+    return ctx
+
+
+def make_pd(ctx, url, affinity, quota=1 << 40, tier=""):
+    pd = PilotData(
+        PilotDataDescription(
+            service_url=url, affinity=affinity, size_quota=quota, tier=tier
+        ),
+        ctx,
+    )
+    return ctx.register(pd)
+
+
+def make_du(ctx, name, fill, nbytes=DU_BYTES):
+    du = DataUnit(
+        DataUnitDescription(name=name, files={"x": fill * nbytes}, chunk_size=CHUNK),
+        ctx.store,
+    )
+    return ctx.register(du)
+
+
+# ---------------------------------------------------------- classification
+def test_classify_tier_by_scheme():
+    ctx = make_ctx("t:s0")
+    cases = {
+        "mem://t:s0/a": TIER_DRAM,
+        "file://t:s0/b": TIER_NODE,
+        "sharedfs://t:s0/c": TIER_SITE,
+        "object://t:s0/d": TIER_ARCHIVE,
+    }
+    for url, expected in cases.items():
+        assert classify_tier(make_pd(ctx, url, "t:s0")) == expected
+
+
+def test_classify_tier_explicit_override_and_rank():
+    ctx = make_ctx("t:s0")
+    pd = make_pd(ctx, "mem://t:s0/x", "t:s0", tier=TIER_ARCHIVE)
+    assert classify_tier(pd) == TIER_ARCHIVE
+    with pytest.raises(ValueError):
+        classify_tier(make_pd(ctx, "mem://t:s0/y", "t:s0", tier="warp-core"))
+    assert tier_rank(TIER_DRAM) < tier_rank(TIER_NODE) < tier_rank(TIER_SITE)
+    assert tier_rank(TIER_SITE) < tier_rank(TIER_ARCHIVE)
+
+
+# --------------------------------------------------------------- policies
+def test_eviction_policy_registry():
+    assert {"lru", "lfu", "largest-first"} <= set(list_eviction_policies())
+    with pytest.raises(KeyError):
+        make_eviction_policy("optimal-clairvoyant")
+
+
+def test_eviction_policy_orderings():
+    victims = [
+        Victim("du-a", [0], 100, last_access=3, access_count=9),
+        Victim("du-b", [0], 300, last_access=1, access_count=5),
+        Victim("du-c", [0], 200, last_access=2, access_count=1),
+    ]
+    order = {
+        "lru": ["du-b", "du-c", "du-a"],
+        "lfu": ["du-c", "du-b", "du-a"],
+        "largest-first": ["du-b", "du-c", "du-a"],
+    }
+    for name, expected in order.items():
+        ranked = make_eviction_policy(name).rank(None, victims)
+        assert [v.du_id for v in ranked] == expected
+
+
+# ------------------------------------------------------- quota eviction
+def test_quota_eviction_reclaims_redundant_replica():
+    ctx = make_ctx("t:s0", "t:s1")
+    tm = TierManager(ctx, auto_promote=False)
+    base = make_pd(ctx, "sharedfs://t:s0/base", "t:s0")
+    small = make_pd(ctx, "mem://t:s1/small", "t:s1", quota=DU_BYTES + CHUNK)
+    a = make_du(ctx, "a", b"A")
+    b = make_du(ctx, "b", b"B")
+    base.put_du(a), base.put_du(b)
+    small.copy_du_from(a, base)
+    assert small.has_du(a.id) and small.id in a.locations
+    # staging B would exceed the quota: just enough of the redundant copy
+    # of A is evicted (minimal eviction — A stays a partial holder)
+    small.copy_du_from(b, base)
+    assert small.has_du(b.id)
+    assert not small.has_du(a.id)
+    assert small.used_bytes <= small.description.size_quota
+    assert tm.evictions and tm.evictions[0]["du"] == a.id
+    # bookkeeping is exact: A demoted out of locations, its remaining
+    # chunks still registered as a (valid) partial holding
+    assert a.locations == [base.id]
+    remaining = a.chunk_holders().get(small.id, [])
+    assert set(remaining) == set(small.chunks_held(a.id))
+    assert len(remaining) < a.n_chunks
+    assert base.verify_du(a) and a.state == DUState.READY
+    tm.stop()
+
+
+def test_last_copy_of_sealed_du_never_evicted():
+    ctx = make_ctx("t:s0")
+    tm = TierManager(ctx, auto_promote=False)
+    only = make_pd(ctx, "mem://t:s0/only", "t:s0", quota=DU_BYTES + CHUNK)
+    a = make_du(ctx, "a", b"A")
+    b = make_du(ctx, "b", b"B")
+    only.put_du(a)
+    assert a.sealed
+    with pytest.raises(QuotaExceeded):
+        only.put_du(b)
+    # the sole replica of A survived intact
+    assert only.verify_du(a)
+    assert not tm.evictions
+    tm.stop()
+
+
+def test_eviction_never_drops_below_replication_factor():
+    ctx = make_ctx("t:s0", "t:s1")
+    tm = TierManager(ctx, auto_promote=False)
+    pd0 = make_pd(ctx, "mem://t:s0/p0", "t:s0", quota=DU_BYTES + CHUNK)
+    pd1 = make_pd(ctx, "mem://t:s1/p1", "t:s1")
+    a = ctx.register(
+        DataUnit(
+            DataUnitDescription(
+                name="a",
+                files={"x": b"A" * DU_BYTES},
+                chunk_size=CHUNK,
+                replication_factor=2,
+            ),
+            ctx.store,
+        )
+    )
+    b = make_du(ctx, "b", b"B")
+    pd0.put_du(a), pd1.put_du(a), pd1.put_du(b)
+    # both copies of A are load-bearing (factor=2): eviction must refuse
+    with pytest.raises(QuotaExceeded):
+        pd0.copy_du_from(b, pd1)
+    assert sorted(a.locations) == sorted([pd0.id, pd1.id])
+    tm.stop()
+
+
+def test_pinned_inputs_never_evicted():
+    ctx = make_ctx("t:s0", "t:s1")
+    tm = TierManager(ctx, auto_promote=False)
+    base = make_pd(ctx, "sharedfs://t:s0/base", "t:s0")
+    small = make_pd(ctx, "mem://t:s1/small", "t:s1", quota=DU_BYTES + CHUNK)
+    a = make_du(ctx, "a", b"A")
+    b = make_du(ctx, "b", b"B")
+    base.put_du(a), base.put_du(b)
+    small.copy_du_from(a, base)
+    ctx.store.hset("cu:consumer", "state", "Running")
+    tm.pins.pin(a.id, "consumer")
+    with pytest.raises(QuotaExceeded):
+        small.copy_du_from(b, base)  # A is pinned: nothing to reclaim
+    assert small.has_du(a.id)
+    # consumer finishes: the pin self-heals and eviction proceeds
+    ctx.store.hset("cu:consumer", "state", "Done")
+    small.copy_du_from(b, base)
+    assert small.has_du(b.id) and not small.has_du(a.id)
+    tm.stop()
+
+
+def test_unpin_owner_releases_pin():
+    ctx = make_ctx("t:s0")
+    tm = TierManager(ctx, auto_promote=False)
+    ctx.store.hset("cu:c1", "state", "Running")
+    tm.pins.pin("du-x", "c1")
+    assert tm.pins.pinned("du-x")
+    tm.pins.unpin_owner("c1")
+    assert not tm.pins.pinned("du-x")
+    tm.stop()
+
+
+def test_source_lease_blocks_eviction():
+    ctx = make_ctx("t:s0", "t:s1")
+    tm = TierManager(ctx, auto_promote=False)
+    ts = ctx.transfer_service
+    base = make_pd(ctx, "sharedfs://t:s0/base", "t:s0")
+    small = make_pd(ctx, "mem://t:s1/small", "t:s1", quota=DU_BYTES + CHUNK)
+    a = make_du(ctx, "a", b"A")
+    b = make_du(ctx, "b", b"B")
+    base.put_du(a), base.put_du(b)
+    small.copy_du_from(a, base)
+    # simulate an in-flight fetch reading A from `small`
+    ts._src_leases[(small.id, a.id)] = 1
+    assert ts.source_leased(small.id, a.id)
+    with pytest.raises(QuotaExceeded):
+        small.copy_du_from(b, base)
+    assert small.has_du(a.id)
+    ts._src_leases.pop((small.id, a.id))
+    small.copy_du_from(b, base)
+    assert small.has_du(b.id)
+    tm.stop()
+
+
+def test_partial_eviction_demotes_to_partial_holder():
+    ctx = make_ctx("t:s0", "t:s1")
+    tm = TierManager(ctx, auto_promote=False)
+    base = make_pd(ctx, "sharedfs://t:s0/base", "t:s0")
+    pd = make_pd(ctx, "mem://t:s1/pd", "t:s1")
+    a = make_du(ctx, "a", b"A")
+    base.put_du(a)
+    pd.copy_du_from(a, base)
+    ver = a.locations_version
+    freed = pd.evict_chunks(a, [0, 2])
+    assert freed == 2 * CHUNK
+    assert pd.chunks_held(a.id) == [1, 3]
+    assert a.chunk_holders()[pd.id] == [1, 3]
+    assert pd.id not in a.locations  # demoted: no longer a full replica
+    assert a.locations_version > ver  # transfer caches invalidate
+    # healing re-stages only the missing chunks
+    ctx.transfer_service.heal_replica(a, pd)
+    assert pd.has_du(a.id) and pd.id in a.locations
+    tm.stop()
+
+
+def test_eviction_race_replans_from_surviving_holder():
+    ctx = make_ctx("t:s0", "t:s1", "t:s2")
+    tm = TierManager(ctx, auto_promote=False)
+    ts = ctx.transfer_service
+    src1 = make_pd(ctx, "sharedfs://t:s0/s1", "t:s0")
+    src2 = make_pd(ctx, "sharedfs://t:s1/s2", "t:s1")
+    dst = make_pd(ctx, "mem://t:s2/dst", "t:s2")
+    a = make_du(ctx, "a", b"A")
+    src1.put_du(a)
+    src2.copy_du_from(a, src1)
+    groups = ts.plan_chunk_fetch(a, dst, "t:s2")
+    planned_srcs = {g.src.id for g in groups if g.src is not None}
+    assert planned_srcs  # at least one physical source planned
+    # an eviction lands between planning and fetching: src1 loses its copy
+    src1.evict_chunks(a, list(range(a.n_chunks)))
+    sim = ts._fetch_groups(a, dst, groups, location="t:s2")
+    assert dst.has_du(a.id)  # re-planned onto src2 instead of failing
+    assert sim > 0.0
+    assert dst.verify_du(a)
+    tm.stop()
+
+
+# ----------------------------------------------------------- promotion
+def test_hot_du_promoted_to_mem_tier_cache():
+    FUNCTIONS.register(
+        "tier-read",
+        lambda c: len(c.read_input(c.cu.description.input_data[0], "x")),
+    )
+    topo = _topo("t:s0", "t:s1", bw=10e6)
+    with Session(
+        topology=topo,
+        tier_cache_bytes=4 * DU_BYTES,
+        tier_auto_promote=False,
+    ) as s:
+        cold = s.start_pilot_data(service_url="sharedfs://t:s1/cold", affinity="t:s1")
+        pilot = s.start_pilot(
+            resource_url="sim://t:s0", slots=1, sandbox_quota=DU_BYTES
+        )
+        pilot.wait_active()
+        dus = [
+            s.submit_du(
+                name=f"d{i}",
+                files={"x": bytes([i]) * DU_BYTES},
+                chunk_size=CHUNK,
+                target=cold,
+            ).result()
+            for i in range(2)
+        ]
+        tm = s.tier_manager
+        # two read epochs cross the promote_after=2 threshold
+        for _ in range(2):
+            for du in dus:
+                cu = s.submit_cu(executable="tier-read", input_data=[du], pilot=pilot)
+                assert cu.result(timeout=20) == DU_BYTES
+        assert tm.drain_promotions() == 2
+        cache = tm.cache_pds["t:s0"]
+        assert classify_tier(cache) == TIER_DRAM
+        for du in dus:
+            assert cache.has_du(du.id)
+            # cache-tier replica is linkable from the pilot: staging free
+            cost = s.transfer.estimate_stage_cost(du, pilot.affinity, pilot.sandbox)
+            assert cost == 0.0
+        assert tm.promotions and len(tm.promotions) == 2
+
+
+def test_access_stats_ride_store_events():
+    ctx = make_ctx("t:s0")
+    tm = TierManager(ctx, auto_promote=False)
+    ts = ctx.transfer_service
+    base = make_pd(ctx, "sharedfs://t:s0/base", "t:s0")
+    a = make_du(ctx, "a", b"A")
+    base.put_du(a)
+    assert tm.access_stats(a.id) == (0, 0)
+    sandbox = make_pd(ctx, "mem://t:s0/sb", "t:s0")
+    ts.stage_in(a, sandbox, "t:s0")
+    ts.stage_in(a, sandbox, "t:s0")  # pilot-level cache hit still counts
+    count, last = tm.access_stats(a.id)
+    assert count == 2 and last > 0
+    tm.stop()
+
+
+# ------------------------------------------------------ tier-aware placement
+def test_data_local_strategy_prefers_faster_tier():
+    FUNCTIONS.register("tier-noop", lambda c: 0)
+    topo = _topo("t:s0", "t:s1")
+    with Session(topology=topo, placement_strategy="data-local") as s:
+        fast = s.start_pilot_data(service_url="mem://t:s0/fast", affinity="t:s0")
+        slow = s.start_pilot_data(service_url="sharedfs://t:s1/slow", affinity="t:s1")
+        p_fast = s.start_pilot(resource_url="sim://t:s0", slots=1)
+        p_slow = s.start_pilot(resource_url="sim://t:s1", slots=1)
+        p_fast.wait_active(), p_slow.wait_active()
+        du = s.submit_du(
+            name="d", files={"x": b"D" * DU_BYTES}, chunk_size=CHUNK,
+            target=slow,
+        ).result()
+        fast.copy_du_from(du, slow)
+        cu = ComputeUnit(
+            ComputeUnitDescription(executable="tier-noop", input_data=[du.id]),
+            s.store,
+        )
+        s.ctx.register(cu)
+        engine = s.cds.engine
+        # the session's data-local strategy declares uses_tier_bw, which
+        # is what the CDS passes through on the live placement path
+        assert s.cds.strategy.uses_tier_bw
+        cands = engine.candidates(cu, [p_fast, p_slow], tier_bw=True)
+        by_pilot = {c.pilot.id: c for c in cands}
+        # both are fully local (linkable replica at each site)...
+        assert by_pilot[p_fast.id].locality == 1.0
+        assert by_pilot[p_slow.id].locality == 1.0
+        # ...but the DRAM-tier replica serves faster than the shared FS
+        assert by_pilot[p_fast.id].tier_bw > by_pilot[p_slow.id].tier_bw
+        ranked = s.cds.strategy.rank(cu, cands)
+        assert ranked[0].pilot.id == p_fast.id
+
+
+def test_concurrent_admission_cannot_overshoot_quota():
+    # check-and-reserve admission: racing stagers must not jointly exceed
+    # the quota (each alone fits, together they would overshoot 3x)
+    import threading
+
+    ctx = make_ctx("t:s0", "t:s1")
+    tm = TierManager(ctx, auto_promote=False)
+    base = make_pd(ctx, "sharedfs://t:s0/base", "t:s0")
+    small = make_pd(ctx, "mem://t:s1/small", "t:s1", quota=DU_BYTES + CHUNK)
+    dus = [make_du(ctx, f"c{i}", bytes([i + 1])) for i in range(3)]
+    for du in dus:
+        base.put_du(du)
+        ctx.store.hset(f"cu:keep-{du.id}", "state", "Running")
+        tm.pins.pin(du.id, f"keep-{du.id}")  # nothing evictable: pure race
+    results = []
+
+    def copy(du):
+        try:
+            small.copy_du_from(du, base)
+            results.append("ok")
+        except QuotaExceeded:
+            results.append("quota")
+
+    threads = [threading.Thread(target=copy, args=(du,)) for du in dus]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert small.used_bytes <= small.description.size_quota
+    assert results.count("ok") == 1 and results.count("quota") == 2
+    tm.stop()
+
+
+def test_quota_backpressure_requeues_instead_of_failing():
+    # two CUs share one pilot whose sandbox fits only one CU's input:
+    # the loser must wait for the winner (pin released on completion)
+    # instead of burning retries into a failure
+    FUNCTIONS.register(
+        "bp-read",
+        lambda c: len(c.read_input(c.cu.description.input_data[0], "x")),
+    )
+    topo = _topo("t:s0", "t:s1", bw=10e6)
+    with Session(topology=topo, eviction_policy="lru") as s:
+        cold = s.start_pilot_data(service_url="sharedfs://t:s1/cold", affinity="t:s1")
+        pilot = s.start_pilot(
+            resource_url="sim://t:s0", slots=2, sandbox_quota=DU_BYTES + CHUNK
+        )
+        pilot.wait_active()
+        dus = [
+            s.submit_du(
+                name=f"bp{i}",
+                files={"x": bytes([i]) * DU_BYTES},
+                chunk_size=CHUNK,
+                target=cold,
+            ).result()
+            for i in range(3)
+        ]
+        futs = [
+            s.submit_cu(executable="bp-read", input_data=[du], pilot=pilot)
+            for du in dus
+        ]
+        for f in futs:
+            assert f.result(timeout=30) == DU_BYTES
+        assert pilot.sandbox.used_bytes <= DU_BYTES + CHUNK
+
+
+# --------------------------------------------------- end-to-end churn
+def test_working_set_larger_than_sandbox_completes():
+    FUNCTIONS.register(
+        "tier-sum",
+        lambda c: sum(len(c.read_input(d.id, "x")) for d in c.input_dus()),
+    )
+    topo = _topo("t:s0", "t:s1", bw=10e6)
+    with Session(topology=topo, eviction_policy="lru") as s:
+        cold = s.start_pilot_data(service_url="sharedfs://t:s1/cold", affinity="t:s1")
+        pilot = s.start_pilot(
+            resource_url="sim://t:s0", slots=1, sandbox_quota=2 * DU_BYTES
+        )
+        pilot.wait_active()
+        dus = [
+            s.submit_du(
+                name=f"w{i}",
+                files={"x": bytes([i]) * DU_BYTES},
+                chunk_size=CHUNK,
+                target=cold,
+            ).result()
+            for i in range(5)
+        ]
+        for _epoch in range(2):
+            for du in dus:
+                cu = s.submit_cu(executable="tier-sum", input_data=[du], pilot=pilot)
+                assert cu.result(timeout=20) == DU_BYTES
+        tm = s.tier_manager
+        assert tm.evictions  # the working set cannot fit: churn happened
+        assert pilot.sandbox.used_bytes <= 2 * DU_BYTES
+        for du in dus:
+            assert du.state == DUState.READY
+            assert du.has_full_coverage()
+            assert cold.verify_du(du)

@@ -1,0 +1,175 @@
+"""Property tests for eviction invariants: under arbitrary interleavings
+of put / read / pin / evict operations, a sealed DU never loses the last
+copy of any chunk, a DU never drops below its replication factor, pinned
+inputs are never evicted, and every PD ends each step within its quota."""
+
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis")
+
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    CoordinationStore,
+    DataUnit,
+    DataUnitDescription,
+    PilotData,
+    PilotDataDescription,
+    QuotaExceeded,
+    RuntimeContext,
+    TierManager,
+    Topology,
+    TransferService,
+    Victim,
+    list_eviction_policies,
+    make_eviction_policy,
+)
+
+CHUNK = 64
+DU_CHUNKS = 4
+DU_BYTES = DU_CHUNKS * CHUNK
+N_DUS = 4
+
+
+def _build(policy: str):
+    topo = Topology()
+    topo.register("p:base", bandwidth=30e6, latency=0.01)
+    topo.register("p:edge", bandwidth=30e6, latency=0.01)
+    ctx = RuntimeContext(store=CoordinationStore(), topology=topo)
+    TransferService(ctx)
+    tm = TierManager(ctx, eviction_policy=policy, auto_promote=False)
+    base = ctx.register(
+        PilotData(
+            PilotDataDescription(service_url="sharedfs://p:base/b", affinity="p:base"),
+            ctx,
+        )
+    )
+    cache = ctx.register(
+        PilotData(
+            PilotDataDescription(
+                service_url="mem://p:edge/c",
+                affinity="p:edge",
+                # holds the factor=2 resident plus ~1.5 more DUs, so
+                # copying the rest of the working set forces churn
+                size_quota=2 * DU_BYTES + 2 * CHUNK,
+            ),
+            ctx,
+        )
+    )
+    dus = []
+    for i in range(N_DUS):
+        du = ctx.register(
+            DataUnit(
+                DataUnitDescription(
+                    name=f"p{i}",
+                    files={"x": bytes([i + 1]) * DU_BYTES},
+                    chunk_size=CHUNK,
+                    # one DU carries factor=2: both copies load-bearing
+                    replication_factor=2 if i == 0 else 1,
+                ),
+                ctx.store,
+            )
+        )
+        base.put_du(du)
+        dus.append(du)
+    cache.copy_du_from(dus[0], base)  # factor=2 DU starts at its factor
+    return ctx, tm, base, cache, dus
+
+
+_op = st.one_of(
+    st.tuples(st.just("copy"), st.integers(0, N_DUS - 1)),
+    st.tuples(st.just("pin"), st.integers(0, N_DUS - 1)),
+    st.tuples(st.just("unpin"), st.integers(0, N_DUS - 1)),
+    st.tuples(st.just("access"), st.integers(0, N_DUS - 1)),
+    st.tuples(st.just("evict_cache"), st.integers(1, 2 * DU_BYTES)),
+    st.tuples(st.just("evict_base"), st.integers(1, 2 * DU_BYTES)),
+)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    ops=st.lists(_op, min_size=1, max_size=25),
+    policy=st.sampled_from(["lru", "lfu", "largest-first"]),
+)
+def test_eviction_invariants_under_interleavings(ops, policy):
+    ctx, tm, base, cache, dus = _build(policy)
+    ts = ctx.transfer_service
+    pinned_snapshots = {}
+    for op, arg in ops:
+        if op == "copy":
+            du = dus[arg]
+            try:
+                # multi-source heal: works from partial holders too (an
+                # earlier evict_base may have demoted the base replica)
+                ts.heal_replica(du, cache)
+            except QuotaExceeded:
+                pass  # invariants forbade enough eviction: acceptable
+        elif op == "pin":
+            du = dus[arg]
+            ctx.store.hset(f"cu:c{arg}", "state", "Running")
+            tm.pins.pin(du.id, f"c{arg}")
+            pinned_snapshots[du.id] = {
+                pd_id: set(idxs)
+                for pd_id, idxs in du.chunk_holders().items()
+            }
+        elif op == "unpin":
+            du = dus[arg]
+            tm.pins.unpin_owner(f"c{arg}")
+            pinned_snapshots.pop(du.id, None)
+        elif op == "access":
+            ts._note_access(dus[arg], "p:edge")
+        elif op == "evict_cache":
+            tm.make_room(cache, arg)
+        elif op == "evict_base":
+            tm.make_room(base, arg)
+
+        # ---- invariants, after every single operation ----
+        for du in dus:
+            # a sealed DU never loses the last copy of any chunk: the
+            # union of all registered holders still covers every chunk
+            assert du.has_full_coverage(), (op, du.id)
+            # never below the declared replication factor
+            assert len(du.locations) >= du.replication_factor, (op, du.id)
+        for pd in (base, cache):
+            assert pd.used_bytes <= pd.description.size_quota
+            # local accounting agrees with the store-side registry for
+            # registered holdings
+            for du in dus:
+                registered = set(du.chunk_holders().get(pd.id, []))
+                assert registered <= set(pd.chunks_held(du.id))
+        # pinned DUs keep every chunk they had at pin time, per holder
+        for du_id, snapshot in pinned_snapshots.items():
+            now = {
+                pd_id: set(idxs)
+                for pd_id, idxs in ctx.store.hgetall(f"du:{du_id}:chunks").items()
+            }
+            for pd_id, idxs in snapshot.items():
+                assert idxs <= now.get(pd_id, set()), (op, du_id, pd_id)
+    tm.stop()
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    victims=st.lists(
+        st.builds(
+            Victim,
+            du_id=st.text(alphabet="abcdef", min_size=1, max_size=4),
+            indices=st.just([0]),
+            nbytes=st.integers(1, 10_000),
+            last_access=st.integers(0, 100),
+            access_count=st.integers(0, 100),
+        ),
+        max_size=8,
+    ),
+    policy=st.sampled_from(["lru", "lfu", "largest-first"]),
+)
+def test_policies_are_deterministic_permutations(victims, policy):
+    p = make_eviction_policy(policy)
+    ranked = p.rank(None, victims)
+    assert sorted(v.du_id for v in ranked) == sorted(v.du_id for v in victims)
+    assert [v.du_id for v in p.rank(None, victims)] == [v.du_id for v in ranked]
+
+
+def test_policy_registry_is_complete():
+    for name in list_eviction_policies():
+        assert make_eviction_policy(name).name == name

@@ -2,10 +2,7 @@
 data-affinity placement, checkpoint-DU chains, fault recovery, elasticity."""
 
 import threading
-import time
 
-import jax
-import numpy as np
 import pytest
 
 from repro.configs import get_config
