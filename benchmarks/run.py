@@ -12,6 +12,8 @@ can archive a perf trajectory artifact per run.
                        + async-vs-sync pipelined staging comparison
   bench_dataflow     — Pilot-API v2 DAG: one-shot declarative submission
                        (sync + async) vs v1 submit-wait-submit
+  bench_streaming    — chunk-streaming shuffle vs seal-gated pipeline
+                       (prefix-released consumers) + exactly-once rollback
   bench_faults       — makespan-under-churn: kill k of n pilots
                        mid-workload; replication-factor healing + lineage
                        recomputation; monitor op-count O(changes) proof
@@ -56,6 +58,7 @@ def main() -> None:
         bench_roofline,
         bench_scale,
         bench_staging,
+        bench_streaming,
         bench_tiering,
     )
 
@@ -65,6 +68,7 @@ def main() -> None:
         "placement": lambda: bench_placement.run(),
         "scale": lambda: bench_scale.run(n_tasks=128 if args.quick else 1024),
         "dataflow": lambda: bench_dataflow.run(),
+        "streaming": lambda: bench_streaming.run(),
         "faults": lambda: bench_faults.run(quick=args.quick),
         "tiering": lambda: bench_tiering.run(),
         "cost_model": lambda: bench_cost_model.run(),

@@ -23,14 +23,15 @@ The agent:
 
 from __future__ import annotations
 
+import itertools
 import threading
 import time
 import traceback
-from typing import Dict, List, Optional
+from typing import Dict, Iterator, List, Optional, Tuple
 
 from .affinity import match_affinity
 from .compute_unit import CUState, ComputeUnit, FUNCTIONS
-from .data_unit import DataUnit
+from .data_unit import DataUnit, DUState
 from .pilot import HEARTBEATS_KEY, PilotState, QuotaExceeded, RuntimeContext
 
 GLOBAL_QUEUE = "queue:global"
@@ -39,6 +40,16 @@ GLOBAL_QUEUE = "queue:global"
 #: of OTHER live consumers' pinned inputs) before the hit counts as a
 #: real failure; each wait re-queues without burning a retry attempt
 MAX_QUOTA_WAITS = 100
+
+#: quota-blocked waits a streaming producer's flush tolerates before the
+#: QuotaExceeded surfaces as a CU failure — each wait is the backpressure
+#: that paces a fast producer against a slow consumer's sandbox (eviction
+#: can only reclaim streamed chunks the consumers' read frontiers passed)
+MAX_STREAM_FLUSH_WAITS = 200
+
+#: attempt-unique stream-writer tokens (``<cu>@<pilot>#<n>``): the pilot id
+#: in the middle is what lets a retry prove the prior writer is dead
+_stream_tokens = itertools.count()
 
 
 class CUContext:
@@ -57,6 +68,11 @@ class CUContext:
         self.ctx = ctx
         #: output index -> {relpath: bytes}, flushed by the agent on win
         self._out_buffers: Dict[int, Dict[str, bytes]] = {}
+        #: this attempt's stream-writer identity (streaming outputs only)
+        self._stream_token = f"{cu.id}@{pilot.id}#{next(_stream_tokens)}"
+        #: set once this attempt loses a stream to a live foreign writer —
+        #: the agent declines the winner CAS instead of double-publishing
+        self._stream_lost = False
 
     # ------------------------------------------------------------- inputs
     def input_dus(self) -> List[DataUnit]:
@@ -99,13 +115,212 @@ class CUContext:
     def flush_outputs(self) -> None:
         """Move the attempt's buffered writes into the real output DUs —
         called by the agent strictly after the winner CAS, so failed
-        attempts and losing duplicates never touch a DU."""
+        attempts and losing duplicates never touch a DU.
+
+        Streaming DUs flush in *insertion* order (their canonical stream is
+        append-ordered — already-published chunk prefixes must not shift);
+        sealed-at-once DUs keep the deterministic sorted order."""
         out_ids = self.cu.description.output_data
         for index in sorted(self._out_buffers):
             du: DataUnit = self.ctx.lookup(out_ids[index])
-            for relpath, data in sorted(self._out_buffers[index].items()):
+            items = self._out_buffers[index].items()
+            for relpath, data in (
+                items if du.streaming else sorted(items)
+            ):
                 du.add_file(relpath, data)
         self._out_buffers.clear()
+
+    # -------------------------------------------------- streaming outputs
+    def flush_output(self, index: int = 0) -> bool:
+        """Flush the buffered writes of streaming output ``index`` NOW,
+        publishing every newly-completed chunk to consumers (ordered
+        chunk-availability events on the store stream) while this CU keeps
+        running.
+
+        Exactly-once is preserved by a **stream-writer CAS** on the DU: the
+        first attempt to flush claims the stream; a racing duplicate loses
+        the claim, drops its buffer, and returns ``False`` (the agent then
+        declines the winner CAS for that attempt).  A writer token whose
+        pilot has died is stolen — after rolling the half-written stream
+        back to zero — so retries of a crashed producer start clean.
+
+        Returns ``True`` if this attempt owns the stream and the flush
+        published; ``False`` if the stream belongs to a live foreign
+        attempt (the caller should stop producing)."""
+        out_ids = self.cu.description.output_data
+        if not out_ids:
+            raise RuntimeError(f"{self.cu.url} declares no output_data")
+        if not 0 <= index < len(out_ids):
+            raise IndexError(
+                f"{self.cu.url} has {len(out_ids)} output DUs, no index {index}"
+            )
+        du: DataUnit = self.ctx.lookup(out_ids[index])
+        if not du.streaming:
+            raise RuntimeError(
+                f"{du.url} is not a streaming DU; buffered writes flush "
+                f"after the winner CAS instead"
+            )
+        store = self.ctx.store
+        if store.hget(f"cu:{self.cu.id}", "winner") is not None:
+            # another attempt already completed the whole CU
+            self._stream_lost = True
+            self._out_buffers.pop(index, None)
+            return False
+        if not self._own_stream(du):
+            self._out_buffers.pop(index, None)
+            return False
+        buf = self._out_buffers.pop(index, None)
+        if buf:
+            for relpath, data in buf.items():  # insertion order
+                du.add_file(relpath, data)
+        self._publish_prefix(du)
+        return True
+
+    def _own_stream(self, du: DataUnit) -> bool:
+        """Acquire (or re-confirm) the stream-writer claim for ``du``."""
+        store = self.ctx.store
+        key = f"du:{du.id}"
+        token = self._stream_token
+        if store.hcas(key, "stream_writer", None, token):
+            return True
+        cur = store.hget(key, "stream_writer")
+        if cur == token:
+            return True
+        writer_pilot = None
+        if isinstance(cur, str) and "@" in cur and "#" in cur:
+            writer_pilot = cur.split("@", 1)[1].rsplit("#", 1)[0]
+        if writer_pilot is not None:
+            pstate = store.hget(f"pilot:{writer_pilot}", "state")
+            if pstate in (
+                PilotState.FAILED, PilotState.CANCELED, PilotState.DONE
+            ) and store.hcas(key, "stream_writer", cur, token):
+                # the prior writer died mid-stream: roll its partial
+                # publishes back so this attempt re-streams from zero
+                du.reset_stream()
+                return True
+        self._stream_lost = True
+        return False
+
+    def _publish_prefix(self, du: DataUnit) -> None:
+        """Materialize the newly-completed chunks into the producer's
+        sandbox PD, cost-account the move, then advance the published
+        prefix — strictly in that order, so a consumer released by the
+        publish event always finds a registered holder for every chunk of
+        the prefix (the no-gap invariant).
+
+        The sandbox quota is the backpressure: when eviction cannot make
+        room (consumers' read frontiers haven't passed the already-
+        streamed chunks), the producer *waits* here instead of flooding."""
+        ts = self.ctx.transfer_service
+        sandbox = self.pilot.sandbox
+        upto = du.publishable_chunks()
+        already = du.published
+        if upto <= already:
+            return
+        t0 = time.monotonic()
+        waits = 0
+        while True:
+            try:
+                nbytes = sandbox.put_chunks(du, list(range(already, upto)))
+                break
+            except QuotaExceeded:
+                waits += 1
+                if waits > MAX_STREAM_FLUSH_WAITS:
+                    raise
+                time.sleep(max(self.ctx.poll_s, 0.01))
+        if nbytes > 0:
+            from .transfer import TransferRecord
+
+            sim = ts.simulated_ingest_time(nbytes, sandbox)
+            self.ctx.sleep_sim(sim)
+            ts.record(
+                TransferRecord(
+                    du_id=du.id,
+                    src_pd=None,
+                    dst_pd=sandbox.id,
+                    nbytes=nbytes,
+                    sim_seconds=sim,
+                    wall_seconds=time.monotonic() - t0,
+                    wall_start=t0,
+                    chunks=upto - already,
+                )
+            )
+        du.publish_prefix(upto)
+
+    def abort_stream(self) -> None:
+        """Roll back this attempt's partially-streamed outputs (the
+        exception/retry path): every streaming output DU whose writer
+        claim is ours is reset to zero published chunks and the claim
+        released — a failed producer attempt publishes nothing durable."""
+        store = self.ctx.store
+        for du_id in self.cu.description.output_data:
+            try:
+                du: DataUnit = self.ctx.lookup(du_id)
+            except KeyError:
+                continue
+            if not du.streaming or du.sealed:
+                continue
+            if store.hget(f"du:{du.id}", "stream_writer") == self._stream_token:
+                du.reset_stream()
+                store.hdel(f"du:{du.id}", "stream_writer")
+        self._out_buffers.clear()
+
+    def lost_stream(self) -> bool:
+        """True if a live foreign attempt owns one of our output streams —
+        the agent declines the winner CAS for this attempt."""
+        return self._stream_lost
+
+    # --------------------------------------------------- streaming inputs
+    def stream_input(
+        self, du_id: str, window: int = 4
+    ) -> Iterator[Tuple[int, bytes]]:
+        """Iterate ``(chunk_index, chunk_bytes)`` over a streaming input
+        DU, staging chunks into the sandbox as the producer publishes them
+        (chunk-granular stage-in, re-planned as more chunks appear) and
+        blocking — event-driven on the ``published`` field — when the
+        consumer catches up with the producer.
+
+        ``window`` bounds read-ahead: at most that many chunks beyond the
+        current read position are staged per call, and the consumer's read
+        frontier advances after each yielded chunk so the TierManager may
+        evict consumed stream chunks behind it (the backpressure valve)."""
+        du: DataUnit = self.ctx.lookup(du_id)
+        ts = self.ctx.transfer_service
+        sandbox = self.pilot.sandbox
+        tm = self.ctx.tier_manager
+        store = self.ctx.store
+        i = 0
+        while True:
+            if du.state == DUState.FAILED:
+                raise RuntimeError(
+                    f"{du.url} failed mid-stream: "
+                    f"{store.hget(f'du:{du.id}', 'error') or 'producer failed'}"
+                )
+            avail = du.available_chunks()
+            if i >= avail:
+                if du.sealed and i >= du.n_chunks:
+                    return
+                # producer ahead of us not yet: wait on the next publish
+                # event (short timeout so FAILED/reset are re-checked)
+                store.wait_field(
+                    f"du:{du.id}",
+                    "published",
+                    lambda v, _i=i: int(v or 0) > _i or du.sealed,
+                    timeout=0.5,
+                    default=0,
+                )
+                continue
+            ts.stage_in(
+                du, sandbox, self.pilot.affinity,
+                prefix=min(avail, i + window),
+            )
+            if i not in set(sandbox.chunks_held(du.id)):
+                continue  # stream rolled back mid-fetch; re-check state
+            data = sandbox.fetch_du_chunk(du.id, i)
+            yield i, data
+            if tm is not None:
+                tm.pins.advance_frontier(du.id, self.cu.id, i + 1)
+            i += 1
 
 
 class PilotAgent:
@@ -339,6 +554,7 @@ class PilotAgent:
         store, pilot, ctx = self.ctx.store, self.pilot, self.ctx
         desc = cu.description
         tm = ctx.tier_manager
+        cu_ctx: Optional[CUContext] = None
         try:
             with self._lock:
                 self._running[cu.id] = time.monotonic()
@@ -389,6 +605,11 @@ class PilotAgent:
             fn = FUNCTIONS.resolve(desc.executable)
             cu_ctx = CUContext(cu, pilot, ctx)
             result = fn(cu_ctx, *desc.args, **desc.kwargs)
+            if cu_ctx.lost_stream():
+                # a live foreign attempt owns one of our output streams —
+                # its chunks are already published; decline the win and let
+                # that attempt complete (exactly-once for streamed bytes)
+                return
             ctx.sleep_sim(desc.sim_compute_s)
             cu.timings.sim_compute_s = desc.sim_compute_s
             cu.timings.run_end = time.monotonic()
@@ -429,8 +650,14 @@ class PilotAgent:
             for du_id in desc.output_data:
                 du: DataUnit = ctx.lookup(du_id)
                 if not pilot.sandbox.has_du(du.id):
+                    # streaming DUs only pay for the not-yet-flushed tail
+                    # here (put_du skips chunks the sandbox already holds)
                     ctx.transfer_service.ingest(du, pilot.sandbox)
                 du.seal()
+                if du.streaming:
+                    # end-of-stream: the writer claim has served its
+                    # purpose (the seal froze the content)
+                    store.hdel(f"du:{du.id}", "stream_writer")
             store.hset(f"cu:{cu.id}", "state", CUState.DONE)
             store.hset(
                 f"cu:{cu.id}",
@@ -455,6 +682,14 @@ class PilotAgent:
                 + 1
             )
             store.hset(f"cu:{cu.id}", "attempts", cu.attempts)
+            if cu_ctx is not None:
+                # a failed attempt must leave ZERO published chunks behind:
+                # roll back any streaming output this attempt was writing
+                # before the retry (or the terminal failure) proceeds
+                try:
+                    cu_ctx.abort_stream()
+                except Exception:
+                    pass
             if cu.attempts <= desc.max_retries and not self._dead.is_set():
                 # retry with backoff via the global queue (the failed
                 # attempt's buffered output writes were discarded, so the

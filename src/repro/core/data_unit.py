@@ -35,6 +35,7 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
+import math
 import threading
 import zlib
 from typing import Dict, Iterable, List, Optional, Tuple
@@ -97,6 +98,17 @@ class DataUnitDescription:
     #: the ReplicaManager re-replicates (chunk-striped, failure-domain-
     #: aware) whenever pilot churn drops holdings below this
     replication_factor: int = 1
+    #: streaming mode: the producer publishes chunks incrementally (ordered
+    #: ``published`` prefix events on the store stream) and consumers may be
+    #: released on a chunk *prefix* instead of the seal
+    streaming: bool = False
+    #: readiness threshold for streaming consumers: release waiters once
+    #: this many chunks are published (``first_k_chunks`` mode)
+    ready_chunks: int = 1
+    #: alternative threshold as a fraction of the expected chunk count
+    #: (derived from ``size_hint``/``chunk_size``); overrides ``ready_chunks``
+    #: when set and a size hint is available
+    ready_fraction: Optional[float] = None
 
     def to_json(self) -> Dict:
         return {
@@ -106,7 +118,18 @@ class DataUnitDescription:
             "size_hint": self.size_hint,
             "chunk_size": self.chunk_size,
             "replication_factor": self.replication_factor,
+            "streaming": self.streaming,
+            "ready_chunks": self.ready_chunks,
+            "ready_fraction": self.ready_fraction,
         }
+
+    def resolved_ready_chunks(self) -> int:
+        """The readiness threshold in whole chunks (``ready_fraction`` is
+        resolved against the expected chunk count from ``size_hint``)."""
+        if self.ready_fraction is not None and self.size_hint > 0:
+            expected = max(1, math.ceil(self.size_hint / self.chunk_size))
+            return max(1, math.ceil(self.ready_fraction * expected))
+        return max(1, int(self.ready_chunks))
 
 
 class DataUnit:
@@ -131,6 +154,14 @@ class DataUnit:
         self._checksums: Dict[str, int] = {
             k: zlib.crc32(v) for k, v in self._files.items()
         }
+        #: streaming flag is immutable for the DU's lifetime — cache it so
+        #: the hot chunking paths never round-trip through the store
+        self._streaming = bool(description.streaming)
+        #: canonical stream order.  Sealed-at-once DUs use sorted-relpath
+        #: order (deterministic regardless of insertion order); streaming
+        #: DUs use *append* order — chunk ``i`` must be final the moment it
+        #: is published, which sorted order cannot guarantee.
+        self._file_order: List[str] = sorted(self._files)
         #: chunk table is recomputed lazily after mutations (adding N files
         #: would otherwise re-chunk the whole stream N times)
         self._chunks: List[ChunkInfo] = []
@@ -164,6 +195,11 @@ class DataUnit:
                 )
                 self._manifest = dict(prior.get("manifest", {}))
                 self._checksums = dict(prior.get("checksums", {}))
+                self._streaming = bool(prior.get("streaming", False))
+                description.streaming = self._streaming
+                self._file_order = list(
+                    prior.get("file_order", None) or sorted(self._manifest)
+                )
                 self._chunks = [
                     ChunkInfo(index=i, size=s, checksum=c)
                     for i, (s, c) in enumerate(prior.get("chunks", []))
@@ -183,6 +219,14 @@ class DataUnit:
             f"du:{self.id}", "replication_factor",
             description.replication_factor,
         )
+        if self._streaming:
+            store.hset(f"du:{self.id}", "streaming", True)
+            store.hset(f"du:{self.id}", "published", 0)
+            store.hset(
+                f"du:{self.id}", "ready_chunks",
+                description.resolved_ready_chunks(),
+            )
+            store.hset(f"du:{self.id}", "file_order", list(self._file_order))
         self._ensure_chunks()
 
     # ------------------------------------------------------------- identity
@@ -234,13 +278,21 @@ class DataUnit:
         return self._checksums[relpath]
 
     # ------------------------------------------------------------- chunking
+    def _order(self) -> List[str]:
+        """Relpaths in canonical stream order: append order for streaming
+        DUs (published chunk prefixes must stay byte-stable), sorted
+        otherwise."""
+        if self._streaming:
+            return list(self._file_order)
+        return sorted(self._manifest)
+
     def _compute_file_ranges(self) -> None:
         """(Re)derive per-file byte ranges + the bisection index from the
         manifest (called under the lock or during construction)."""
         ranges: Dict[str, Tuple[int, int]] = {}
         offsets: List[Tuple[int, str]] = []
         off = 0
-        for rel in sorted(self._manifest):
+        for rel in self._order():
             n = self._manifest[rel]
             ranges[rel] = (off, off + n)
             offsets.append((off, rel))
@@ -259,7 +311,7 @@ class DataUnit:
             self._compute_file_ranges()
             chunks: List[ChunkInfo] = []
             stream = b"".join(
-                self._files.get(rel, b"") for rel in sorted(self._manifest)
+                self._files.get(rel, b"") for rel in self._order()
             )
             for i in range(0, len(stream), csize):
                 piece = stream[i : i + csize]
@@ -351,7 +403,13 @@ class DataUnit:
         """Register chunks held by ``pd_id``; promotes the PD into
         ``locations`` once it covers every chunk.  A first physical replica
         (even partial) seals the DU — and the seal is written to the store
-        so every client observes it."""
+        so every client observes it.
+
+        Streaming DUs are the exception: chunk registrations arrive *while
+        the producer is still writing*, so they must neither seal the DU
+        nor promote a momentarily-complete holder to ``locations``/Ready
+        (the chunk table is still growing — "complete" is not final until
+        the producer calls :meth:`seal`)."""
         self._ensure_chunks()
         with self._lock:
             held = set(self._store.hget(f"du:{self.id}:chunks", pd_id, []))
@@ -360,13 +418,15 @@ class DataUnit:
             self._store.hset(
                 f"du:{self.id}:chunks", pd_id, sorted(held)
             )
-            if len(held) >= len(self._chunks):
+            live_stream = self._streaming and not self.sealed
+            if len(held) >= len(self._chunks) and not live_stream:
                 locs = self.locations
                 if pd_id not in locs:
                     locs.append(pd_id)
                     self._store.hset(f"du:{self.id}", "locations", locs)
                 self._set_state(DUState.READY)
-            self.seal()
+            if not live_stream:
+                self.seal()
 
     def _add_location(self, pd_id: str) -> None:
         """Register a full replica at ``pd_id`` (all chunks at once)."""
@@ -429,6 +489,10 @@ class DataUnit:
             for pd_id in list(self._store.hgetall(f"du:{self.id}:chunks")):
                 self._store.hdel(f"du:{self.id}:chunks", pd_id)
             self._store.hset(f"du:{self.id}", "sealed", False)
+            if self._streaming:
+                # the re-run streams from scratch; a stale published prefix
+                # would release prefix-mode consumers against zero holders
+                self._store.hset(f"du:{self.id}", "published", 0)
             self._store.hset(f"du:{self.id}", "state", DUState.RECOVERING)
 
     # ----------------------------------------------------------- mutation
@@ -442,24 +506,133 @@ class DataUnit:
                 )
             if relpath.startswith("/") or ".." in relpath.split("/"):
                 raise ValueError(f"bad DU-relative path {relpath!r}")
+            if relpath not in self._manifest:
+                self._file_order.append(relpath)
             self._files[relpath] = bytes(data)
             self._manifest[relpath] = len(data)
             self._checksums[relpath] = zlib.crc32(data)
             self._chunks_dirty = True
             self._store.hset(f"du:{self.id}", "manifest", dict(self._manifest))
             self._store.hset(f"du:{self.id}", "checksums", dict(self._checksums))
+            if self._streaming:
+                self._store.hset(
+                    f"du:{self.id}", "file_order", list(self._file_order)
+                )
 
     def seal(self) -> None:
         """Freeze the DU.  Persisted to the coordination store so remote
-        clients attached to the same store observe immutability too."""
+        clients attached to the same store observe immutability too.
+
+        For a streaming DU the seal is the producer's end-of-stream marker:
+        it publishes the final chunk count (the trailing partial chunk only
+        becomes visible here) and retro-promotes any holder that already
+        covers every chunk — promotions that were deliberately withheld
+        while the chunk table was still growing."""
         with self._lock:
             self._ensure_chunks()
             if not self._store.hget(f"du:{self.id}", "sealed", False):
                 self._store.hset(f"du:{self.id}", "sealed", True)
+                if self._streaming:
+                    self._promote_full_holders()
+                    self.publish_prefix(len(self._chunks))
 
     @property
     def sealed(self) -> bool:
         return bool(self._store.hget(f"du:{self.id}", "sealed", False))
+
+    # ----------------------------------------------------------- streaming
+    @property
+    def streaming(self) -> bool:
+        """True if this DU publishes chunks incrementally (stream mode)."""
+        return self._streaming
+
+    @property
+    def published(self) -> int:
+        """Length of the published chunk prefix (monotone while one
+        producer attempt streams; reset only by :meth:`reset_stream`)."""
+        return int(self._store.hget(f"du:{self.id}", "published", 0) or 0)
+
+    @property
+    def stream_threshold(self) -> int:
+        """Published-chunk count at which prefix-mode consumers release."""
+        return int(self._store.hget(f"du:{self.id}", "ready_chunks", 1) or 1)
+
+    def available_chunks(self) -> int:
+        """Chunks a consumer may read *now*: the published prefix while the
+        stream is live, every chunk once sealed."""
+        if not self._streaming or self.sealed:
+            return self.n_chunks
+        return min(self.published, self.n_chunks)
+
+    def publishable_chunks(self) -> int:
+        """Chunks whose bytes are final and may be published: all of them
+        once sealed, only the *full* chunks mid-stream (the trailing
+        partial chunk may still grow as files are appended)."""
+        self._ensure_chunks()
+        with self._lock:
+            if self.sealed:
+                return len(self._chunks)
+            return self.size // self.description.chunk_size
+
+    def publish_prefix(self, upto: int) -> int:
+        """Advance the published prefix to ``upto`` chunks (monotone; the
+        ``published`` hset is the ordered chunk-availability event consumers
+        and the DependencyTracker react to).  Returns the new prefix."""
+        if not self._streaming:
+            raise RuntimeError(f"{self.url} is not a streaming DU")
+        with self._lock:
+            upto = min(int(upto), self.publishable_chunks())
+            cur = self.published
+            if upto > cur:
+                self._store.hset(f"du:{self.id}", "published", upto)
+                return upto
+            return cur
+
+    def _promote_full_holders(self) -> None:
+        """Promote every holder covering the (now final) chunk table into
+        ``locations`` and mark the DU Ready — called under the lock at
+        stream seal."""
+        n = len(self._chunks)
+        locs = self.locations
+        changed = False
+        for pd_id, idxs in self.chunk_holders().items():
+            if len(set(idxs)) >= n and pd_id not in locs:
+                locs.append(pd_id)
+                changed = True
+        if changed or (locs and self.state != DUState.READY):
+            self._loc_version += 1
+            self._store.hset(f"du:{self.id}", "locations", locs)
+        if locs:
+            self._set_state(DUState.READY)
+
+    def reset_stream(self) -> None:
+        """Roll a *failed producer attempt's* partial stream back to zero
+        so the retry re-streams from a clean slate (exactly-once: a losing
+        attempt must leave no published chunks behind).
+
+        Clears the logical content (manifest/checksums/file order/chunk
+        table) and the published prefix.  Holder registrations for stale
+        chunk indices are dropped with a loc-version bump; like lineage
+        recomputation, this assumes the producer is deterministic."""
+        if not self._streaming:
+            raise RuntimeError(f"{self.url} is not a streaming DU")
+        with self._lock:
+            if self.sealed:
+                raise RuntimeError(f"{self.url} is sealed; cannot reset")
+            self._files = {}
+            self._manifest = {}
+            self._checksums = {}
+            self._file_order = []
+            self._chunks = []
+            self._chunks_dirty = True
+            self._loc_version += 1
+            self._store.hset(f"du:{self.id}", "manifest", {})
+            self._store.hset(f"du:{self.id}", "checksums", {})
+            self._store.hset(f"du:{self.id}", "file_order", [])
+            self._store.hset(f"du:{self.id}", "chunks", [])
+            for pd_id in list(self._store.hgetall(f"du:{self.id}:chunks")):
+                self._store.hdel(f"du:{self.id}:chunks", pd_id)
+            self._store.hset(f"du:{self.id}", "published", 0)
 
     # -------------------------------------------------------- content access
     def read(self, relpath: str) -> bytes:

@@ -62,16 +62,24 @@ class FutureDispatcher:
         self._lock = threading.Lock()
         #: "cu:<id>"/"du:<id>" -> [(future, callback)] not yet fired
         self._pending: dict = {}
+        #: "du:<id>" -> [(future, callback)] fired on EVERY publish event
+        #: (streaming chunk-prefix progress), dropped once the future is done
+        self._progress: dict = {}
         self._pump = StoreEventPump(
             store,
-            handler=lambda ev: self._fire(ev.key),
+            handler=self._handle,
             accept=lambda ev: (
                 ev.op == "hset"
-                and ev.field in ("state", "sealed")
+                and ev.field in ("state", "sealed", "published")
                 and (ev.key.startswith("cu:") or ev.key.startswith("du:"))
             ),
             name="future-dispatcher",
         )
+
+    def _handle(self, ev: StoreEvent) -> None:
+        if ev.field == "published":
+            self._fire_progress(ev.key, ev.value)
+        self._fire(ev.key)
 
     def _fire(self, key: str) -> None:
         with self._lock:
@@ -92,6 +100,21 @@ class FutureDispatcher:
             except Exception:
                 pass  # a broken callback must not kill the dispatcher
 
+    def _fire_progress(self, key: str, value: Any) -> None:
+        with self._lock:
+            entries = list(self._progress.get(key, ()))
+            if entries:
+                live = [e for e in entries if not e[0].done()]
+                if live:
+                    self._progress[key] = live
+                else:
+                    self._progress.pop(key, None)
+        for future, callback in entries:
+            try:
+                callback(future, int(value or 0))
+            except Exception:
+                pass
+
     def register(self, key: str, future: Any, callback: Callable) -> None:
         if future.done():
             callback(future)
@@ -103,6 +126,14 @@ class FutureDispatcher:
         self._pump.inject(
             StoreEvent(seq=-1, op="hset", key=key, field="state", value=None)
         )
+
+    def register_progress(
+        self, key: str, future: Any, callback: Callable
+    ) -> None:
+        """Fire ``callback(future, published)`` on every subsequent chunk-
+        prefix publish event for ``key`` until the future settles."""
+        with self._lock:
+            self._progress.setdefault(key, []).append((future, callback))
 
     def stop(self) -> None:
         self._pump.stop()
@@ -169,6 +200,59 @@ class DUFuture:
         future is NOT done; ``result()`` keeps waiting and resolves when
         the re-run re-seals the DU — or raises if recovery fails."""
         return self.state == DUState.RECOVERING
+
+    # ----------------------------------------------------------- streaming
+    @property
+    def streaming(self) -> bool:
+        return self.du.streaming
+
+    @property
+    def published(self) -> int:
+        """Published chunk-prefix length (0 for non-streaming DUs until
+        they seal)."""
+        return self.du.published if self.du.streaming else (
+            self.du.n_chunks if self.du.sealed else 0
+        )
+
+    def available_chunks(self) -> int:
+        return self.du.available_chunks()
+
+    def wait_prefix(self, n: int, timeout: float = 30.0) -> int:
+        """Block until at least ``n`` chunks of this streaming DU are
+        published (or the DU settles); returns the published count.
+
+        Raises :class:`DataUnitFailedError` if the DU fails first and
+        :class:`FutureTimeoutError` on deadline."""
+        self._store.wait_field(
+            f"du:{self.id}",
+            "published",
+            lambda v: int(v or 0) >= n or self.done(),
+            timeout=timeout,
+            default=0,
+        )
+        if self.state in (DUState.FAILED, DUState.DELETED):
+            raise DataUnitFailedError(
+                self.id, f"{self.url} failed: {self.error or self.state}"
+            )
+        published = self.published
+        if published < n and not self.done():
+            raise FutureTimeoutError(
+                f"{self.url}: prefix {n} not published within {timeout}s "
+                f"(published={published})"
+            )
+        return published
+
+    def add_prefix_callback(
+        self, fn: Callable[["DUFuture", int], None]
+    ) -> None:
+        """Invoke ``fn(future, published)`` on every chunk-prefix publish
+        event until the DU settles (streaming progress observation)."""
+        if self._dispatcher is None:
+            raise RuntimeError(
+                "add_prefix_callback needs a dispatcher — create this "
+                "future through a Session"
+            )
+        self._dispatcher.register_progress(f"du:{self.id}", self, fn)
 
     # ------------------------------------------------------------- futures
     def done(self) -> bool:

@@ -171,15 +171,37 @@ class PilotData:
             return sorted(self._dus)
 
     def has_du(self, du_id: str) -> bool:
-        """True iff this PD holds a FULL replica (every chunk) of the DU."""
+        """True iff this PD holds a FULL replica (every chunk) of the DU.
+
+        For a streaming DU the accounting snapshot (``_du_total`` at last
+        write) can lag the growing chunk table, so the live DU handle is
+        consulted instead — a holder that covered the stream a moment ago
+        is not "full" once the producer appends more."""
         with self._lock:
             if du_id not in self._du_chunks:
                 return False
-            return len(self._du_chunks[du_id]) >= self._du_total.get(du_id, 0)
+            held = len(self._du_chunks[du_id])
+            total = self._du_total.get(du_id, 0)
+            du = self._du_objs.get(du_id)
+        if du is None:
+            du = self.ctx.objects.get(du_id)
+        if du is not None and du.streaming:
+            total = du.n_chunks
+        return held >= total
 
     def chunks_held(self, du_id: str) -> List[int]:
         with self._lock:
             return sorted(self._du_chunks.get(du_id, ()))
+
+    def fetch_du_chunk(self, du_id: str, index: int) -> bytes:
+        """Raw bytes of one locally-held chunk (streaming consumers read
+        chunkwise as the producer publishes)."""
+        with self._lock:
+            if index not in self._du_chunks.get(du_id, ()):
+                raise KeyError(
+                    f"{self.url} holds no chunk {index} of du://{du_id}"
+                )
+        return self.backend.get(chunk_key(du_id, index))
 
     def missing_chunks(self, du: DataUnit) -> List[int]:
         """Chunk indices of ``du`` this PD does not hold yet."""

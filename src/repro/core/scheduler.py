@@ -41,7 +41,7 @@ import dataclasses
 import queue
 import threading
 from concurrent.futures import ThreadPoolExecutor
-from typing import Any, Deque, List, Optional
+from typing import Any, Deque, Dict, List, Optional, Tuple
 
 from .compute_unit import CUState
 from .coordination import StoreEvent
@@ -53,7 +53,9 @@ class SchedulerEvent:
     """One reactor-relevant occurrence, in store-sequence order."""
 
     seq: int
-    kind: str  # "cu-submitted" | "cu-state" | "du-state" | "pilot-state"
+    #: "cu-submitted" | "cu-state" | "du-state" | "du-published" |
+    #: "pilot-state"
+    kind: str
     subject: str  # cu/du/pilot id
     value: Any  # new state (or queue item for submissions)
 
@@ -95,6 +97,11 @@ class AsyncScheduler:
             if stage_workers > 0
             else None
         )
+        #: du_id -> [(cu, pilot)] consumers whose streaming input is still
+        #: being produced: every publish event re-claims + prefetches the
+        #: newly available chunks toward the consumer's sandbox
+        self._stream_watch: Dict[str, List[Tuple[Any, Any]]] = {}
+        self._watch_lock = threading.Lock()
         self._token = self.ctx.store.subscribe(self._on_store_event)
         # Claim staging BEFORE the CU becomes visible on a pilot queue:
         # agents then dedup onto the prefetch instead of re-staging.
@@ -126,6 +133,19 @@ class AsyncScheduler:
                         )
                     )
                     break
+        elif (
+            ev.op == "hset"
+            and ev.field == "published"
+            and ev.key.startswith("du:")
+            and ev.key.count(":") == 1
+        ):
+            # a producer published a chunk prefix: pipeline the new chunks
+            # toward every watching consumer's sandbox
+            self._queue.put(
+                SchedulerEvent(
+                    ev.seq, "du-published", ev.key.split(":", 1)[1], ev.value
+                )
+            )
 
     # -------------------------------------------------------------- reactor
     def _run(self) -> None:
@@ -165,6 +185,8 @@ class AsyncScheduler:
             if cu.state != CUState.PENDING:
                 return
             self.cds.place(cu)  # prefetch rides the pre-push hook
+        elif ev.kind == "du-published":
+            self._on_published(ev.subject)
         elif ev.kind == "cu-state" and ev.value in CUState.TERMINAL:
             self.cds.recheck_delayed()
         elif ev.kind == "pilot-state" and ev.value in (
@@ -180,11 +202,22 @@ class AsyncScheduler:
         """Pre-push hook (pipeline entry): claim the missing input chunks
         NOW — before the CU is visible to agents — then move the bytes on
         the staging pool so they overlap whatever the pilot is executing.
-        Chunks the sandbox already holds are never claimed or re-moved."""
+        Chunks the sandbox already holds are never claimed or re-moved.
+
+        Streaming inputs still mid-production are additionally *watched*:
+        each subsequent publish event re-claims the newly available chunks
+        and stages them too (chunk-granular prefetch re-planning)."""
         if not cu.description.input_data:
             return
         ts = self.ctx.transfer_service
-        claimed = ts.claim_bulk(ts.lookup_dus(cu), pilot.sandbox)
+        dus = ts.lookup_dus(cu)
+        with self._watch_lock:
+            for du in dus:
+                if du.streaming and not du.sealed:
+                    self._stream_watch.setdefault(du.id, []).append(
+                        (cu, pilot)
+                    )
+        claimed = ts.claim_bulk(dus, pilot.sandbox)
         if not claimed:
             return
         if self._pool is not None:
@@ -194,6 +227,40 @@ class AsyncScheduler:
             except RuntimeError:
                 pass  # pool shut down mid-flight: fall back to inline
         ts.prefetch_inputs(cu, pilot, claimed=claimed)
+
+    def _on_published(self, du_id: str) -> None:
+        """A streaming producer advanced its published prefix: stage the
+        new chunks toward every live watching consumer's sandbox.  The DU
+        sealing (its final publish event carries the full chunk count)
+        retires the watch."""
+        try:
+            du = self.ctx.lookup(du_id)
+        except KeyError:
+            with self._watch_lock:
+                self._stream_watch.pop(du_id, None)
+            return
+        with self._watch_lock:
+            pairs = self._stream_watch.get(du_id, [])
+            keep = [
+                (cu, p) for cu, p in pairs
+                if cu.state not in CUState.TERMINAL
+            ]
+            if du.sealed or not keep:
+                self._stream_watch.pop(du_id, None)
+            else:
+                self._stream_watch[du_id] = keep
+        ts = self.ctx.transfer_service
+        for cu, pilot in keep:
+            claimed = ts.claim_bulk([du], pilot.sandbox)
+            if not claimed:
+                continue
+            if self._pool is not None:
+                try:
+                    self._pool.submit(ts.prefetch_inputs, cu, pilot, claimed)
+                    continue
+                except RuntimeError:
+                    pass
+            ts.prefetch_inputs(cu, pilot, claimed=claimed)
 
     # -------------------------------------------------------------- control
     def decisions(self) -> List[dict]:

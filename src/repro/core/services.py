@@ -119,10 +119,10 @@ class DependencyTracker:
             self.ctx.store,
             handler=self._process,
             prefix="du:",
-            # "du:<id>" state/seal transitions only, not "du:<id>:chunks"
+            # "du:<id>" state/seal/publish transitions, not "du:<id>:chunks"
             accept=lambda ev: (
                 ev.op == "hset"
-                and ev.field in ("state", "sealed")
+                and ev.field in ("state", "sealed", "published")
                 and ev.key.count(":") == 1
             ),
             name="du-readiness-gate",
@@ -132,6 +132,8 @@ class DependencyTracker:
         du_id = ev.key.split(":", 1)[1]
         if ev.field == "sealed" and ev.value:
             self._du_ready(du_id)
+        elif ev.field == "published":
+            self._du_progress(du_id, int(ev.value or 0))
         elif ev.field == "state":
             if ev.value == DUState.READY:
                 self._du_ready(du_id)
@@ -139,6 +141,21 @@ class DependencyTracker:
                 self._du_failed(du_id)
 
     # ------------------------------------------------------------ transitions
+    def _du_progress(self, du_id: str, published: int) -> None:
+        """Streaming readiness mode (``first_k_chunks``): a chunk-prefix
+        publish event satisfies waiters once the published count crosses
+        the DU's ``ready_chunks`` threshold — consumers start on the
+        prefix while the producer is still writing.  Release order still
+        lands on ``cds:incoming`` like every other release, so the
+        sync ≡ async ordering proof in :attr:`release_log` covers prefix
+        releases too."""
+        h = self.ctx.store.hgetall(f"du:{du_id}")
+        if not h.get("streaming"):
+            return
+        threshold = int(h.get("ready_chunks") or 1)
+        if published >= threshold:
+            self._du_ready(du_id)
+
     def _du_ready(self, du_id: str) -> None:
         with self._lock:
             released = []
@@ -207,16 +224,24 @@ class DependencyTracker:
         for du_id in unmet:
             h = store.hgetall(f"du:{du_id}")
             state = h.get("state")
+            published = int(h.get("published") or 0)
             if h.get("sealed"):
                 field, value = "sealed", True
             elif state in (DUState.READY, DUState.FAILED):
                 field, value = "state", state
+            elif h.get("streaming") and published >= int(h.get("ready_chunks") or 1):
+                # the producer already streamed past the threshold before
+                # this consumer registered — close that race too
+                field, value = "published", published
             else:
                 continue
             self._pump.inject(
                 StoreEvent(
-                    seq=-1, op="hset", key=f"du:{du_id}",
-                    field=field, value=value,
+                    seq=-1,
+                    op="hset",
+                    key=f"du:{du_id}",
+                    field=field,
+                    value=value,
                 )
             )
 
@@ -340,9 +365,7 @@ class ComputeDataService:
         for du_id in cu.description.input_data:
             h = store.hgetall(f"du:{du_id}")
             if not h:
-                raise KeyError(
-                    f"{cu.url}: unknown input DU du://{du_id}"
-                )
+                raise KeyError(f"{cu.url}: unknown input DU du://{du_id}")
             state = h.get("state")
             if state == DUState.FAILED:
                 raise ValueError(
@@ -350,6 +373,12 @@ class ComputeDataService:
                     f"{h.get('error') or 'producer failed'}"
                 )
             if h.get("sealed") or state == DUState.READY:
+                continue
+            if h.get("streaming") and int(h.get("published") or 0) >= int(
+                h.get("ready_chunks") or 1
+            ):
+                # streaming readiness: enough of a chunk prefix is already
+                # published for this consumer to start
                 continue
             if h.get("producer") or h.get("placeholder"):
                 unmet.add(du_id)
@@ -446,9 +475,7 @@ class ComputeDataService:
             pds = list(self._pds)
         need = max(desc.size_hint, sum(map(len, desc.files.values())))
         fits = [pd for pd in pds if pd.free_bytes >= need]
-        candidates = [
-            pd for pd in fits if match_affinity(desc.affinity, pd.affinity)
-        ]
+        candidates = [pd for pd in fits if match_affinity(desc.affinity, pd.affinity)]
         if not candidates:
             candidates = fits  # affinity miss: any PD with space
         if not candidates:
@@ -460,9 +487,7 @@ class ComputeDataService:
     def _has_free_slot(self, pilot: PilotCompute) -> bool:
         depth = self.ctx.store.qlen(pilot.queue_name)
         running = len(pilot.running_cus())
-        return pilot.state == PilotState.ACTIVE and (
-            running + depth < pilot.slots
-        )
+        return pilot.state == PilotState.ACTIVE and (running + depth < pilot.slots)
 
     def place(self, cu: ComputeUnit) -> Optional[PilotCompute]:
         """One pass of the §5 placement algorithm for one CU.
@@ -487,9 +512,7 @@ class ComputeDataService:
             pilots = list(self._pilots)
         ranked = self.strategy.rank(
             cu,
-            self.engine.candidates(
-                cu, pilots, tier_bw=self.strategy.uses_tier_bw
-            ),
+            self.engine.candidates(cu, pilots, tier_bw=self.strategy.uses_tier_bw),
         )
         if not ranked:
             self.ctx.store.push(GLOBAL_QUEUE, {"cu": cu.id, "dup": False})
@@ -546,9 +569,7 @@ class ComputeDataService:
             # input DUs into the pilot sandbox before the CU is queued.
             for du_id in cu.description.input_data:
                 du: DataUnit = self.ctx.lookup(du_id)
-                self.ctx.transfer_service.stage_in(
-                    du, pilot.sandbox, pilot.affinity
-                )
+                self.ctx.transfer_service.stage_in(du, pilot.sandbox, pilot.affinity)
         item = {"cu": cu.id, "dup": False}
         self.ctx.store.push(pilot.queue_name, item)
         # Close the check-then-push race against pilot death: fault

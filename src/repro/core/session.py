@@ -170,6 +170,24 @@ class Session:
         du = self.cds.create_data_unit(desc)
         return DUFuture(du, self.store, dispatcher=self._dispatcher)
 
+    def create_streaming_du(
+        self, desc: Optional[DataUnitDescription] = None, **kw: Any
+    ) -> DUFuture:
+        """Create an empty *streaming* placeholder DU: the producer CU
+        publishes chunk prefixes incrementally (``CUContext.flush_output``)
+        and consumers are released the moment ``ready_chunks`` chunks (or
+        ``ready_fraction`` of the expected total, given a ``size_hint``)
+        are published — before the producer seals."""
+        if desc is None:
+            kw.setdefault("streaming", True)
+            desc = DataUnitDescription(**kw)
+        elif kw:
+            raise ValueError("pass a description or kwargs, not both")
+        if not desc.streaming:
+            raise ValueError("create_streaming_du needs streaming=True")
+        du = self.cds.create_data_unit(desc)
+        return DUFuture(du, self.store, dispatcher=self._dispatcher)
+
     # -------------------------------------------------------------- compute
     def _resolve_input(self, ref: DataRef) -> str:
         if isinstance(ref, DataUnitDescription):

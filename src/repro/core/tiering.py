@@ -108,6 +108,10 @@ class PinRegistry:
         self.ctx = ctx
         self._lock = threading.Lock()
         self._owners: Dict[str, Set[str]] = {}  # du_id -> owner cu_ids
+        #: du_id -> owner cu_id -> consumed chunk prefix (streaming reads):
+        #: chunks below EVERY live owner's frontier are consumed and may be
+        #: evicted even while the DU stays pinned
+        self._frontiers: Dict[str, Dict[str, int]] = {}
 
     def pin(self, du_id: str, owner: str) -> None:
         with self._lock:
@@ -124,6 +128,11 @@ class PinRegistry:
                 owners.discard(owner)
                 if not owners:
                     del self._owners[du_id]
+            fr = self._frontiers.get(du_id)
+            if fr is not None:
+                fr.pop(owner, None)
+                if not fr:
+                    del self._frontiers[du_id]
 
     def unpin_owner(self, owner: str) -> None:
         with self._lock:
@@ -131,6 +140,39 @@ class PinRegistry:
                 self._owners[du_id].discard(owner)
                 if not self._owners[du_id]:
                     del self._owners[du_id]
+            for du_id in list(self._frontiers):
+                self._frontiers[du_id].pop(owner, None)
+                if not self._frontiers[du_id]:
+                    del self._frontiers[du_id]
+
+    # ------------------------------------------------------ read frontiers
+    def advance_frontier(self, du_id: str, owner: str, upto: int) -> int:
+        """Record that ``owner`` has consumed the first ``upto`` chunks of
+        streaming DU ``du_id``.  Monotone: a frontier never moves backward
+        (max-merge), so eviction decisions based on an earlier reading
+        stay valid.  Returns the owner's (possibly unchanged) frontier."""
+        with self._lock:
+            fr = self._frontiers.setdefault(du_id, {})
+            cur = fr.get(owner, 0)
+            if upto > cur:
+                fr[owner] = upto
+                return upto
+            return cur
+
+    def read_frontier(self, du_id: str) -> int:
+        """The slowest *live* pinning consumer's consumed prefix: chunks
+        below this index are consumed by everyone and evictable.  A live
+        pinning owner with no recorded frontier holds it at 0 (nothing of
+        the stream may be reclaimed for it yet); with no live pinning
+        owners at all there is no frontier constraint (the plain
+        redundancy/replication invariants still apply)."""
+        with self._lock:
+            owners = list(self._owners.get(du_id, ()))
+            fr = dict(self._frontiers.get(du_id, {}))
+        live = [o for o in owners if self._owner_live(o)]
+        if not live:
+            return -1  # unconstrained (no live consumer to starve)
+        return min(fr.get(o, 0) for o in live)
 
     #: owner CU states whose pins bind: a parked consumer's inputs and a
     #: staging/running attempt's inputs must survive; a merely *queued*
@@ -408,8 +450,18 @@ class TierManager:
             du = self._du_handle(pd, du_id)
             if du is None:
                 continue
+            frontier: Optional[int] = None
             if self.pins.pinned(du_id):
-                continue
+                if not du.streaming:
+                    continue
+                # streamed chunks are evictable only PAST the slowest live
+                # consumer's read frontier: consumed prefix chunks may be
+                # reclaimed (that is the backpressure valve), unconsumed
+                # ones never (a released prefix-consumer must not observe
+                # a chunk gap)
+                frontier = self.pins.read_frontier(du_id)
+                if frontier == 0:
+                    continue  # nothing consumed yet: fully protected
             if ts is not None and ts.source_leased(pd.id, du_id):
                 continue
             # local accounting, so transient (register=False) sandbox
@@ -435,6 +487,8 @@ class TierManager:
                 ts.inflight_chunks(du_id, pd.id) if ts is not None else set()
             )
             indices = sorted(i for i in mine - inflight if i in elsewhere)
+            if frontier is not None and frontier >= 0:
+                indices = [i for i in indices if i < frontier]
             if not indices:
                 continue
             chunks = du.chunks

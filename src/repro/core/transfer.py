@@ -93,7 +93,9 @@ class TransferService:
         #: (du_id, dst_pd_id) -> list of (chunk set, Event) claims currently
         #: in flight; the dedup is chunk-granular — a second stager only
         #: fetches chunks nobody else claimed and *waits* for the rest
-        self._inflight: Dict[Tuple[str, str], List[Tuple[Set[int], threading.Event]]] = {}
+        self._inflight: Dict[
+            Tuple[str, str], List[Tuple[Set[int], threading.Event]]
+        ] = {}
         #: replica-resolution caches, keyed on the DU's location version
         #: (bumped on every chunk-holding change, so partial-replica
         #: progress invalidates them too)
@@ -346,6 +348,12 @@ class TransferService:
         nobody fall back to the DU's local buffer (submission-host ingest).
         """
         missing = dst.missing_chunks(du)
+        if du.streaming and not du.sealed:
+            # live stream: only the published prefix is fetchable — an
+            # unpublished chunk must never fall back to the orphan path
+            # (its bytes may still change under the producer's pen)
+            avail = du.available_chunks()
+            missing = [i for i in missing if i < avail]
         if only is not None:
             missing = [i for i in missing if i in only]
         if not missing:
@@ -448,9 +456,7 @@ class TransferService:
                     if g.src is None:
                         dst.put_chunks(du, g.indices, register=register)
                     else:
-                        dst.copy_chunks_from(
-                            du, g.src, g.indices, register=register
-                        )
+                        dst.copy_chunks_from(du, g.src, g.indices, register=register)
                 except (KeyError, KeyNotFound):
                     if _depth >= MAX_REPLANS:
                         raise
@@ -599,9 +605,16 @@ class TransferService:
         sandbox: PilotData,
         location: str,
         use_cache: bool = True,
+        prefix: Optional[int] = None,
     ) -> float:
         """Make ``du`` available to a CU sandbox at ``location``; returns
         simulated staging seconds (0.0 for a logical link).
+
+        For a *live streaming* DU (streaming and not yet sealed) the goal
+        is the published chunk prefix — optionally capped at ``prefix``
+        chunks — rather than the whole DU: the call returns once the
+        sandbox holds that prefix, and the consumer re-calls as the
+        producer publishes more (chunk-granular re-planning).
 
         Only the sandbox's *missing* chunks move, striped in parallel from
         their cheapest current holders (partial replicas included).
@@ -644,7 +657,15 @@ class TransferService:
                 )
             )
             return sim
-        if du.n_chunks == 0:
+        live_stream = du.streaming and not du.sealed
+        target: Optional[Set[int]] = None
+        if live_stream:
+            avail = du.available_chunks()
+            goal = avail if prefix is None else min(prefix, avail)
+            target = set(range(goal))
+            if not target:
+                return 0.0  # nothing published yet; caller waits and retries
+        if du.n_chunks == 0 and not live_stream:
             # empty DU: register the (vacuously full) holding, move nothing
             if not sandbox.has_du(du.id):
                 sandbox.put_du(du)
@@ -656,7 +677,10 @@ class TransferService:
         key = (du.id, sandbox.id)
         total_sim = 0.0
         while True:
-            if sandbox.has_du(du.id):
+            if target is not None:
+                if target <= set(sandbox.chunks_held(du.id)):
+                    return total_sim  # the requested prefix has landed
+            elif sandbox.has_du(du.id):
                 return total_sim  # pilot-level cache hit (data-diffusion reuse)
             pd, linked = self.resolve_access(du, location)
             if linked:
@@ -674,6 +698,8 @@ class TransferService:
                 )
                 return total_sim
             missing = set(sandbox.missing_chunks(du))
+            if target is not None:
+                missing &= target
             with self._lock:
                 claims = self._inflight.setdefault(key, [])
                 theirs: Set[int] = set()
@@ -696,9 +722,12 @@ class TransferService:
                 continue
             try:
                 groups = self.plan_chunk_fetch(du, sandbox, location, only=mine)
-                total_sim += self._fetch_groups(
-                    du, sandbox, groups, location=location
-                )
+                if target is not None and not groups:
+                    # the stream rolled back under us (failed producer
+                    # attempt reset it): hand control back — the consumer
+                    # re-waits on the published prefix and retries
+                    return total_sim
+                total_sim += self._fetch_groups(du, sandbox, groups, location=location)
             finally:
                 with self._lock:
                     entries = self._inflight.get(key, [])
@@ -710,9 +739,7 @@ class TransferService:
             # claims are still landing and we wait for them above
 
     # ---------------------------------------------------- pipelined staging
-    def claim_bulk(
-        self, dus: Sequence[DataUnit], sandbox: PilotData
-    ) -> List[_Claim]:
+    def claim_bulk(self, dus: Sequence[DataUnit], sandbox: PilotData) -> List[_Claim]:
         """Claim the not-yet-in-flight missing chunks of ``dus`` toward
         ``sandbox`` and return the claims.  The async scheduler calls this
         BEFORE the CU is pushed to a pilot queue, so an agent that claims
@@ -724,6 +751,10 @@ class TransferService:
             if du.size <= 0 or sandbox.has_du(du.id):
                 continue
             missing = set(sandbox.missing_chunks(du))
+            if du.streaming and not du.sealed:
+                # prefetch only what the producer has published so far; the
+                # scheduler re-claims as further publish events arrive
+                missing &= set(range(du.available_chunks()))
             if not missing:
                 continue
             key = (du.id, sandbox.id)
@@ -827,9 +858,7 @@ class TransferService:
                             # eviction raced the plan: re-plan this DU's
                             # remainder against current holders below
                             held = set(sandbox.chunks_held(du.id))
-                            raced.append(
-                                (du, {i for i in g.indices if i not in held})
-                            )
+                            raced.append((du, {i for i in g.indices if i not in held}))
                             continue
                         finally:
                             self._unlease_sources(du, [g])
@@ -838,9 +867,7 @@ class TransferService:
                     moved_bytes = sum(g.nbytes for _, g in moved)
                     if moved:
                         if src is None:
-                            sim = self.simulated_ingest_time(
-                                moved_bytes, sandbox
-                            )
+                            sim = self.simulated_ingest_time(moved_bytes, sandbox)
                         else:
                             sim = self.simulated_transfer_time(
                                 moved_bytes, src, sandbox
@@ -872,9 +899,7 @@ class TransferService:
             for du, missing in raced:
                 if not missing:
                     continue
-                replanned = self.plan_chunk_fetch(
-                    du, sandbox, location, only=missing
-                )
+                replanned = self.plan_chunk_fetch(du, sandbox, location, only=missing)
                 # repair fetches sleep themselves (sequentially, after the
                 # batched waves) — keep them out of the parallel-wave max
                 raced_sim += self._fetch_groups(

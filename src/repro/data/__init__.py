@@ -6,12 +6,30 @@ from .pipeline import (
     make_token_shards,
     shard_dus,
 )
+from .shuffle import (
+    RecordAssembler,
+    ShuffleResult,
+    decode_records,
+    encode_record,
+    make_mapper,
+    make_reducer,
+    partition_of,
+    windowed_shuffle,
+)
 
 __all__ = [
     "Prefetcher",
+    "RecordAssembler",
     "ShardReader",
+    "ShuffleResult",
+    "decode_records",
     "decode_tokens",
+    "encode_record",
     "encode_tokens",
+    "make_mapper",
+    "make_reducer",
     "make_token_shards",
+    "partition_of",
     "shard_dus",
+    "windowed_shuffle",
 ]

@@ -1,0 +1,351 @@
+"""Chunk-streaming dataflow: prefix-released consumers, chunk-granular
+stage-in, exactly-once streamed publishes, read-frontier eviction, and
+the windowed shuffle operator.
+
+The invariants under test (ISSUE tentpole):
+
+  * a consumer of a streaming DU is released at ``ready_chunks`` published
+    chunks — before the producer seals — and map/reduce genuinely overlap;
+  * a released prefix-consumer never observes a chunk gap (chunks are
+    registered in the producer's sandbox before the publish event fires);
+  * exactly-once survives streaming: a failed producer attempt leaves zero
+    published chunks behind, a duplicate attempt racing a live stream
+    writer publishes nothing, and a dead writer's claim is stolen with the
+    half-written stream rolled back to zero;
+  * streamed chunks are evictable only below every live consumer's read
+    frontier (the backpressure valve).
+"""
+
+import threading
+import time
+
+import pytest
+
+from repro.core import (
+    ComputeFailedError,
+    CoordinationStore,
+    CUState,
+    DataUnit,
+    DataUnitDescription,
+    FUNCTIONS,
+    PilotData,
+    PilotDataDescription,
+    PilotState,
+    RuntimeContext,
+    Session,
+    TierManager,
+    Topology,
+    TransferService,
+)
+from repro.data import decode_records, windowed_shuffle
+
+SITE_A = "grid:sitea"
+CSIZE = 1024  # streaming chunk size used throughout
+
+
+def _topo() -> Topology:
+    t = Topology()
+    t.register(SITE_A, bandwidth=20e6, latency=0.01)
+    return t
+
+
+@pytest.fixture(params=["sync", "async"])
+def sess(request):
+    with Session(topology=_topo(), scheduler_mode=request.param) as s:
+        yield s
+
+
+def _chunk_producer(tag: str, n_chunks: int, gates=None):
+    """Register a producer that streams ``n_chunks`` one flush at a time,
+    optionally blocking on ``gates[i]`` after publishing chunk i."""
+
+    def producer(cu_ctx):
+        for i in range(n_chunks):
+            cu_ctx.write_output(f"f{i:03d}", bytes([65 + i]) * CSIZE, index=0)
+            assert cu_ctx.flush_output(0)
+            if gates is not None and i in gates:
+                assert gates[i].wait(timeout=30)
+        return n_chunks
+
+    FUNCTIONS.register(tag, producer)
+    return producer
+
+
+# ----------------------------------------------------- prefix release
+def test_consumer_released_at_prefix_before_seal(sess):
+    """The tentpole: the consumer starts (and consumes) while the producer
+    is still mid-stream — sealing happens strictly after the consumer has
+    observed the first chunks."""
+    gate = threading.Event()
+    sealed_at_first_chunk = []
+
+    _chunk_producer("stream-prod-overlap", 4, gates={1: gate})
+
+    def consumer(cu_ctx):
+        du_id = cu_ctx.cu.description.input_data[0]
+        du = cu_ctx.ctx.lookup(du_id)
+        total, order = 0, []
+        for idx, chunk in cu_ctx.stream_input(du_id, window=2):
+            if idx == 0:
+                sealed_at_first_chunk.append(du.sealed)
+                gate.set()  # producer may proceed past chunk 1
+            order.append(idx)
+            total += len(chunk)
+        assert order == sorted(order) and len(order) == len(set(order))
+        return total
+
+    FUNCTIONS.register("stream-cons-overlap", consumer)
+    p = sess.start_pilot(resource_url=f"sim://{SITE_A}", slots=2)
+    p.wait_active()
+    out = sess.create_streaming_du(name="overlap", ready_chunks=2, chunk_size=CSIZE)
+    prod = sess.submit_cu(executable="stream-prod-overlap", output_data=[out])
+    cons = sess.submit_cu(executable="stream-cons-overlap", input_data=[out])
+    assert cons.result(timeout=60) == 4 * CSIZE
+    assert prod.result(timeout=10) == 4
+    assert sealed_at_first_chunk == [False]  # genuine overlap, not seal-gated
+    du = out.result(timeout=10)
+    assert du.sealed and du.n_chunks == 4 and out.published == 4
+
+
+def test_consumer_parks_until_ready_chunks_published(sess):
+    """Readiness threshold: with ready_chunks=2 the consumer stays Waiting
+    after the first publish and is released by the second."""
+    g0, g1 = threading.Event(), threading.Event()
+    _chunk_producer("stream-prod-gate", 3, gates={0: g0, 1: g1})
+    def count_bytes(cu_ctx):
+        du_id = cu_ctx.cu.description.input_data[0]
+        return sum(len(c) for _i, c in cu_ctx.stream_input(du_id))
+
+    FUNCTIONS.register("stream-cons-count", count_bytes)
+    p = sess.start_pilot(resource_url=f"sim://{SITE_A}", slots=2)
+    p.wait_active()
+    out = sess.create_streaming_du(name="gated", ready_chunks=2, chunk_size=CSIZE)
+    sess.submit_cu(executable="stream-prod-gate", output_data=[out])
+    deadline = time.monotonic() + 10
+    while out.published < 1 and time.monotonic() < deadline:
+        time.sleep(0.005)
+    assert out.published == 1  # producer parked on g0 after one publish
+    cons = sess.submit_cu(executable="stream-cons-count", input_data=[out])
+    deadline = time.monotonic() + 5
+    while cons.state != CUState.WAITING and time.monotonic() < deadline:
+        time.sleep(0.005)
+    assert cons.state == CUState.WAITING  # 1 < ready_chunks=2: still parked
+    g0.set()  # second chunk publishes -> threshold met -> release
+    deadline = time.monotonic() + 10
+    while cons.state == CUState.WAITING and time.monotonic() < deadline:
+        time.sleep(0.005)
+    assert cons.state != CUState.WAITING
+    g1.set()
+    assert cons.result(timeout=60) == 3 * CSIZE
+
+
+def test_wait_prefix_and_progress_callbacks(sess):
+    gate = threading.Event()
+    _chunk_producer("stream-prod-prefix", 3, gates={1: gate})
+    p = sess.start_pilot(resource_url=f"sim://{SITE_A}", slots=1)
+    p.wait_active()
+    out = sess.create_streaming_du(name="prefix", ready_chunks=1, chunk_size=CSIZE)
+    progress = []
+    out.add_prefix_callback(lambda fut, n: progress.append(n))
+    cu = sess.submit_cu(executable="stream-prod-prefix", output_data=[out])
+    assert out.wait_prefix(2, timeout=30) >= 2
+    assert not cu.done()  # producer still parked mid-stream
+    gate.set()
+    assert cu.result(timeout=30) == 3
+    assert out.wait_prefix(3, timeout=10) == 3  # satisfied post-seal too
+    deadline = time.monotonic() + 5
+    while (not progress or progress[-1] < 3) and time.monotonic() < deadline:
+        time.sleep(0.01)
+    assert progress == sorted(progress) and progress[-1] == 3
+
+
+def test_ready_fraction_resolves_against_size_hint(sess):
+    out = sess.create_streaming_du(
+        name="frac",
+        ready_fraction=0.5,
+        size_hint=4 * CSIZE,
+        chunk_size=CSIZE,
+    )
+    assert out.du.stream_threshold == 2
+    with pytest.raises(ValueError, match="streaming"):
+        sess.create_streaming_du(name="bad", streaming=False)
+
+
+# ------------------------------------------------------- exactly-once
+def test_failed_attempt_publishes_zero_chunks(sess):
+    """A producer attempt that crashes mid-stream is rolled back: the
+    retry streams from zero and the final DU holds ONLY the winning
+    attempt's bytes."""
+    attempts = []
+
+    def flaky(cu_ctx):
+        attempts.append(1)
+        if len(attempts) == 1:
+            cu_ctx.write_output("bad0", b"B" * CSIZE)
+            cu_ctx.write_output("bad1", b"B" * CSIZE)
+            assert cu_ctx.flush_output(0)  # two chunks published, then...
+            raise IOError("mid-stream crash")
+        for i in range(3):
+            cu_ctx.write_output(f"good{i}", b"G" * CSIZE)
+            assert cu_ctx.flush_output(0)
+        return len(attempts)
+
+    FUNCTIONS.register("stream-flaky", flaky)
+    p = sess.start_pilot(resource_url=f"sim://{SITE_A}", slots=1)
+    p.wait_active()
+    out = sess.create_streaming_du(name="once", ready_chunks=1, chunk_size=CSIZE)
+    cu = sess.submit_cu(executable="stream-flaky", max_retries=2, output_data=[out])
+    assert cu.result(timeout=60) == 2
+    du = out.result(timeout=10)
+    assert du.sealed and du.n_chunks == 3
+    assert set(du.manifest) == {"good0", "good1", "good2"}
+    assert du.read("good0") == b"G" * CSIZE  # no 'B' bytes survived
+    # end-of-stream hygiene: the writer claim is released after the seal
+    assert sess.store.hget(f"du:{du.id}", "stream_writer") is None
+
+
+def test_duplicate_loses_stream_to_live_writer(sess):
+    """A racing duplicate whose output stream is owned by a LIVE foreign
+    attempt must publish nothing and decline the win."""
+    p = sess.start_pilot(resource_url=f"sim://{SITE_A}", slots=1)
+    p.wait_active()
+    out = sess.create_streaming_du(name="contested", ready_chunks=1, chunk_size=CSIZE)
+    foreign = f"cu-foreign@{p.id}#999"  # live pilot: claim is NOT stealable
+    sess.store.hset(f"du:{out.id}", "stream_writer", foreign)
+
+    def dup(cu_ctx):
+        cu_ctx.write_output("mine", b"Z" * CSIZE)
+        assert not cu_ctx.flush_output(0)
+        assert cu_ctx.lost_stream()
+        raise RuntimeError("lost stream to live writer")
+
+    FUNCTIONS.register("stream-dup", dup)
+    cu = sess.submit_cu(executable="stream-dup", max_retries=0, output_data=[out])
+    with pytest.raises(ComputeFailedError, match="lost stream"):
+        cu.result(timeout=30)
+    assert out.du.manifest == {}  # losing attempt published zero chunks
+    assert int(sess.store.hget(f"du:{out.id}", "published") or 0) == 0
+    # the foreign claim was left untouched (abort only rolls back OUR claim)
+    assert sess.store.hget(f"du:{out.id}", "stream_writer") == foreign
+
+
+def test_dead_writer_claim_stolen_and_stream_reset(sess):
+    """A writer token whose pilot died is stolen after rolling the
+    half-written stream back — the retry's content fully replaces it."""
+    p = sess.start_pilot(resource_url=f"sim://{SITE_A}", slots=1)
+    p.wait_active()
+    out = sess.create_streaming_du(name="stolen", ready_chunks=1, chunk_size=CSIZE)
+    du = out.du
+    # simulate a crashed producer: dead pilot's claim + half-written stream
+    sess.store.hset("pilot:ghost", "state", PilotState.FAILED)
+    sess.store.hset(f"du:{du.id}", "stream_writer", "cu-ghost@ghost#0")
+    du.add_file("old0", b"O" * CSIZE)
+    du.publish_prefix(1)
+    assert du.published == 1
+    _chunk_producer("stream-prod-steal", 2)
+    cu = sess.submit_cu(executable="stream-prod-steal", output_data=[out])
+    assert cu.result(timeout=30) == 2
+    final = out.result(timeout=10)
+    assert final.sealed and final.n_chunks == 2
+    assert set(final.manifest) == {"f000", "f001"}  # 'old0' rolled back
+
+
+# ------------------------------------------------ read-frontier eviction
+def _make_ctx():
+    ctx = RuntimeContext(store=CoordinationStore(), topology=_topo())
+    TransferService(ctx)
+    return ctx
+
+
+def _make_pd(ctx, url, quota=1 << 40):
+    pd = PilotData(
+        PilotDataDescription(service_url=url, affinity=SITE_A, size_quota=quota),
+        ctx,
+    )
+    return ctx.register(pd)
+
+
+def test_streamed_chunks_evictable_only_below_read_frontier():
+    ctx = _make_ctx()
+    tm = TierManager(ctx, auto_promote=False)
+    src = _make_pd(ctx, f"mem://{SITE_A}/src")
+    dst = _make_pd(ctx, f"mem://{SITE_A}/dst")
+    du = ctx.register(
+        DataUnit(
+            DataUnitDescription(name="live-stream", streaming=True, chunk_size=CSIZE),
+            ctx.store,
+        )
+    )
+    du.add_file("x", b"S" * (4 * CSIZE))
+    src.put_chunks(du, [0, 1, 2, 3])
+    du.publish_prefix(4)
+    dst.put_chunks(du, [0, 1, 2, 3])  # consumer-side redundant copies
+    ctx.store.hset("cu:reader", "state", CUState.RUNNING)
+    tm.pins.pin(du.id, "reader")
+    # nothing consumed yet: the pin fully protects the stream
+    assert tm.evictable_victims(dst) == []
+    assert tm.pins.read_frontier(du.id) == 0
+    # consumer read 2 chunks: exactly the consumed prefix becomes evictable
+    tm.pins.advance_frontier(du.id, "reader", 2)
+    victims = tm.evictable_victims(dst)
+    assert [(v.du_id, v.indices) for v in victims] == [(du.id, [0, 1])]
+    # frontier is monotone: a late smaller report never narrows it
+    assert tm.pins.advance_frontier(du.id, "reader", 1) == 2
+    # a second, slower live consumer drags the frontier back down
+    ctx.store.hset("cu:slow", "state", CUState.WAITING)
+    tm.pins.pin(du.id, "slow")
+    assert tm.pins.read_frontier(du.id) == 0
+    assert tm.evictable_victims(dst) == []
+    # slow consumer finishes: its pin stops binding, frontier recovers
+    ctx.store.hset("cu:slow", "state", CUState.DONE)
+    assert tm.pins.read_frontier(du.id) == 2
+    # no live pinning consumer at all: unconstrained (-1)
+    ctx.store.hset("cu:reader", "state", CUState.DONE)
+    assert tm.pins.read_frontier(du.id) == -1
+    tm.stop()
+
+
+# --------------------------------------------------- windowed shuffle
+def test_windowed_shuffle_end_to_end(sess):
+    """Streaming wordcount: reducers decode records incrementally from the
+    chunk stream and every key lands in exactly one partition."""
+    texts = ["a b a c a b", "b c c d a", "d d a b c e"]
+
+    def map_fn(rel, data):
+        for tok in data.decode().split():
+            yield tok, b"1"
+
+    def reduce_fn(key, values):
+        return str(sum(int(v) for v in values)).encode()
+
+    p = sess.start_pilot(resource_url=f"sim://{SITE_A}", slots=4)
+    p.wait_active()
+    parts = [
+        sess.submit_du(name=f"text{i}", files={"t": t.encode()})
+        for i, t in enumerate(texts)
+    ]
+    res = windowed_shuffle(
+        sess,
+        parts,
+        map_fn,
+        reduce_fn,
+        n_reducers=2,
+        window=1,
+        flush_every=2,
+        chunk_size=64,
+    )
+    counts = {}
+    for blob in res.wait(timeout=90):
+        for key, value in decode_records(blob):
+            assert key not in counts  # disjoint partitions
+            counts[key] = int(value)
+    expected = {}
+    for t in texts:
+        for tok in t.split():
+            expected[tok] = expected.get(tok, 0) + 1
+    assert counts == expected
+    # intermediates really streamed: per-reducer DUs, all sealed streaming
+    for mf in res.mappers:
+        assert len(mf.outputs) == 2
+        for of in mf.outputs:
+            assert of.du.streaming and of.result(timeout=10).sealed

@@ -1,0 +1,153 @@
+"""Property tests for the chunk-streaming invariants: published prefixes
+are monotone and gap-free under arbitrary producer action interleavings,
+read frontiers never move backward, and a rolled-back (failed) producer
+attempt leaves zero published chunks behind."""
+
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis")
+
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    CoordinationStore,
+    CoordinationUnavailable,
+    CUState,
+    DataUnit,
+    DataUnitDescription,
+    RuntimeContext,
+    Topology,
+    TransferService,
+)
+from repro.core.tiering import PinRegistry
+
+CSIZE = 64
+
+#: one producer action: append a file of this many bytes (0 allowed), or
+#: attempt to publish up to this absolute prefix (clamping is the DU's job)
+_actions = st.lists(
+    st.one_of(
+        st.tuples(st.just("add"), st.integers(min_value=0, max_value=300)),
+        st.tuples(st.just("publish"), st.integers(min_value=0, max_value=40)),
+    ),
+    min_size=1,
+    max_size=30,
+)
+
+
+def _streaming_du(store=None) -> DataUnit:
+    return DataUnit(
+        DataUnitDescription(name="p", streaming=True, chunk_size=CSIZE),
+        store or CoordinationStore(),
+    )
+
+
+@settings(max_examples=60, deadline=None)
+@given(actions=_actions)
+def test_published_prefix_monotone_and_gap_free(actions):
+    """However adds and publishes interleave, the published prefix (a) never
+    moves backward, (b) never exceeds the number of *complete* chunks whose
+    bytes have actually been appended (no consumer can be released toward a
+    chunk that does not fully exist), and (c) after seal equals n_chunks."""
+    du = _streaming_du()
+    last_published = 0
+    nfile = 0
+    for kind, arg in actions:
+        if kind == "add":
+            du.add_file(f"f{nfile:04d}", b"x" * arg)
+            nfile += 1
+        else:
+            du.publish_prefix(arg)
+        published = du.published
+        assert published >= last_published  # monotone
+        assert published <= du.size // CSIZE  # only fully-written chunks
+        assert du.available_chunks() <= du.n_chunks
+        last_published = published
+    du.seal()
+    assert du.published == du.n_chunks == du.available_chunks()
+
+
+@settings(max_examples=60, deadline=None)
+@given(actions=_actions)
+def test_reset_stream_rolls_back_to_zero(actions):
+    """A failed producer attempt (abort path) publishes nothing durable:
+    after reset the DU is indistinguishable from a fresh stream, and a
+    second attempt streams into it cleanly."""
+    du = _streaming_du()
+    nfile = 0
+    for kind, arg in actions:
+        if kind == "add":
+            du.add_file(f"f{nfile:04d}", b"y" * arg)
+            nfile += 1
+        else:
+            du.publish_prefix(arg)
+    version_before = du.locations_version
+    du.reset_stream()
+    assert du.published == 0 and du.n_chunks == 0 and du.size == 0
+    assert du.manifest == {} and not du.sealed
+    assert du.locations_version > version_before  # stale chunk plans invalidated
+    # the retry writes fresh content into the same DU id
+    du.add_file("retry", b"z" * (2 * CSIZE))
+    du.publish_prefix(2)
+    assert du.published == 2 and du.available_chunks() == 2
+    du.seal()
+    assert du.published == du.n_chunks == 2
+    assert du.read("retry") == b"z" * (2 * CSIZE)
+
+
+_frontier_ops = st.lists(
+    st.tuples(
+        st.sampled_from(["c0", "c1", "c2"]),
+        st.integers(min_value=0, max_value=20),
+    ),
+    min_size=1,
+    max_size=40,
+)
+
+
+@settings(max_examples=80, deadline=None)
+@given(
+    ops=_frontier_ops,
+    owners=st.sets(st.sampled_from(["c0", "c1", "c2"]), min_size=1),
+)
+def test_read_frontier_monotone_under_arbitrary_advances(ops, owners):
+    """With a fixed set of live pinning consumers, the DU-wide read
+    frontier (min over owners) never decreases as advance reports arrive in
+    any order — an eviction decision taken at an earlier reading stays
+    safe."""
+    ctx = RuntimeContext(store=CoordinationStore(), topology=Topology())
+    TransferService(ctx)
+    pins = PinRegistry(ctx)
+    for owner in owners:
+        ctx.store.hset(f"cu:{owner}", "state", CUState.RUNNING)
+        pins.pin("du-s", owner)
+    per_owner = {o: 0 for o in owners}
+    last = pins.read_frontier("du-s")
+    assert last == 0
+    for owner, upto in ops:
+        got = pins.advance_frontier("du-s", owner, upto)
+        if owner in per_owner:
+            per_owner[owner] = max(per_owner[owner], upto)
+            assert got == per_owner[owner]  # per-owner max-merge
+        frontier = pins.read_frontier("du-s")
+        assert frontier >= last  # global monotonicity
+        assert frontier == min(per_owner.values())
+        last = frontier
+    # a consumer finishing only ever makes eviction MORE permissive: the
+    # min over remaining live owners rises, or — when it was the last live
+    # owner — the frontier collapses to the unconstrained sentinel (-1,
+    # semantically +infinity)
+    done = sorted(owners)[0]
+    ctx.store.hset(f"cu:{done}", "state", CUState.DONE)
+    after = pins.read_frontier("du-s")
+    assert after >= last or after == -1
+
+
+def test_publish_on_sealed_nonstream_du_raises():
+    """Guard rails outside the property sweep: prefix APIs reject misuse."""
+    store = CoordinationStore()
+    du = DataUnit(DataUnitDescription(name="plain", files={"a": b"xy" * CSIZE}), store)
+    assert not du.streaming
+    assert du.available_chunks() == du.n_chunks
+    with pytest.raises((RuntimeError, CoordinationUnavailable)):
+        du.reset_stream()
