@@ -20,6 +20,9 @@ can archive a perf trajectory artifact per run.
   bench_tiering      — storage hierarchy: mem-tier caching + quota
                        eviction vs flat re-staging for a working set
                        larger than DRAM; eviction-correctness claim
+  bench_store        — coordination-store write throughput: sharded
+                       (striped locks + queued dispatch + group-commit
+                       WAL) vs legacy single-lock mode, 1 and N writers
   bench_cost_model   — §6.1 calculus vs oracle + replication degree
   bench_roofline     — assignment §Roofline terms from dry-run artifacts
 """
@@ -58,6 +61,7 @@ def main() -> None:
         bench_roofline,
         bench_scale,
         bench_staging,
+        bench_store,
         bench_streaming,
         bench_tiering,
     )
@@ -71,6 +75,7 @@ def main() -> None:
         "streaming": lambda: bench_streaming.run(),
         "faults": lambda: bench_faults.run(quick=args.quick),
         "tiering": lambda: bench_tiering.run(),
+        "store": lambda: bench_store.run(),
         "cost_model": lambda: bench_cost_model.run(),
         "roofline": lambda: bench_roofline.run(),
     }

@@ -337,6 +337,9 @@ class PilotAgent:
         # Own pilot/sandbox state tracked off keyspace notifications, so
         # the claim-loop SUSPECT/FAILED checks are memory reads instead of
         # per-iteration store ops (assignment is atomic; no lock needed).
+        # Events land from the store's dispatcher thread a beat after the
+        # mutation — the claim loop tolerates that: the monitor's CAS plus
+        # the agent's own post-pop state re-check keep decisions correct.
         self._own_state_cache: Optional[str] = ctx.store.hget(
             f"pilot:{pilot.id}", "state"
         )

@@ -243,7 +243,7 @@ class HeartbeatMonitor:
         )
 
     def _on_event(self, ev: StoreEvent) -> None:
-        # store callback (mutating thread): in-memory bookkeeping only
+        # store callback (dispatcher thread): in-memory bookkeeping only
         if ev.op == "hset" and ev.field == "state":
             with self._lock:
                 self._states[ev.key.split(":", 1)[1]] = ev.value
@@ -261,6 +261,10 @@ class HeartbeatMonitor:
     def _tick(self, now: Optional[float] = None) -> None:
         """One liveness pass (exposed for tests/benchmarks)."""
         store = self.ctx.store
+        # events are delivered off the mutating thread: barrier first so
+        # _states reflects every pilot transition already written (the
+        # flush is not a store op — ticks stay O(changes))
+        store.flush_events()
         now = time.monotonic() if now is None else now
         heartbeats = store.hgetall(HEARTBEATS_KEY)  # the single scan
         with self._lock:
@@ -369,7 +373,7 @@ class StragglerMitigator:
         )
 
     def _on_event(self, ev: StoreEvent) -> None:
-        # store callback (mutating thread): in-memory bookkeeping only
+        # store callback (dispatcher thread): in-memory bookkeeping only
         if ev.op != "hset":
             return
         cu_id = ev.key.split(":", 1)[1]
@@ -403,6 +407,9 @@ class StragglerMitigator:
         """One speculative-execution pass (exposed for tests/benchmarks).
         Store ops: O(candidates past threshold), zero on a quiet tick."""
         store = self.ctx.store
+        # barrier: fold in cu: transitions already written but still in
+        # flight on the dispatcher (flush_events is not a store op)
+        store.flush_events()
         with self._lock:
             if len(self._durations) < self.min_samples:
                 return

@@ -12,7 +12,8 @@ Completion is event-driven end to end: blocking waits ride
 ``CoordinationStore.wait_field`` (keyspace notifications, no polling) and
 callbacks are fired by a per-session :class:`FutureDispatcher` thread that
 consumes the same store event stream — callbacks never run on the store's
-mutating thread, so they may block or re-enter the API freely.
+dispatcher thread (or any store lock), so they may block or re-enter the
+API freely.
 """
 
 from __future__ import annotations
@@ -53,8 +54,9 @@ class FutureDispatcher:
     """Runs ``add_done_callback`` callbacks off the store's event stream.
 
     A :class:`StoreEventPump` drains the subscription onto a dedicated
-    thread, so user callbacks run outside the store lock and may block or
-    re-enter the API freely.
+    thread, so user callbacks run off the store's dispatcher (which must
+    stay fast for every other subscriber) and may block or re-enter the
+    API freely.
     """
 
     def __init__(self, store: CoordinationStore):

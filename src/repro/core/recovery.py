@@ -67,7 +67,8 @@ class ReplicaManager:
     """Keeps every sealed DU at its declared ``replication_factor``.
 
     Subscribes to ``du:`` keyspace notifications (location/holding
-    changes) and, on the pump thread, re-replicates any sealed DU whose
+    changes, delivered in store ``seq`` order via the out-of-lock
+    dispatcher) and, on the pump thread, re-replicates any sealed DU whose
     live full-replica count fell below its factor — chunk-striped from all
     remaining holders (partial replicas included) via
     ``TransferService.heal_replica``.  Target selection is failure-domain

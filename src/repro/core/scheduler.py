@@ -115,7 +115,8 @@ class AsyncScheduler:
 
     # ---------------------------------------------------------- event intake
     def _on_store_event(self, ev: StoreEvent) -> None:
-        """Store callback (mutating thread): filter + enqueue, nothing else."""
+        """Store callback (dispatcher thread): filter + enqueue, nothing
+        else — events arrive in seq order, off the mutating thread."""
         if ev.op == "push" and ev.key == "cds:incoming":
             self._queue.put(
                 SchedulerEvent(ev.seq, "cu-submitted", str(ev.value), ev.value)
@@ -155,9 +156,16 @@ class AsyncScheduler:
     def step(self, timeout: float = 0.0) -> bool:
         """Process one pending event (or time out re-checking delayed CUs).
         Returns True if an event was handled — the manual-stepping hook the
-        determinism tests drive."""
+        determinism tests drive.  With ``timeout=0`` an empty queue first
+        drains the store's out-of-lock dispatcher (``flush_events``), so
+        manual stepping observes every mutation already issued."""
         try:
-            ev = self._queue.get(timeout=timeout) if timeout else self._queue.get_nowait()
+            if timeout:
+                ev = self._queue.get(timeout=timeout)
+            else:
+                if self._queue.empty():
+                    self.ctx.store.flush_events()
+                ev = self._queue.get_nowait()
         except queue.Empty:
             self.cds.recheck_delayed()
             return False

@@ -91,9 +91,11 @@ class DependencyTracker:
     A CU whose input DUs are not all sealed/first-replicated is parked in
     ``Waiting`` instead of being released to placement; this tracker
     subscribes to the coordination store's keyspace notifications (the same
-    StoreEvent machinery the async scheduler rides — no polling) and, when
-    an awaited DU seals or turns READY, releases every CU whose dependency
-    set just emptied by pushing it onto ``cds:incoming``.  Both execution
+    StoreEvent machinery the async scheduler rides — no polling; events
+    arrive via the store's out-of-lock dispatcher in ``seq`` order, so the
+    readiness decisions below see seal/publish transitions in store order)
+    and, when an awaited DU seals or turns READY, releases every CU whose
+    dependency set just emptied by pushing it onto ``cds:incoming``.  Both execution
     modes drain that queue (the sync loop and the AsyncScheduler reactor),
     so release ordering — recorded in :attr:`release_log` — is identical
     across modes.

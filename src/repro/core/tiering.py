@@ -372,7 +372,7 @@ class TierManager:
 
     # ------------------------------------------------------- access stats
     def _on_access(self, ev: StoreEvent) -> None:
-        """Store callback (mutating thread): fold one access record into
+        """Store callback (dispatcher thread): fold one access record into
         the frequency/recency tables; cheap and lock-scoped only."""
         if ev.op != "hset" or ev.key != "du:access" or ev.field is None:
             return
@@ -400,7 +400,10 @@ class TierManager:
             self._promote_q.put((du_id, site))
 
     def access_stats(self, du_id: str) -> tuple:
-        """(access_count, last_access_tick) for a DU; (0, 0) if never."""
+        """(access_count, last_access_tick) for a DU; (0, 0) if never.
+        Barriers on the store dispatcher first, so stats reflect every
+        access record already published."""
+        self.ctx.store.flush_events()
         with self._lock:
             return self._freq.get(du_id, 0), self._last.get(du_id, 0)
 
@@ -609,7 +612,10 @@ class TierManager:
 
     def drain_promotions(self, max_n: int = 100) -> int:
         """Synchronously process queued promotions (deterministic mode for
-        benchmarks/tests); returns the number of DUs promoted."""
+        benchmarks/tests); returns the number of DUs promoted.  Barriers on
+        the store dispatcher first so access records already published have
+        fed the promotion queue."""
+        self.ctx.store.flush_events()
         done = 0
         for _ in range(max_n):
             try:

@@ -233,7 +233,9 @@ class TransferService:
 
     def _note_access(self, du: DataUnit, location: str) -> None:
         """Publish one access record for the tier layer's frequency/recency
-        statistics (rides the store's existing event stream)."""
+        statistics (rides the store's existing event stream; the TierManager
+        folds it in asynchronously off the store dispatcher — readers that
+        need up-to-date stats barrier via ``store.flush_events()``)."""
         self.ctx.store.hset(
             "du:access",
             du.id,

@@ -1,0 +1,211 @@
+"""Property tests for the sharded coordination plane.
+
+The contracts under test:
+
+  * per-subscriber delivery order equals ``StoreEvent.seq`` order — and
+    seq order is consistent with per-key mutation order — under writers
+    racing across shards;
+  * a prefix subscription sees exactly the matching subsequence of the
+    store-wide event stream;
+  * ``keys()``/``hkeys()`` bisect range scans agree with a brute-force
+    reference model under arbitrary mutate/delete interleavings;
+  * the group-commit WAL round-trips: a crash (no ``close()``) loses at
+    most the unflushed tail, an explicit flush makes everything written so
+    far replayable, and ``close()`` loses nothing.
+"""
+
+import threading
+
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis")
+
+from hypothesis import given, settings, strategies as st
+
+from repro.core.coordination import CoordinationStore
+
+
+# ------------------------------------------------ delivery-order property
+@settings(max_examples=25, deadline=None)
+@given(
+    n_writers=st.integers(min_value=2, max_value=4),
+    n_ops=st.integers(min_value=5, max_value=60),
+    shards=st.sampled_from([1, 4, 16]),
+)
+def test_delivery_order_equals_seq_order_under_racing_writers(
+    n_writers, n_ops, shards
+):
+    store = CoordinationStore(shards=shards)
+    all_seen = []
+    cu_seen = []
+    store.subscribe(all_seen.append, prefix="")
+    store.subscribe(cu_seen.append, prefix="cu:")
+    prefixes = ["cu:", "du:", "pilot:", "pd:"]
+    barrier = threading.Barrier(n_writers)
+
+    def writer(tid: int):
+        barrier.wait()
+        for i in range(n_ops):
+            # each writer owns its keys: per-key order is its program order
+            key = f"{prefixes[(tid + i) % len(prefixes)]}w{tid}-{i % 3}"
+            store.hset(key, "state", (tid, i))
+
+    threads = [threading.Thread(target=writer, args=(t,)) for t in range(n_writers)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert store.flush_events()
+
+    # store-wide total order: strictly increasing seq, no drops, no dups
+    seqs = [ev.seq for ev in all_seen]
+    assert seqs == sorted(seqs)
+    assert len(set(seqs)) == len(seqs)
+    assert len(all_seen) == n_writers * n_ops
+
+    # the prefix subscriber saw exactly the matching subsequence, in order
+    expect_cu = [ev for ev in all_seen if ev.key.startswith("cu:")]
+    assert [(ev.seq, ev.key, ev.value) for ev in cu_seen] == [
+        (ev.seq, ev.key, ev.value) for ev in expect_cu
+    ]
+
+    # per-key: seq order is consistent with the owning writer's program
+    # order (each key is written by exactly one thread)
+    per_key = {}
+    for ev in all_seen:
+        per_key.setdefault(ev.key, []).append(ev.value)
+    for key, values in per_key.items():
+        assert values == sorted(values), f"per-key order violated on {key}"
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    pushes=st.lists(
+        st.tuples(st.sampled_from(["q:a", "q:b", "q:c"]), st.integers()),
+        min_size=1,
+        max_size=40,
+    ),
+    shards=st.sampled_from([1, 8]),
+)
+def test_queue_events_and_fifo_agree_with_reference(pushes, shards):
+    store = CoordinationStore(shards=shards)
+    seen = []
+    store.subscribe(seen.append, prefix="q:")
+    model = {}
+    for q, v in pushes:
+        store.push(q, v)
+        model.setdefault(q, []).append(v)
+    store.flush_events()
+    assert [(ev.key, ev.value) for ev in seen] == pushes
+    for q, expected in model.items():
+        drained = [store.pop(q) for _ in range(len(expected))]
+        assert drained == expected
+        assert store.pop(q) is None
+
+
+# -------------------------------------------------- prefix-scan property
+_key = st.tuples(
+    st.sampled_from(["cu:", "du:", "pilot:", "pd:", ""]),
+    st.text(alphabet="abc0", min_size=0, max_size=3),
+).map(lambda t: t[0] + t[1])
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    ops=st.lists(
+        st.tuples(st.sampled_from(["set", "delete", "hset", "hdel"]), _key),
+        max_size=60,
+    ),
+    probe=st.sampled_from(["", "cu:", "du:", "pilot:p", "a"]),
+    shards=st.sampled_from([1, 4, 16]),
+)
+def test_prefix_scans_agree_with_reference_model(ops, probe, shards):
+    store = CoordinationStore(shards=shards)
+    kv, hashes = set(), set()
+    for op, key in ops:
+        if op == "set":
+            store.set(key, 1)
+            kv.add(key)
+        elif op == "delete":
+            store.delete(key)
+            kv.discard(key)
+        elif op == "hset":
+            store.hset(key, "f", 1)
+            hashes.add(key)
+        else:
+            store.hdel(key, "f")  # hash record survives (legacy semantics)
+    assert store.keys(probe) == sorted(k for k in kv if k.startswith(probe))
+    assert store.hkeys(probe) == sorted(k for k in hashes if k.startswith(probe))
+
+
+# ------------------------------------------- WAL group-commit round-trip
+def _apply(store, ops):
+    for op, key, val in ops:
+        if op == "set":
+            store.set(key, val)
+        elif op == "hset":
+            store.hset(key, "state", val)
+        else:
+            store.push(key, val)
+
+
+_wal_op = st.tuples(
+    st.sampled_from(["set", "hset", "push"]),
+    st.sampled_from(["cu:a", "du:b", "q:c", "pilot:d"]),
+    st.integers(min_value=0, max_value=99),
+)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    ops=st.lists(_wal_op, min_size=1, max_size=50),
+    wal_batch=st.sampled_from([1, 7, 64]),
+)
+def test_wal_group_commit_crash_replay_roundtrip(tmp_path_factory, ops, wal_batch):
+    tmp = tmp_path_factory.mktemp("wal")
+    path = str(tmp / "wal.log")
+    store = CoordinationStore(wal_path=path, wal_batch=wal_batch)
+    _apply(store, ops)
+    store.flush_wal()  # group commit: everything so far becomes durable
+    _apply(store, [("set", "cu:tail", -1)])  # may sit in the buffer
+
+    # crash: no close(). Replay what reached disk — a prefix of the op
+    # stream containing at least everything before the explicit flush
+    # (the background flusher may or may not have caught the tail).
+    survivor = CoordinationStore(wal_path=path, replay=True, shards=4)
+    got = survivor.snapshot()
+    survivor.close()
+
+    reference = CoordinationStore()
+    _apply(reference, ops)
+    without_tail = reference.snapshot()
+    _apply(reference, [("set", "cu:tail", -1)])
+    with_tail = reference.snapshot()
+    reference.close()
+    assert got in (without_tail, with_tail)
+
+    # clean close after more ops loses nothing
+    _apply(store, [("hset", "du:final", 7)])
+    store.close()
+    replayed = CoordinationStore(wal_path=path, replay=True)
+    assert replayed.hget("du:final", "state") == 7
+    assert replayed.get("cu:tail") == -1
+    replayed.close()
+
+
+def test_wal_replay_equals_snapshot_across_shard_counts(tmp_path):
+    """The WAL format is shard-agnostic: a log written by a 16-shard store
+    replays identically into a 1-shard store and vice versa."""
+    path = str(tmp_path / "wal.log")
+    store = CoordinationStore(wal_path=path, shards=16, wal_batch=32)
+    _apply(
+        store,
+        [("set", f"cu:{i}", i) for i in range(25)]
+        + [("hset", f"du:{i}", i) for i in range(25)]
+        + [("push", "q:a", i) for i in range(5)],
+    )
+    snap = store.snapshot()
+    store.close()
+    replayed = CoordinationStore(wal_path=path, replay=True, shards=1)
+    assert replayed.snapshot() == snap
+    replayed.close()

@@ -1,0 +1,61 @@
+"""10k-scale coordination-plane stress cell (PR 7 acceptance).
+
+Marked ``stress``: the nightly stress job runs these alongside bench-full;
+they also ride the tier-1 suite (a few seconds) so the scale contract can't
+rot between nightlies.
+"""
+
+import threading
+
+import pytest
+
+from benchmarks.bench_scale import coordination_cell
+from repro.core.coordination import CoordinationStore
+
+
+@pytest.mark.stress
+def test_10k_cus_100_pilots_per_event_cost_flat():
+    """Per-event store cost at 10k CUs / 100 pilots stays flat vs the 1k
+    cell — the sharded plane's prefix-indexed subscriptions, striped
+    locks, and bisect scans hold per-op cost constant as the workload and
+    the subscriber table scale 10×.  (The CI-gated bench claim uses ±20%;
+    the test allows ±35% to stay robust on loaded shared runners.)"""
+    small = coordination_cell(1_000, 10)
+    large = coordination_cell(10_000, 100)
+    ratio = large["per_event_us"] / small["per_event_us"]
+    assert 0.65 <= ratio <= 1.35, (
+        f"per-event cost not flat: 1k={small['per_event_us']:.2f}us "
+        f"10k={large['per_event_us']:.2f}us ratio={ratio:.2f}"
+    )
+
+
+@pytest.mark.stress
+def test_100_pilot_queues_with_racing_producers_and_consumers():
+    """100 per-pilot queues, 8 producer threads, 100 consumer drains:
+    exactly-once delivery across stripes under real contention."""
+    store = CoordinationStore()
+    n_pilots, n_producers, per_producer = 100, 8, 500
+    barrier = threading.Barrier(n_producers)
+
+    def producer(tid: int) -> None:
+        barrier.wait()
+        for i in range(per_producer):
+            store.push(f"queue:pilot:p{(tid * per_producer + i) % n_pilots}", (tid, i))
+
+    threads = [
+        threading.Thread(target=producer, args=(t,)) for t in range(n_producers)
+    ]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    seen = set()
+    for p in range(n_pilots):
+        while True:
+            item = store.pop(f"queue:pilot:p{p}")
+            if item is None:
+                break
+            assert item not in seen, f"duplicate delivery: {item}"
+            seen.add(item)
+    assert len(seen) == n_producers * per_producer
+    store.close()
