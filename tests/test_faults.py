@@ -541,3 +541,56 @@ def test_straggler_tick_is_o_changes():
         assert store.ops_total - before == 0  # quiet tick: zero store ops
     finally:
         mit.stop()
+
+
+def test_concurrent_ensure_does_not_over_replicate(topo):
+    """ensure() no longer holds _ensure_lock across heal transfers (the
+    PD-L002 finding); the per-DU gate must still close the original race:
+    N concurrent passes over one under-replicated DU create exactly the
+    missing replicas, never factor+k."""
+    import threading
+
+    from repro.core.recovery import ReplicaManager
+
+    with PilotManager(topology=topo) as mgr:
+        pd_a = mgr.start_pilot_data(
+            service_url="sharedfs://cluster:pod0/a", affinity="cluster:pod0"
+        )
+        mgr.start_pilot_data(
+            service_url="sharedfs://cluster:pod1/b", affinity="cluster:pod1"
+        )
+        mgr.start_pilot_data(
+            service_url="sharedfs://cluster:pod2/c", affinity="cluster:pod2"
+        )
+        desc = DataUnitDescription(
+            name="r2",
+            files={"blob": b"r" * 4096},
+            chunk_size=1024,
+            replication_factor=2,
+        )
+        inner = mgr.cds.submit_data_unit(desc, target=pd_a)
+        assert inner.wait() == DUState.READY
+        rm = ReplicaManager(mgr.ctx, cds=mgr.cds)
+        try:
+            base = len(inner.locations)
+            assert base in (1, 2)
+            barrier = threading.Barrier(4)
+            made = []
+
+            def racer():
+                barrier.wait(timeout=10)
+                made.append(rm.ensure(inner))
+
+            threads = [threading.Thread(target=racer) for _ in range(4)]
+            for t in threads:
+                t.start()
+            for t in threads:
+                t.join(timeout=30)
+            assert len(made) == 4
+            # exactly the missing replicas were created: the first pass
+            # through the gate heals, everyone parked on it re-reads the
+            # updated locations and no-ops
+            assert sum(made) == 2 - base
+            assert len(inner.locations) == 2
+        finally:
+            rm.stop()

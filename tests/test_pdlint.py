@@ -1,0 +1,393 @@
+"""pdlint — the concurrency-contract static analyzer: one bad/good fixture
+pair per rule, suppression comments, CLI exit codes, and the self-check
+that the shipped tree is clean."""
+
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+from repro.analysis.model import build_project
+from repro.analysis.pdlint import (
+    EXIT_CLEAN,
+    EXIT_ERROR,
+    EXIT_FINDINGS,
+    main,
+    run,
+)
+from repro.analysis.rules import list_rules
+
+ROOT = Path(__file__).resolve().parent.parent
+CORE = ROOT / "src" / "repro" / "core"
+ANALYSIS = ROOT / "src" / "repro" / "analysis"
+
+
+def lint(tmp_path, sources, select=None):
+    paths = []
+    for name, src in sources.items():
+        p = tmp_path / name
+        p.write_text(src, encoding="utf-8")
+        paths.append(p)
+    findings, _ = run(paths, select=select)
+    return findings
+
+
+MINI_STORE_PREFIX = """\
+import threading
+
+
+class MiniStore:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.kv = {}
+
+    def hset(self, key, field, value):
+        self.kv[(key, field)] = value
+
+    def push(self, name, item):
+        self.kv.setdefault(name, []).append(item)
+
+    def pop_any(self, names, timeout=None):
+        return None
+
+    def get(self, key, default=None):
+        return self.kv.get(key, default)
+"""
+
+
+# ------------------------------------------------------------------ PD-L001
+def test_l001_store_op_under_store_lock(tmp_path):
+    bad = MINI_STORE_PREFIX + """
+    def rebalance(self):
+        with self._lock:
+            return self.get("cursor")
+"""
+    findings = lint(tmp_path, {"bad.py": bad}, select=["PD-L001"])
+    assert [f.rule for f in findings] == ["PD-L001"]
+    assert "self.get()" in findings[0].message
+
+    good = MINI_STORE_PREFIX + """
+    def rebalance(self):
+        with self._lock:
+            cursor_key = "cursor"
+        return self.get(cursor_key)
+"""
+    assert lint(tmp_path, {"good.py": good}, select=["PD-L001"]) == []
+
+
+# ------------------------------------------------------------------ PD-L002
+L002_BAD = """\
+import threading
+import time
+
+_lock = threading.Lock()
+
+
+def tick():
+    with _lock:
+        time.sleep(0.1)
+
+
+def _wait_for_disk():
+    time.sleep(0.5)
+
+
+def drain():
+    with _lock:
+        _wait_for_disk()
+"""
+
+
+def test_l002_blocking_under_lock_direct_and_transitive(tmp_path):
+    findings = lint(tmp_path, {"bad.py": L002_BAD}, select=["PD-L002"])
+    assert len(findings) == 2
+    direct, transitive = findings
+    assert "time.sleep" in direct.message
+    assert "_wait_for_disk()" in transitive.message  # via the call graph
+
+    good = """\
+import threading
+import time
+
+_lock = threading.Lock()
+
+
+def tick():
+    with _lock:
+        deadline = 0.1
+    time.sleep(deadline)
+"""
+    assert lint(tmp_path, {"good.py": good}, select=["PD-L002"]) == []
+
+
+# ------------------------------------------------------------------ PD-L003
+def test_l003_mutating_subscriber_callback(tmp_path):
+    bad = """\
+class Listener:
+    def __init__(self, store):
+        self.store = store
+        self.store.subscribe(self._on_event)
+
+    def _on_event(self, ev):
+        self.store.hset("seen", ev.key, 1)
+"""
+    findings = lint(tmp_path, {"bad.py": bad}, select=["PD-L003"])
+    assert [f.rule for f in findings] == ["PD-L003"]
+    assert "store.hset" in findings[0].message
+
+    good = """\
+import queue
+
+
+class Listener:
+    def __init__(self, store):
+        self.store = store
+        self.q = queue.Queue()
+        self.store.subscribe(self._on_event)
+
+    def _on_event(self, ev):
+        self.q.put(ev)  # hand off to our own thread: sanctioned
+"""
+    assert lint(tmp_path, {"good.py": good}, select=["PD-L003"]) == []
+
+
+# ------------------------------------------------------------------ PD-L004
+def test_l004_mutate_then_read_without_barrier(tmp_path):
+    bad = """\
+class StateCache:
+    def __init__(self, store):
+        self.store = store
+        self._state = None
+        store.subscribe(self._on_event)
+
+    def _on_event(self, ev):
+        self._state = ev.value
+
+    def poll(self):
+        self.store.hset("pilot:1", "state", "ACTIVE")
+        return self._state
+"""
+    findings = lint(tmp_path, {"bad.py": bad}, select=["PD-L004"])
+    assert [f.rule for f in findings] == ["PD-L004"]
+    assert "'_state'" in findings[0].message
+    assert "store.hset" in findings[0].message
+
+    good = bad.replace(
+        '        self.store.hset("pilot:1", "state", "ACTIVE")\n',
+        '        self.store.hset("pilot:1", "state", "ACTIVE")\n'
+        "        self.store.flush_events()\n",
+    )
+    assert lint(tmp_path, {"good.py": good}, select=["PD-L004"]) == []
+
+
+# ------------------------------------------------------------------ PD-L005
+def test_l005_same_file_inversion(tmp_path):
+    bad = """\
+import threading
+
+lock_a = threading.Lock()
+lock_b = threading.Lock()
+
+
+def forward():
+    with lock_a:
+        with lock_b:
+            pass
+
+
+def backward():
+    with lock_b:
+        with lock_a:
+            pass
+"""
+    findings = lint(tmp_path, {"bad.py": bad}, select=["PD-L005"])
+    assert len(findings) == 1
+    assert "lock-order inversion" in findings[0].message
+    assert "lock_a" in findings[0].message and "lock_b" in findings[0].message
+    # the hint carries both witnessing sites so the trace is actionable
+    assert "forward()" in findings[0].hint and "backward()" in findings[0].hint
+
+    good = bad.replace(
+        "with lock_b:\n        with lock_a:",
+        "with lock_a:\n        with lock_b:",
+    )
+    assert lint(tmp_path, {"good.py": good}, select=["PD-L005"]) == []
+
+
+def test_l005_cross_module_inversion(tmp_path):
+    left = """\
+import threading
+
+from right import Right
+
+
+class Left:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.right = Right()
+
+    def poke(self):
+        with self._lock:
+            self.right.absorb()
+"""
+    right = """\
+import threading
+
+
+class Right:
+    def __init__(self):
+        self._lock = threading.Lock()
+
+    def absorb(self):
+        with self._lock:
+            pass
+
+    def kick(self, left: "Left"):
+        with self._lock:
+            left.poke()
+"""
+    findings = lint(
+        tmp_path, {"left.py": left, "right.py": right}, select=["PD-L005"]
+    )
+    cycles = [f for f in findings if "lock-order inversion" in f.message]
+    assert cycles, findings
+    assert "Left._lock" in cycles[0].message
+    assert "Right._lock" in cycles[0].message
+
+
+# ------------------------------------------------------------------ PD-L006
+def test_l006_scan_materialization_under_stripe(tmp_path):
+    bad = MINI_STORE_PREFIX + """
+    def keys(self, prefix=""):
+        out = []
+        with self._lock:
+            out.extend(sorted(self.kv))
+        return out
+"""
+    findings = lint(tmp_path, {"bad.py": bad}, select=["PD-L006"])
+    assert {f.rule for f in findings} == {"PD-L006"}
+    assert any("sorted()" in f.message for f in findings)
+
+    good = MINI_STORE_PREFIX + """
+    def keys(self, prefix=""):
+        with self._lock:
+            part = list(self.kv)
+        return sorted(part)
+"""
+    assert lint(tmp_path, {"good.py": good}, select=["PD-L006"]) == []
+
+
+# -------------------------------------------------------------- suppression
+def test_suppression_trailing_comment(tmp_path):
+    src = L002_BAD.replace(
+        "        time.sleep(0.1)",
+        "        time.sleep(0.1)  # pdlint: disable=PD-L002",
+    )
+    findings = lint(tmp_path, {"s.py": src}, select=["PD-L002"])
+    assert [f.line for f in findings] == [18]  # only the transitive one left
+
+
+def test_suppression_preceding_comment_line(tmp_path):
+    src = L002_BAD.replace(
+        "        time.sleep(0.1)",
+        "        # pdlint: disable=PD-L002\n        time.sleep(0.1)",
+    )
+    findings = lint(tmp_path, {"s.py": src}, select=["PD-L002"])
+    assert all("_wait_for_disk" in f.message for f in findings)
+
+
+def test_suppression_wrong_rule_is_ignored(tmp_path):
+    src = L002_BAD.replace(
+        "        time.sleep(0.1)",
+        "        time.sleep(0.1)  # pdlint: disable=PD-L001",
+    )
+    findings = lint(tmp_path, {"s.py": src}, select=["PD-L002"])
+    assert len(findings) == 2  # PD-L001 token does not silence PD-L002
+
+
+# ---------------------------------------------------------------------- CLI
+def _cli(*args, cwd=None):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(ROOT / "src")
+    return subprocess.run(
+        [sys.executable, "-m", "repro.analysis.pdlint", *args],
+        capture_output=True,
+        text=True,
+        env=env,
+        cwd=cwd or ROOT,
+        timeout=120,
+    )
+
+
+def test_cli_exit_codes(tmp_path):
+    bad = tmp_path / "bad.py"
+    bad.write_text(L002_BAD, encoding="utf-8")
+    good = tmp_path / "good.py"
+    good.write_text("x = 1\n", encoding="utf-8")
+
+    proc = _cli(str(good))
+    assert proc.returncode == EXIT_CLEAN, proc.stderr
+    proc = _cli(str(bad))
+    assert proc.returncode == EXIT_FINDINGS
+    assert "PD-L002" in proc.stdout
+    proc = _cli(str(tmp_path / "missing.py"))
+    assert proc.returncode == EXIT_ERROR
+    proc = _cli("--select", "PD-L999", str(good))
+    assert proc.returncode == EXIT_ERROR
+    proc = _cli()  # no paths
+    assert proc.returncode == EXIT_ERROR
+
+
+def test_cli_markdown_summary(tmp_path):
+    bad = tmp_path / "bad.py"
+    bad.write_text(L002_BAD, encoding="utf-8")
+    out = tmp_path / "summary.md"
+    proc = _cli("--markdown", str(out), str(bad))
+    assert proc.returncode == EXIT_FINDINGS
+    text = out.read_text(encoding="utf-8")
+    assert "| rule |" in text and "PD-L002" in text
+
+
+def test_cli_parse_error_exits_2(tmp_path):
+    broken = tmp_path / "broken.py"
+    broken.write_text("def f(:\n", encoding="utf-8")
+    proc = _cli(str(broken))
+    assert proc.returncode == EXIT_ERROR
+    assert "parse error" in proc.stderr
+
+
+def test_list_rules_covers_all_contracts():
+    expected = {
+        "PD-L001",
+        "PD-L002",
+        "PD-L003",
+        "PD-L004",
+        "PD-L005",
+        "PD-L006",
+    }
+    assert set(list_rules()) == expected
+    proc = _cli("--list-rules")
+    assert proc.returncode == EXIT_CLEAN
+    assert set(proc.stdout.split()) == expected
+
+
+# ---------------------------------------------------------------- self-check
+def test_shipped_tree_is_clean():
+    """The contracts hold on the codebase that defines them (unsuppressed
+    findings here mean a regression slipped into the coordination plane)."""
+    findings, project = run([CORE, ANALYSIS], select=None)
+    assert project.errors == []
+    assert findings == [], "\n".join(f.format() for f in findings)
+
+
+def test_in_process_main_matches_run(capsys, tmp_path):
+    bad = tmp_path / "bad.py"
+    bad.write_text(L002_BAD, encoding="utf-8")
+    assert main([str(bad)]) == EXIT_FINDINGS
+    out = capsys.readouterr().out
+    assert "PD-L002" in out
+
+
+def test_project_model_sees_store_classes():
+    project = build_project([CORE / "coordination.py"])
+    assert "CoordinationStore" in project.store_classes

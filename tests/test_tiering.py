@@ -468,3 +468,33 @@ def test_working_set_larger_than_sandbox_completes():
             assert du.state == DUState.READY
             assert du.has_full_coverage()
             assert cold.verify_du(du)
+
+
+# ------------------------------------------- access-stats snapshot (pdlint)
+def test_victim_stats_fold_in_fresh_access_records():
+    """evictable_victims() barriers once up front and snapshots the stats
+    tables (instead of flush_events() per DU under _evict_lock, the
+    PD-L002 finding): access records published immediately before the
+    call must still be reflected in the ranked victims."""
+    ctx = make_ctx("t:s0", "t:s1")
+    tm = TierManager(ctx, auto_promote=False)
+    base = make_pd(ctx, "sharedfs://t:s0/base", "t:s0")
+    small = make_pd(ctx, "mem://t:s1/small", "t:s1")
+    a = make_du(ctx, "a", b"A")
+    b = make_du(ctx, "b", b"B")
+    base.put_du(a), base.put_du(b)
+    small.copy_du_from(a, base)
+    small.copy_du_from(b, base)
+    # publish access records the way the transfer service does; the
+    # snapshot path must see them without any explicit flush by the test
+    for _ in range(3):
+        ctx.store.hset("du:access", a.id, {"location": "mem://t:s1/small"})
+    ctx.store.hset("du:access", b.id, {"location": "mem://t:s1/small"})
+    victims = {v.du_id: v for v in tm.evictable_victims(small)}
+    assert victims[a.id].access_count == 3
+    assert victims[b.id].access_count == 1
+    assert victims[b.id].last_access > victims[a.id].last_access
+    # and the ranking that make_room() uses honors them (lfu: b first)
+    ranked = make_eviction_policy("lfu").rank(small, list(victims.values()))
+    assert ranked[0].du_id == b.id
+    tm.stop()
