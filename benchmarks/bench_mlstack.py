@@ -1,0 +1,527 @@
+"""ML-stack benchmark: the trainer/checkpointer/serving layers measured
+ON the modern runtime (Session DAGs, healed DUs, tier cache).
+
+Four cells, mirroring the ML-stack refactor's load-bearing claims:
+
+  dag        — a trainer-shaped chunk chain (each chunk consumes
+               [shard_i, ckpt_{i-1}] and seals ckpt_i) run two ways over
+               the same data: the v1 submit-wait pattern vs one one-shot
+               Session submission under the async scheduler, where a
+               Waiting chunk's already-ready shard is prefetched while
+               its checkpoint producer still computes.  Claim: the
+               one-shot DAG's makespan beats sequential because shard
+               staging leaves the critical path entirely.
+  serve      — a serving fleet cold-starts N replicas from one checkpoint
+               DU homed a WAN hop away.  With the mem-tier cache the warm
+               accesses promote the DU into a hot site-local copy and the
+               fleet stages from it; without, every replica pays the WAN.
+  survival   — a checkpoint chain at ``replication_factor=2`` under the
+               fault manager; the pilot that produced chunk 0 is killed
+               the moment it finishes.  Claim: the run completes on the
+               survivor, the FULL step count restores from the catalog,
+               and the final checkpoint DU heals back to 2 replicas —
+               no checkpoint-layer recovery code involved.
+  scenario   — every model config in the registry becomes a cold-start
+               scenario: a weights DU sized from ``cfg.param_count()``
+               stages across the WAN and loads end-to-end.
+
+Wall rows use ``time_scale`` (simulated seconds become real sleeps); the
+``makespan``/``blocking_stage_sim`` rows are deterministic simulated
+seconds and gate in CI via check_regression, as do all ``.claim.`` rows.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from repro.checkpoint import Checkpointer, checkpoint_files
+from repro.configs import get_config, list_archs
+from repro.core import (
+    CUState,
+    DataUnitDescription,
+    FUNCTIONS,
+    Session,
+    Topology,
+)
+
+from .common import MB, Timer, emit, modeled_makespan
+
+DATA_SITE, COMPUTE_SITE = "ml:data", "ml:compute"
+TIME_SCALE = 0.05
+
+# ---- dag cell: 0.5 MB/s WAN → 4.2 s sim per 2 MB shard, 10 s sim compute
+N_CHUNKS = 3
+SHARD_BYTES = 2 * 1024 * 1024
+SHARD_CHUNK = 256 * 1024
+CKPT_BYTES = 16 * 1024
+CHUNK_COMPUTE_S = 10.0
+
+# ---- serve cell
+N_REPLICAS = 4
+WARM_LOADS = 2  # accesses needed to promote (tier_promote_after default)
+SERVE_COMPUTE_S = 0.2
+SERVE_ARCH = "h2o-danube-1.8b"
+
+# ---- survival cell
+KILL_RUN = "bm-kill"
+KILL_CHUNKS = 3
+KILL_COMPUTE_S = 30.0
+KILL_TIME_SCALE = 0.01
+
+
+def _two_site_topology(bandwidth: float) -> Topology:
+    topo = Topology()
+    topo.register(DATA_SITE, bandwidth=bandwidth, latency=0.05)
+    topo.register(COMPUTE_SITE, bandwidth=bandwidth, latency=0.05)
+    return topo
+
+
+def _wait_until(pred, timeout=30.0, interval=0.01) -> bool:
+    deadline = time.monotonic() + timeout
+    while time.monotonic() < deadline:
+        if pred():
+            return True
+        time.sleep(interval)
+    return pred()
+
+
+# ------------------------------------------------------------------- dag
+def _register_chunk(tag: str) -> None:
+    def train_chunk(cu_ctx):
+        n = 0
+        for du in cu_ctx.input_dus():
+            for rel in du.manifest:
+                n += len(cu_ctx.read_input(du.id, rel))
+        cu_ctx.write_output("ck", b"K" * CKPT_BYTES)
+        return n
+
+    FUNCTIONS.register(f"bm-chunk:{tag}", train_chunk)
+
+
+def _dag_setup(tag: str, mode: str) -> tuple:
+    sess = Session(
+        topology=_two_site_topology(0.5 * MB),
+        scheduler_mode=mode,
+        time_scale=TIME_SCALE,
+    )
+    pd = sess.start_pilot_data(
+        service_url=f"sharedfs://{DATA_SITE}/shards-{tag}", affinity=DATA_SITE
+    )
+    pilot = sess.start_pilot(resource_url=f"sim://{COMPUTE_SITE}", slots=1)
+    pilot.wait_active()
+    shards = [
+        sess.submit_du(
+            name=f"shard-{tag}-{i}",
+            files={"x.bin": bytes([i]) * SHARD_BYTES},
+            chunk_size=SHARD_CHUNK,
+            target=pd,
+        )
+        for i in range(N_CHUNKS)
+    ]
+    ck0 = sess.submit_du(name=f"ck0-{tag}", files={"ck": b"K" * CKPT_BYTES}, target=pd)
+    [d.wait() for d in [*shards, ck0]]
+    return sess, shards, ck0
+
+
+def _dag_chunk(sess, tag: str, i: int, shard, prev_ckpt):
+    return sess.submit_cu(
+        executable=f"bm-chunk:{tag}",
+        input_data=[shard, prev_ckpt],
+        output_data=[DataUnitDescription(name=f"ck{i + 1}-{tag}")],
+        sim_compute_s=CHUNK_COMPUTE_S,
+    )
+
+
+def _dag_collect(cus) -> Dict[str, float]:
+    for cu in cus:
+        assert cu.state == CUState.DONE, (cu.id, cu.state, cu.error)
+    blocking = sum(cu.timings.sim_stage_s for cu in cus)
+    compute = sum(cu.timings.sim_compute_s for cu in cus)
+    prefetched = sum(cu.timings.sim_prefetch_s for cu in cus)
+    # one pilot slot + a serial checkpoint chain: the modeled makespan is
+    # the serial sum of every chunk's blocking stage + compute
+    return {
+        "blocking": blocking,
+        "prefetched": prefetched,
+        "makespan": blocking + compute,
+    }
+
+
+def _run_dag_sequential(tag: str) -> Dict[str, float]:
+    """v1 pattern: submit a chunk, block on it, submit the next."""
+    _register_chunk(tag)
+    sess, shards, ck0 = _dag_setup(tag, "sync")
+    try:
+        cus, prev = [], ck0
+        with Timer() as t:
+            for i, shard in enumerate(shards):
+                cu = _dag_chunk(sess, tag, i, shard, prev)
+                assert cu.result(timeout=240) == SHARD_BYTES + CKPT_BYTES
+                cus.append(cu)
+                prev = cu.output
+        stats = _dag_collect(cus)
+        stats["wall"] = t.wall
+        return stats
+    finally:
+        sess.close()
+
+
+def _run_dag_oneshot(tag: str) -> Dict[str, float]:
+    """The whole chunk chain submitted before any chunk runs; the async
+    scheduler prefetches a Waiting chunk's ready shard input while its
+    checkpoint producer computes."""
+    _register_chunk(tag)
+    sess, shards, ck0 = _dag_setup(tag, "async")
+    try:
+        cus, prev = [], ck0
+        with Timer() as t:
+            for i, shard in enumerate(shards):
+                cu = _dag_chunk(sess, tag, i, shard, prev)
+                cus.append(cu)
+                prev = cu.output
+            for cu in cus:
+                assert cu.result(timeout=240) == SHARD_BYTES + CKPT_BYTES
+        stats = _dag_collect(cus)
+        stats["wall"] = t.wall
+        return stats
+    finally:
+        sess.close()
+
+
+# ----------------------------------------------------------------- serve
+def _run_serve_fleet(tag: str, cached: bool) -> Dict[str, object]:
+    cfg = get_config(SERVE_ARCH)
+    n_f32 = max(16 * 1024, min(int(1 * MB), cfg.param_count() // 4096))
+    weights = {"w": np.ones(n_f32, dtype=np.float32)}
+    expect = float(n_f32)
+
+    def load_weights(cu_ctx, weights_du):
+        from repro.serving import params_from_input
+
+        return float(params_from_input(cu_ctx, weights_du)["w"].sum())
+
+    FUNCTIONS.register(f"bm-load:{tag}", load_weights)
+    sess = Session(
+        topology=_two_site_topology(2 * MB),
+        tier_cache_bytes=(16 * n_f32) if cached else 0,
+        tier_auto_promote=False,  # drained explicitly: deterministic
+        time_scale=TIME_SCALE,
+    )
+    try:
+        cold = sess.start_pilot_data(
+            service_url=f"sharedfs://{DATA_SITE}/ckpt-{tag}", affinity=DATA_SITE
+        )
+        fleet = [
+            sess.start_pilot(resource_url=f"sim://{COMPUTE_SITE}", slots=1)
+            for _ in range(N_REPLICAS)
+        ]
+        for p in fleet:
+            p.wait_active()
+        du = Checkpointer(sess, run_name=f"bm-serve-{tag}").save(
+            0, weights, target=cold
+        )
+
+        def _load(pilot):
+            cu = sess.submit_cu(
+                executable=f"bm-load:{tag}",
+                args=(du.id,),
+                input_data=[du],
+                pilot=pilot,
+                sim_compute_s=SERVE_COMPUTE_S,
+                cache_inputs=cached,
+            )
+            assert cu.result(timeout=120) == expect
+            return cu.timings.sim_stage_s + cu.timings.sim_compute_s
+
+        with Timer() as t:
+            # a canary replica's repeated loads heat the DU ...
+            warm = [_load(fleet[0]) for _ in range(WARM_LOADS)]
+            tm = sess.tier_manager
+            if cached:
+                tm.drain_promotions()
+            # ... then the whole fleet cold-starts concurrently-shaped
+            durs = [_load(p) for p in fleet]
+        fleet_makespan = modeled_makespan(durs, slots=N_REPLICAS)
+        cache_ids = {pd.id for pd in tm.cache_pds.values()}
+        return {
+            "warm": sum(warm),
+            "fleet_makespan": fleet_makespan,
+            "wall": t.wall,
+            "promotions": tm.promotions_total,
+            "promoted": bool(cache_ids & set(du.locations)),
+        }
+    finally:
+        sess.close()
+
+
+# -------------------------------------------------------------- survival
+def _run_survival() -> Dict[str, object]:
+    def train_chunk(cu_ctx, step):
+        n = 0
+        for du in cu_ctx.input_dus():
+            n += sum(len(cu_ctx.read_input(du.id, r)) for r in du.manifest)
+        files = checkpoint_files(
+            step, KILL_RUN, {"w": np.full(16, float(step), np.float32)}
+        )
+        for rel, data in files.items():
+            cu_ctx.write_output(rel, data)
+        return n > 0
+
+    FUNCTIONS.register("bm-survive", train_chunk)
+    sess = Session(
+        topology=_two_site_topology(10 * MB),
+        enable_fault_manager=True,
+        heartbeat_timeout_s=0.3,
+        time_scale=KILL_TIME_SCALE,
+    )
+    try:
+        sess.start_pilot_data(
+            service_url=f"sharedfs://{DATA_SITE}/ck0", affinity=DATA_SITE
+        )
+        sess.start_pilot_data(
+            service_url=f"sharedfs://{COMPUTE_SITE}/ck1", affinity=COMPUTE_SITE
+        )
+        pilots = [
+            sess.start_pilot(resource_url=f"sim://{site}", slots=1)
+            for site in (DATA_SITE, COMPUTE_SITE)
+        ]
+        for p in pilots:
+            p.wait_active()
+        by_id = {p.id: p for p in pilots}
+
+        ck = Checkpointer(sess, run_name=KILL_RUN, replication_factor=2)
+        du0 = ck.save(0, {"w": np.zeros(16, np.float32)})
+        # the initial checkpoint disperses across both failure domains
+        # BEFORE the kill, so recovery provably reads a replica
+        assert _wait_until(lambda: len(du0.locations) >= 2, timeout=20), (
+            f"replication_factor=2 not enforced: {du0.locations}"
+        )
+
+        cus, prev = [], du0
+        killed: Dict[str, str] = {}
+
+        def _kill_producer(fut):
+            victim = by_id.get(fut.pilot_id)
+            if victim is not None:
+                killed["id"] = victim.id
+                victim.fail()
+
+        with Timer() as t:
+            for i in range(KILL_CHUNKS):
+                cu = sess.submit_cu(
+                    executable="bm-survive",
+                    args=(i + 1,),
+                    input_data=[prev],
+                    output_data=[
+                        DataUnitDescription(
+                            name=f"{KILL_RUN}.ck{i + 1}", replication_factor=2
+                        )
+                    ],
+                    sim_compute_s=KILL_COMPUTE_S,
+                    max_retries=4,
+                )
+                cus.append(cu)
+                prev = cu.output
+            # kill whichever pilot produced chunk 1 the moment it seals
+            cus[0].add_done_callback(_kill_producer)
+            for cu in cus:
+                assert cu.result(timeout=240) is True
+        for i, cu in enumerate(cus):
+            sess.store.hset(f"ckpt:{KILL_RUN}", f"{i + 1:08d}", cu.output.id)
+        survivor_ran = any(cu.pilot_id != killed.get("id") for cu in cus[1:])
+        step, params, _ = ck.restore()
+        restored = step == KILL_CHUNKS and float(params["w"][0]) == KILL_CHUNKS
+        final = sess.ctx.lookup(cus[-1].output.id)
+        healed = _wait_until(lambda: len(final.locations) >= 2, timeout=20)
+        return {
+            "wall": t.wall,
+            "killed": killed.get("id", "<none>"),
+            "survivor_ran": survivor_ran,
+            "latest": ck.latest_step(),
+            "restored": restored,
+            "healed": healed,
+            "replicas": len(final.locations),
+        }
+    finally:
+        sess.close()
+
+
+# -------------------------------------------------------------- scenario
+def _run_scenarios(quick: bool) -> tuple:
+    names = list_archs()
+    if quick:
+        names = [names[0], names[len(names) // 2], names[-1]]
+
+    FUNCTIONS.register(
+        "bm-scn-load",
+        lambda cu_ctx: sum(
+            len(cu_ctx.read_input(du.id, rel))
+            for du in cu_ctx.input_dus()
+            for rel in du.manifest
+        ),
+    )
+    rows: List[str] = []
+    n_ok = 0
+    sess = Session(topology=_two_site_topology(10 * MB), time_scale=KILL_TIME_SCALE)
+    try:
+        cold = sess.start_pilot_data(
+            service_url=f"sharedfs://{DATA_SITE}/scn", affinity=DATA_SITE
+        )
+        pilot = sess.start_pilot(resource_url=f"sim://{COMPUTE_SITE}", slots=1)
+        pilot.wait_active()
+        for name in names:
+            cfg = get_config(name)
+            # fp32 weights scaled to the simulated WAN: 1 byte per 512
+            # real parameters, clamped to [64 KiB, 4 MB]
+            nbytes = max(64 * 1024, min(int(4 * MB), cfg.param_count() // 512))
+            du = sess.submit_du(
+                name=f"w-{name}",
+                files={"w": b"\0" * nbytes},
+                chunk_size=512 * 1024,
+                target=cold,
+            ).result()
+            cu = sess.submit_cu(
+                executable="bm-scn-load",
+                input_data=[du],
+                pilot=pilot,
+                sim_compute_s=0.05,
+            )
+            ok = cu.result(timeout=120) == nbytes
+            n_ok += ok
+            rows.append(
+                emit(
+                    f"mlstack.scenario.{name}.stage_sim",
+                    cu.timings.sim_stage_s * 1e6,
+                    f"params={cfg.param_count()};bytes={nbytes};ok={ok}",
+                )
+            )
+    finally:
+        sess.close()
+    return rows, n_ok, len(names)
+
+
+# ------------------------------------------------------------------- run
+def run(quick: bool = False) -> List[str]:
+    rows: List[str] = []
+
+    # ---- one-shot training DAG vs v1 submit-wait
+    seq = _run_dag_sequential("seq")
+    one = _run_dag_oneshot("oneshot")
+    for name, stats in (("sequential", seq), ("oneshot_async", one)):
+        rows.append(
+            emit(
+                f"mlstack.dag.{name}.makespan",
+                stats["makespan"] * 1e6,
+                f"T={stats['makespan']:.2f}s",
+            )
+        )
+        rows.append(
+            emit(
+                f"mlstack.dag.{name}.blocking_stage_sim",
+                stats["blocking"] * 1e6,
+                f"prefetched={stats['prefetched']:.2f}s",
+            )
+        )
+        rows.append(emit(f"mlstack.dag.{name}.wall_s", stats["wall"] * 1e6, "info"))
+    speedup = seq["makespan"] / max(one["makespan"], 1e-9)
+    rows.append(
+        emit(
+            "mlstack.claim.oneshot_dag_beats_sequential",
+            0.0,
+            f"{one['makespan']:.2f}<{seq['makespan']:.2f}({speedup:.2f}x):"
+            f"{one['makespan'] < seq['makespan']}",
+        )
+    )
+    overlap_ok = one["blocking"] == 0.0 and one["prefetched"] > 0.0
+    rows.append(
+        emit(
+            "mlstack.claim.chunk_staging_fully_overlapped",
+            0.0,
+            f"blocking={one['blocking']:.2f};"
+            f"prefetched={one['prefetched']:.2f}:{overlap_ok}",
+        )
+    )
+    wall_ok = one["wall"] < 1.1 * seq["wall"]
+    rows.append(
+        emit(
+            "mlstack.claim.oneshot_wall_not_slower",
+            0.0,
+            f"{one['wall']:.2f}s<=1.1x{seq['wall']:.2f}s:{wall_ok}",
+        )
+    )
+
+    # ---- tier-cached serving fleet cold-start
+    hot = _run_serve_fleet("hot", cached=True)
+    cold = _run_serve_fleet("cold", cached=False)
+    for name, stats in (("cached", hot), ("uncached", cold)):
+        rows.append(
+            emit(
+                f"mlstack.serve.{name}.makespan",
+                stats["fleet_makespan"] * 1e6,
+                f"T={stats['fleet_makespan']:.3f}s;warm={stats['warm']:.2f}s",
+            )
+        )
+    speedup = cold["fleet_makespan"] / max(hot["fleet_makespan"], 1e-9)
+    rows.append(
+        emit(
+            "mlstack.claim.tier_cached_fleet_beats_uncached",
+            0.0,
+            f"{hot['fleet_makespan']:.3f}<{cold['fleet_makespan']:.3f}"
+            f"({speedup:.2f}x):"
+            f"{hot['fleet_makespan'] < cold['fleet_makespan']}",
+        )
+    )
+    promoted_ok = hot["promotions"] >= 1 and hot["promoted"]
+    rows.append(
+        emit(
+            "mlstack.claim.hot_ckpt_promoted_to_mem_tier",
+            0.0,
+            f"promotions={hot['promotions']};in_cache={hot['promoted']}:"
+            f"{promoted_ok}",
+        )
+    )
+
+    # ---- checkpoint chain survives a mid-run pilot kill
+    sv = _run_survival()
+    rows.append(emit("mlstack.survival.wall_s", sv["wall"] * 1e6, "info"))
+    survive_ok = (
+        sv["killed"] != "<none>"
+        and sv["survivor_ran"]
+        and sv["latest"] == KILL_CHUNKS
+        and sv["restored"]
+    )
+    rows.append(
+        emit(
+            "mlstack.claim.ckpt_chain_survives_pilot_kill",
+            0.0,
+            f"killed={sv['killed']};survivor_ran={sv['survivor_ran']};"
+            f"latest={sv['latest']};restored={sv['restored']}:{survive_ok}",
+        )
+    )
+    rows.append(
+        emit(
+            "mlstack.claim.ckpt_du_healed_to_factor",
+            0.0,
+            f"replicas={sv['replicas']}>=2:{sv['healed']}",
+        )
+    )
+
+    # ---- every registry config as a cold-start scenario
+    scn_rows, n_ok, n_total = _run_scenarios(quick)
+    rows.extend(scn_rows)
+    rows.append(
+        emit(
+            "mlstack.claim.config_scenarios_complete",
+            0.0,
+            f"{n_ok}/{n_total}:{n_ok == n_total}",
+        )
+    )
+    return rows
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    run()

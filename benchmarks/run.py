@@ -20,6 +20,10 @@ can archive a perf trajectory artifact per run.
   bench_tiering      — storage hierarchy: mem-tier caching + quota
                        eviction vs flat re-staging for a working set
                        larger than DRAM; eviction-correctness claim
+  bench_mlstack      — ML stack on the runtime: one-shot training DAG vs
+                       submit-wait, tier-cached serving fleet cold-start,
+                       checkpoint-chain survival under pilot kill, and a
+                       per-model-config cold-start scenario sweep
   bench_store        — coordination-store write throughput: sharded
                        (striped locks + queued dispatch + group-commit
                        WAL) vs legacy single-lock mode, 1 and N writers
@@ -56,6 +60,7 @@ def main() -> None:
         bench_cost_model,
         bench_dataflow,
         bench_faults,
+        bench_mlstack,
         bench_placement,
         bench_replication,
         bench_roofline,
@@ -75,6 +80,7 @@ def main() -> None:
         "streaming": lambda: bench_streaming.run(),
         "faults": lambda: bench_faults.run(quick=args.quick),
         "tiering": lambda: bench_tiering.run(),
+        "mlstack": lambda: bench_mlstack.run(quick=args.quick),
         "store": lambda: bench_store.run(),
         "cost_model": lambda: bench_cost_model.run(),
         "roofline": lambda: bench_roofline.run(),

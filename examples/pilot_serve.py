@@ -1,7 +1,14 @@
-"""Serving driver: batched greedy decoding where the MODEL CHECKPOINT is a
-replicated Data-Unit and each serving pilot loads it from its nearest
-replica (checkpoint-as-DU is how multi-pod serving fleets warm up without
-hammering one blob store).
+"""Serving driver: a pilot fleet cold-starts decode replicas from ONE model
+checkpoint DU.
+
+The checkpoint is written once with ``replication_factor=2`` (the runtime's
+ReplicaManager disperses it across pods as it seals), and every serve CU
+declares it as ``input_data`` — so each replica's weight load goes through
+the transfer service, feeds the TierManager's access stats, and after
+``tier_promote_after`` loads the DU is PROMOTED into the site's mem-tier
+cache: the rest of the fleet warms up from the hot in-memory replica instead
+of re-pulling from the shared filesystem (checkpoint-as-DU is how multi-pod
+serving fleets warm up without hammering one blob store).
 
 Run:  PYTHONPATH=src python examples/pilot_serve.py
 """
@@ -12,61 +19,77 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.checkpoint import Checkpointer, load_checkpoint_du
+from repro.checkpoint import Checkpointer
 from repro.configs import get_config
 from repro.core import FUNCTIONS, Session, make_tpu_fleet_topology
 from repro.models import build_model
-from repro.serving import DecodeEngine
+from repro.serving import DecodeEngine, params_from_input
 
 
 def main() -> None:
     cfg = get_config("gemma3-1b-smoke")  # reduced same-family config
     api = build_model(cfg)
-    topo, _ = make_tpu_fleet_topology(pods=2, hosts_per_pod=1)
-    mgr = Session(topology=topo)
-
-    # "trained" params, checkpointed as a DU on pod0 and replicated to pod1
-    pd0 = mgr.start_pilot_data(
-        service_url="sharedfs://cluster:pod0/ckpt", affinity="cluster:pod0"
-    )
-    pd1 = mgr.start_pilot_data(
-        service_url="sharedfs://cluster:pod1/ckpt", affinity="cluster:pod1"
-    )
-    params = api.init(jax.random.PRNGKey(0))
-    ck = Checkpointer(mgr.ctx, run_name="serve-model", replicate_to=[pd1])
-    du = ck.save(0, params, target=pd0)
-    print(f"model checkpoint {du.url} replicated to {du.locations}")
-
-    # serving CU on each pod: restore from the NEAREST replica, decode
-    @FUNCTIONS.register("serve_batch")
-    def serve_batch(cu_ctx, prompt_tokens, new_tokens):
-        loc = cu_ctx.pilot.affinity
-        _, p, _ = load_checkpoint_du(cu_ctx.ctx, cu_ctx.ctx.lookup(du.id), location=loc)
-        p = jax.tree.map(jnp.asarray, p)
-        engine = DecodeEngine(api, p, batch=len(prompt_tokens), max_len=64)
-        out = engine.generate(jnp.asarray(prompt_tokens, jnp.int32), new_tokens)
-        return np.asarray(out).tolist()
-
-    for pod in (0, 1):
-        mgr.start_pilot(resource_url=f"sim://cluster:pod{pod}:host0", slots=1)
-    prompts = [[1, 5, 9, 2], [3, 3, 7, 1]]
-    t0 = time.time()
-    cus = [
-        mgr.submit_cu(
-            executable="serve_batch",
-            args=(prompts, 8),
-            input_data=[du],
-            affinity=f"cluster:pod{pod}",
+    topo, _ = make_tpu_fleet_topology(pods=2, hosts_per_pod=2)
+    with Session(
+        topology=topo,
+        enable_fault_manager=True,      # heals the ckpt DU to its factor
+        tier_cache_bytes=256 * 1024 * 1024,
+        tier_promote_after=2,           # promote on the 2nd load at a site
+    ) as s:
+        # "trained" params, checkpointed ONCE as a replicated DU
+        s.start_pilot_data(
+            service_url="sharedfs://cluster:pod0/ckpt", affinity="cluster:pod0"
         )
-        for pod in (0, 1)
-    ]
-    mgr.wait(timeout=300)
-    for cu in cus:
-        print(f"{cu.url} on {cu.pilot_id}: generated {cu.result()}")
-    # both pods must decode identically from their local replicas
-    assert cus[0].result() == cus[1].result(), "replica divergence!"
-    print(f"served 2 pods in {time.time()-t0:.1f}s — replicas consistent ✓")
-    mgr.close()
+        s.start_pilot_data(
+            service_url="sharedfs://cluster:pod1/ckpt", affinity="cluster:pod1"
+        )
+        params = api.init(jax.random.PRNGKey(0))
+        ck = Checkpointer(s, run_name="serve-model", replication_factor=2)
+        du = ck.save(0, params)
+        deadline = time.time() + 10
+        while time.time() < deadline and len(du.locations) < 2:
+            time.sleep(0.05)
+        print(f"model checkpoint {du.url} healed to {du.locations}")
+
+        # serve executable: weights come from the DU declared as CU input —
+        # the tier-cache-eligible cold-start path
+        @FUNCTIONS.register("serve_batch")
+        def serve_batch(cu_ctx, weights_du, prompt_tokens, new_tokens):
+            p = jax.tree.map(jnp.asarray, params_from_input(cu_ctx, weights_du))
+            engine = DecodeEngine(api, p, batch=len(prompt_tokens), max_len=64)
+            out = engine.generate(jnp.asarray(prompt_tokens, jnp.int32), new_tokens)
+            return np.asarray(out).tolist()
+
+        # a fleet: two pilots per pod, one decode replica each
+        for pod in (0, 1):
+            for host in (0, 1):
+                s.start_pilot(
+                    resource_url=f"sim://cluster:pod{pod}:host{host}", slots=1
+                )
+        prompts = [[1, 5, 9, 2], [3, 3, 7, 1]]
+        t0 = time.time()
+        cus = [
+            s.submit_cu(
+                executable="serve_batch",
+                args=(du.id, prompts, 8),
+                input_data=[du],
+                affinity=f"cluster:pod{pod}",
+            )
+            for pod in (0, 1)
+            for _ in range(2)
+        ]
+        outs = [cu.result(timeout=300) for cu in cus]
+        for cu, out in zip(cus, outs):
+            print(f"{cu.url} on {cu.pilot_id}: generated {out}")
+        # every replica must decode identically from its local copy
+        assert all(o == outs[0] for o in outs), "replica divergence!"
+        tm = s.tier_manager
+        stats = tm.access_stats(du.id)
+        print(
+            f"served {len(cus)} replicas in {time.time()-t0:.1f}s — "
+            f"consistent ✓  (ckpt DU accesses: {stats}, "
+            f"mem-tier promotions: {tm.promotions_total})"
+        )
 
 
 if __name__ == "__main__":

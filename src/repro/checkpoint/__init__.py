@@ -1,3 +1,23 @@
-from .checkpointer import Checkpointer, load_checkpoint_du
+from .checkpointer import (
+    Checkpointer,
+    CheckpointError,
+    CheckpointTimeout,
+    checkpoint_files,
+    decode_array,
+    encode_array,
+    flatten_tree,
+    load_checkpoint_du,
+    unflatten_tree,
+)
 
-__all__ = ["Checkpointer", "load_checkpoint_du"]
+__all__ = [
+    "CheckpointError",
+    "CheckpointTimeout",
+    "Checkpointer",
+    "checkpoint_files",
+    "decode_array",
+    "encode_array",
+    "flatten_tree",
+    "load_checkpoint_du",
+    "unflatten_tree",
+]

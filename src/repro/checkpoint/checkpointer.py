@@ -6,11 +6,18 @@ semantics give data:
 
   * location transparency — restart anywhere the DU has (or can get) a
     replica;
-  * replication — group-replicate checkpoints across pods so a pod loss
-    does not lose the run (Fig. 8 mechanics applied to model state);
+  * replication — the DU carries a ``replication_factor``; sealing it
+    hands dispersal and post-failure healing to the runtime's
+    ReplicaManager/FaultManager (failure-domain-aware, chunk-striped),
+    so a pod loss does not lose the run and NO checkpoint-layer code is
+    involved in recovery;
   * affinity scheduling — the workload manager restarts the training CU
     near a checkpoint replica instead of dragging bytes across the DCN;
   * catalog — the coordination store maps ``ckpt:<run>`` to the DU chain.
+
+Replication-factor enforcement requires the self-healing pipeline
+(``enable_fault_manager=True`` on the Session/PilotManager); without it a
+checkpoint still seals and restores, but keeps a single replica.
 
 Leaves are stored whole (single-process container); a multi-host deployment
 would store per-shard files keyed by shard index — the DU file namespace
@@ -25,24 +32,33 @@ from __future__ import annotations
 
 import io
 import json
-import threading
+from concurrent.futures import Future, ThreadPoolExecutor
+from concurrent.futures import wait as futures_wait
 from typing import Any, Dict, List, Optional, Tuple
 
 import numpy as np
 
-from ..core import DataUnit, DataUnitDescription, PilotData, RuntimeContext, replicate_group
+from ..core import DataUnit, DataUnitDescription, DUState, RuntimeContext
 
 
-def _flatten(tree: Any, prefix: str = "") -> List[Tuple[str, Any]]:
+class CheckpointError(RuntimeError):
+    """An asynchronous checkpoint commit failed."""
+
+
+class CheckpointTimeout(CheckpointError, TimeoutError):
+    """``wait()`` deadline elapsed with commits still in flight."""
+
+
+def flatten_tree(tree: Any, prefix: str = "") -> List[Tuple[str, Any]]:
     if isinstance(tree, dict):
         out = []
         for k in sorted(tree):
-            out.extend(_flatten(tree[k], f"{prefix}{k}/"))
+            out.extend(flatten_tree(tree[k], f"{prefix}{k}/"))
         return out
     return [(prefix.rstrip("/"), tree)]
 
 
-def _unflatten(items: Dict[str, Any]) -> Any:
+def unflatten_tree(items: Dict[str, Any]) -> Any:
     root: Dict[str, Any] = {}
     for path, value in items.items():
         parts = path.split("/")
@@ -53,72 +69,142 @@ def _unflatten(items: Dict[str, Any]) -> Any:
     return root
 
 
-def _encode(arr) -> bytes:
+def encode_array(arr) -> bytes:
     buf = io.BytesIO()
     np.save(buf, np.asarray(arr), allow_pickle=False)
     return buf.getvalue()
 
 
-def _decode(data: bytes) -> np.ndarray:
+def decode_array(data: bytes) -> np.ndarray:
     return np.load(io.BytesIO(data), allow_pickle=False)
 
 
+def checkpoint_files(
+    step: int, run_name: str, params: Any, opt_state: Optional[Any] = None
+) -> Dict[str, bytes]:
+    """Serialize (step, params, opt_state) into a checkpoint DU file-set."""
+    files = {"meta.json": json.dumps({"step": step, "run": run_name}).encode()}
+    for path, leaf in flatten_tree({"params": params}):
+        files[f"{path}.npy"] = encode_array(leaf)
+    if opt_state is not None:
+        for path, leaf in flatten_tree({"opt": opt_state}):
+            files[f"{path}.npy"] = encode_array(leaf)
+    return files
+
+
 class Checkpointer:
-    """Writes/reads checkpoint DUs; optionally async + group-replicated."""
+    """Writes/reads checkpoint DUs; replication rides the runtime.
+
+    Attach to a :class:`~repro.core.session.Session` (or a PilotManager —
+    anything with ``.ctx``/``.cds``); a bare :class:`RuntimeContext` also
+    works but then every ``save`` needs an explicit ``target``.
+
+    Asynchronous commits run on ONE background executor (not a thread per
+    save) and their failures are never swallowed: the next ``save()``
+    re-raises a completed commit's error, and :meth:`wait` raises — a
+    :class:`CheckpointError` for failed commits, :class:`CheckpointTimeout`
+    when the deadline elapses with commits still in flight.
+    """
 
     def __init__(
         self,
-        ctx: RuntimeContext,
+        runtime: Any,
         run_name: str = "run",
-        replicate_to: Optional[List[PilotData]] = None,
+        replication_factor: int = 1,
     ):
-        self.ctx = ctx
+        self.ctx: RuntimeContext = getattr(runtime, "ctx", runtime)
+        self.cds = getattr(runtime, "cds", None)
         self.run_name = run_name
-        self.replicate_to = replicate_to or []
-        self._pending: List[threading.Thread] = []
+        self.replication_factor = replication_factor
+        self._pool: Optional[ThreadPoolExecutor] = None
+        self._pending: List[Future] = []
 
     # ----------------------------------------------------------------- save
+    def _commit(self, du: DataUnit, step: int, target) -> DataUnit:
+        pd = target
+        if pd is None and self.cds is not None:
+            pd = self.cds.choose_pilot_data(du.description)
+        if pd is None:
+            raise CheckpointError(
+                f"{self.run_name} step {step}: no Pilot-Data target "
+                f"(start one, or pass target=)"
+            )
+        self.ctx.store.hset(f"du:{du.id}", "state", DUState.PENDING)
+        self.ctx.transfer_service.ingest(du, pd)
+        # Sealing publishes the immutable manifest; with the fault manager
+        # enabled the ReplicaManager now disperses the DU to its declared
+        # replication_factor across failure domains — off this thread.
+        du.seal()
+        self.ctx.store.hset(f"ckpt:{self.run_name}", f"{step:08d}", du.id)
+        return du
+
     def save(
         self,
         step: int,
         params: Any,
         opt_state: Optional[Any] = None,
-        target: Optional[PilotData] = None,
+        target=None,
         asynchronous: bool = False,
     ) -> DataUnit:
-        du = DataUnit(
-            DataUnitDescription(name=f"{self.run_name}.ckpt{step:08d}"),
-            self.ctx.store,
+        self.check()  # surface any completed async commit's failure NOW
+        desc = DataUnitDescription(
+            name=f"{self.run_name}.ckpt{step:08d}",
+            files=checkpoint_files(step, self.run_name, params, opt_state),
+            replication_factor=self.replication_factor,
         )
+        du = DataUnit(desc, self.ctx.store)
         self.ctx.register(du)
-        meta = {"step": step, "run": self.run_name}
-        du.add_file("meta.json", json.dumps(meta).encode())
-        for path, leaf in _flatten({"params": params}):
-            du.add_file(f"{path}.npy", _encode(leaf))
-        if opt_state is not None:
-            for path, leaf in _flatten({"opt": opt_state}):
-                du.add_file(f"{path}.npy", _encode(leaf))
-
-        def commit():
-            if target is not None:
-                self.ctx.transfer_service.ingest(du, target)
-                if self.replicate_to:
-                    replicate_group(du, target, self.replicate_to, self.ctx)
-            du.seal()
-            self.ctx.store.hset(f"ckpt:{self.run_name}", f"{step:08d}", du.id)
-
         if asynchronous:
-            t = threading.Thread(target=commit, daemon=True)
-            t.start()
-            self._pending.append(t)
+            if self._pool is None:
+                self._pool = ThreadPoolExecutor(
+                    max_workers=1, thread_name_prefix="ckpt-commit"
+                )
+            self._pending.append(self._pool.submit(self._commit, du, step, target))
         else:
-            commit()
+            self._commit(du, step, target)
         return du
 
+    def check(self) -> None:
+        """Re-raise the first failure among *completed* async commits
+        (commits still running are left pending)."""
+        still, failed = [], []
+        for fut in self._pending:
+            if not fut.done():
+                still.append(fut)
+            elif fut.exception() is not None:
+                failed.append(fut.exception())
+        self._pending = still
+        if failed:
+            raise CheckpointError(
+                f"{self.run_name}: async checkpoint commit failed: "
+                f"{failed[0]}"
+            ) from failed[0]
+
     def wait(self, timeout: float = 30.0) -> None:
-        for t in self._pending:
-            t.join(timeout)
-        self._pending = [t for t in self._pending if t.is_alive()]
+        """Block until every pending async commit settles.
+
+        Raises :class:`CheckpointError` if any commit failed and
+        :class:`CheckpointTimeout` if the deadline elapses first (the
+        unfinished commits stay pending for a later ``wait``)."""
+        pending, self._pending = self._pending, []
+        done, not_done = futures_wait(pending, timeout=timeout)
+        failed = [f.exception() for f in done if f.exception() is not None]
+        self._pending = list(not_done)
+        if failed:
+            raise CheckpointError(
+                f"{self.run_name}: async checkpoint commit failed: "
+                f"{failed[0]}"
+            ) from failed[0]
+        if not_done:
+            raise CheckpointTimeout(
+                f"{self.run_name}: {len(not_done)} checkpoint commit(s) "
+                f"still in flight after {timeout}s"
+            )
+
+    def close(self) -> None:
+        if self._pool is not None:
+            self._pool.shutdown(wait=True)
+            self._pool = None
 
     # -------------------------------------------------------------- restore
     def latest_step(self) -> Optional[int]:
@@ -163,9 +249,9 @@ def load_checkpoint_du(
             continue
         key = rel[: -len(".npy")]
         if key.startswith("params/"):
-            params_items[key[len("params/") :]] = _decode(read(rel))
+            params_items[key[len("params/") :]] = decode_array(read(rel))
         elif key.startswith("opt/"):
-            opt_items[key[len("opt/") :]] = _decode(read(rel))
-    params = _unflatten(params_items)
-    opt = _unflatten(opt_items) if opt_items else None
+            opt_items[key[len("opt/") :]] = decode_array(read(rel))
+    params = unflatten_tree(params_items)
+    opt = unflatten_tree(opt_items) if opt_items else None
     return meta["step"], params, opt

@@ -314,13 +314,32 @@ class CUContext:
                 du, sandbox, self.pilot.affinity,
                 prefix=min(avail, i + window),
             )
-            if i not in set(sandbox.chunks_held(du.id)):
-                continue  # stream rolled back mid-fetch; re-check state
-            data = sandbox.fetch_du_chunk(du.id, i)
+            data = self._read_chunk(du, sandbox, i)
+            if data is None:
+                # stream rolled back mid-fetch (or holder lost): re-check
+                time.sleep(max(self.ctx.poll_s, 0.01))
+                continue
             yield i, data
             if tm is not None:
                 tm.pins.advance_frontier(du.id, self.cu.id, i + 1)
             i += 1
+
+    def _read_chunk(self, du: DataUnit, sandbox, i: int) -> Optional[bytes]:
+        """Chunk ``i``'s bytes from the sandbox — or, when ``stage_in``
+        resolved to a *linked* access and physically moved nothing (a
+        sealed DU on a same-site PD, e.g. a sharedfs shard), straight from
+        a holder replica.  None if no live holder has the chunk (stream
+        rolled back mid-fetch)."""
+        if i in set(sandbox.chunks_held(du.id)):
+            return sandbox.fetch_du_chunk(du.id, i)
+        for loc in du.locations:
+            try:
+                pd = self.ctx.lookup(loc)
+            except KeyError:
+                continue
+            if i in set(pd.chunks_held(du.id)):
+                return pd.fetch_du_chunk(du.id, i)
+        return None
 
 
 class PilotAgent:
@@ -467,7 +486,13 @@ class PilotAgent:
             if item is None:
                 self._slots.release()
                 continue
-            if self._own_state() == PilotState.SUSPECT or self._sandbox_failed():
+            # Post-pop re-check against the STORE, not the event cache: a
+            # SUSPECT hset that happened-before this claim's push is then
+            # guaranteed visible here even if its notification hasn't been
+            # dispatched yet.  One store read per successful claim — the
+            # per-iteration checks above stay memory reads.
+            authoritative = store.hget(f"pilot:{pilot.id}", "state")
+            if authoritative == PilotState.SUSPECT or self._sandbox_failed():
                 # SUSPECT (or a recovery purge) landed while we were
                 # blocked in the pop: hand the item back instead of racing
                 # recovery with a fresh claim

@@ -106,6 +106,12 @@ class AsyncScheduler:
         # Claim staging BEFORE the CU becomes visible on a pilot queue:
         # agents then dedup onto the prefetch instead of re-staging.
         cds.pre_push_hook = self._begin_prefetch
+        # A CU parked Waiting gets no placement (and hence no pre-push
+        # prefetch) until its producers seal — but its OTHER inputs may
+        # already be ready.  Stage those toward the predicted winner now,
+        # so a serial DAG (train chunk i+1 waiting on ckpt_i) still
+        # overlaps shard stage-in with chunk i's compute.
+        cds.waiting_prefetch_hook = self._prefetch_waiting
         self._thread: Optional[threading.Thread] = None
         if autostart:
             self._thread = threading.Thread(
@@ -236,6 +242,41 @@ class AsyncScheduler:
                 pass  # pool shut down mid-flight: fall back to inline
         ts.prefetch_inputs(cu, pilot, claimed=claimed)
 
+    def _prefetch_waiting(self, cu, unmet) -> None:
+        """Speculative pipeline for ``Waiting`` CUs: claim + stage the
+        inputs that are already consumable (everything not in ``unmet``)
+        toward the pilot the placement strategy currently favors.  Pure
+        data movement — no decision is logged, no queue is touched; if the
+        release later lands the CU elsewhere, the sandbox replica still
+        helps via cheapest-replica resolution (same rationale as the
+        delayed-scheduling prefetch in ``ComputeDataService.place``).
+
+        Runs only when a staging pool exists: with ``stage_workers=0``
+        (the determinism-test configuration) submission stays free of
+        side effects beyond the dependency registration."""
+        if self._pool is None:
+            return
+        ready_ids = [d for d in cu.description.input_data if d not in unmet]
+        if not ready_ids:
+            return
+        pilot = self.cds.predict_pilot(cu)
+        if pilot is None:
+            return
+        dus = []
+        for du_id in ready_ids:
+            try:
+                dus.append(self.ctx.lookup(du_id))
+            except KeyError:
+                continue
+        ts = self.ctx.transfer_service
+        claimed = ts.claim_bulk(dus, pilot.sandbox)
+        if not claimed:
+            return
+        try:
+            self._pool.submit(ts.prefetch_inputs, cu, pilot, claimed)
+        except RuntimeError:
+            ts.release_claims(claimed)  # pool shut down mid-flight
+
     def _on_published(self, du_id: str) -> None:
         """A streaming producer advanced its published prefix: stage the
         new chunks toward every live watching consumer's sandbox.  The DU
@@ -279,6 +320,8 @@ class AsyncScheduler:
         self.ctx.store.unsubscribe(self._token)
         if self.cds.pre_push_hook is self._begin_prefetch:
             self.cds.pre_push_hook = None
+        if self.cds.waiting_prefetch_hook is self._prefetch_waiting:
+            self.cds.waiting_prefetch_hook = None
         if self._thread is not None:
             self._thread.join(timeout=2.0)
         if self._pool is not None:

@@ -288,6 +288,11 @@ class ComputeDataService:
         #: — the async scheduler hangs its prefetch pipeline here so the
         #: staging claim exists before any agent can see the CU
         self.pre_push_hook: Optional[Callable] = None
+        #: invoked with (cu, unmet) when a CU parks in ``Waiting`` — the
+        #: async scheduler speculatively prefetches the CU's already-ready
+        #: inputs (e.g. the next training chunk's shard DU) toward the
+        #: predicted placement winner while the unmet producers still run
+        self.waiting_prefetch_hook: Optional[Callable] = None
         #: DU-readiness gate (dataflow semantics) — shared by both
         #: execution modes, so sync and async release CUs identically
         self.deps = DependencyTracker(self)
@@ -454,6 +459,11 @@ class ComputeDataService:
             # Dataflow gate: park until every input DU is sealed/replicated.
             cu._set_state(CUState.WAITING)
             self.deps.add(cu, unmet)
+            if self.waiting_prefetch_hook is not None:
+                try:
+                    self.waiting_prefetch_hook(cu, unmet)
+                except Exception:
+                    pass  # speculative staging must never fail a submit
         else:
             cu._set_state(CUState.PENDING)
             # Asynchronous interface (§4.2): enqueue and return immediately.
@@ -485,6 +495,34 @@ class ComputeDataService:
         # Prefer the emptiest (simple balance; the cost model handles the
         # rest at CU-placement time).
         return max(candidates, key=lambda pd: pd.free_bytes)
+
+    def choose_pilot_data(self, desc: DataUnitDescription) -> Optional[PilotData]:
+        """Public affinity-aware PD selection (same ranking the DU submit
+        path uses) — lets layers that stage DUs on their own threads (e.g.
+        the checkpointer's async commit) pick a home without re-implementing
+        the affinity/space policy."""
+        return self._choose_pd(desc)
+
+    def predict_pilot(self, cu: ComputeUnit) -> Optional[PilotCompute]:
+        """Best placement candidate for ``cu`` *without* placing it: the
+        same strategy ranking :meth:`place` uses, but nothing is queued and
+        no decision is logged (so the sync ≡ async decision-parity witness
+        is untouched).  The async scheduler uses this to aim speculative
+        prefetch for CUs still parked ``Waiting``."""
+        desc = cu.description
+        if desc.pilot is not None:
+            try:
+                pilot: PilotCompute = self.ctx.lookup(desc.pilot)
+            except KeyError:
+                return None
+            return pilot if pilot.state in PilotState.PLACEABLE else None
+        with self._lock:
+            pilots = list(self._pilots)
+        ranked = self.strategy.rank(
+            cu,
+            self.engine.candidates(cu, pilots, tier_bw=self.strategy.uses_tier_bw),
+        )
+        return ranked[0].pilot if ranked else None
 
     def _has_free_slot(self, pilot: PilotCompute) -> bool:
         depth = self.ctx.store.qlen(pilot.queue_name)

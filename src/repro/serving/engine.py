@@ -15,7 +15,26 @@ from typing import Any, Callable
 import jax
 import jax.numpy as jnp
 
+from ..checkpoint import decode_array, unflatten_tree
 from ..models.registry import ModelApi
+
+
+def params_from_input(cu_ctx, weights_du: str) -> Any:
+    """Model params from a checkpoint DU staged as a CU *input*.
+
+    This is the serving cold-start path: every serve CU declares the
+    weights DU in ``input_data``, so each replica's stage-in goes through
+    the transfer service — recording a ``du:access`` — and after
+    ``promote_after`` accesses the TierManager promotes the DU into the
+    site's mem-tier cache.  The rest of the fleet then cold-starts from
+    the promoted hot replica instead of re-pulling across the DCN (enable
+    with ``tier_cache_bytes``/``tier_auto_promote`` on the Session).
+    """
+    items = {}
+    for rel in cu_ctx.input_manifest(weights_du):
+        if rel.startswith("params/") and rel.endswith(".npy"):
+            items[rel[7:-4]] = decode_array(cu_ctx.read_input(weights_du, rel))
+    return unflatten_tree(items)
 
 
 def make_serve_step(api: ModelApi) -> Callable:
@@ -51,6 +70,14 @@ class DecodeEngine:
         self.cache = api.init_cache(batch, max_len)
         self._step = jax.jit(make_serve_step(api))
         self._pos = 0
+
+    @classmethod
+    def from_cu_context(
+        cls, api: ModelApi, cu_ctx, weights_du: str, batch: int, max_len: int
+    ) -> "DecodeEngine":
+        """Build a replica engine inside a serve CU, loading weights from
+        the (tier-cache-eligible) checkpoint DU declared as its input."""
+        return cls(api, params_from_input(cu_ctx, weights_du), batch, max_len)
 
     def prefill(self, tokens: jnp.ndarray) -> jnp.ndarray:
         """Feed prompt tokens (teacher-forced, one step at a time — a

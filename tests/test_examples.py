@@ -36,4 +36,8 @@ def test_distributed_ensemble():
 @pytest.mark.slow
 def test_pilot_serve():
     out = _run("pilot_serve.py", timeout=900)
-    assert "replicas consistent" in out
+    assert "consistent ✓" in out
+    assert "mem-tier promotions: " in out
+    # the fleet really promoted the checkpoint into a site cache
+    promos = int(out.rsplit("mem-tier promotions: ", 1)[1].split(")")[0])
+    assert promos >= 1

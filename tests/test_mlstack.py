@@ -1,0 +1,252 @@
+"""ML stack on the modern runtime: one-shot training DAGs, runtime-healed
+checkpoint DUs, tier-cached serving cold-start, streaming-shard prefetch.
+
+These are the integration contracts of the ML-stack refactor:
+
+  * the trainer submits the WHOLE chunk DAG through the Session API before
+    any chunk runs, and sync/async scheduler modes produce identical
+    training trajectories (the data path is mode-independent);
+  * checkpoint DUs carry ``replication_factor`` and survive a mid-run
+    pilot kill purely through the runtime's ReplicaManager;
+  * serving replicas cold-start through the mem-tier cache;
+  * a Waiting chunk CU's already-ready shard input is speculatively
+    prefetched while its checkpoint producer still runs.
+"""
+
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.checkpoint import Checkpointer
+from repro.configs import get_config
+from repro.configs.base import reduced
+from repro.core import FUNCTIONS, Session, Topology, make_tpu_fleet_topology
+from repro.serving import params_from_input
+from repro.training.trainer import PilotTrainer
+
+TINY = dict(
+    total_steps=6,
+    chunk_steps=2,
+    batch=4,
+    seq=32,
+    peak_lr=3e-3,
+    n_shards=2,
+    tokens_per_shard=4_000,
+)
+
+
+def tiny_cfg():
+    return reduced(
+        get_config("h2o-danube-1.8b"),
+        n_layers=2,
+        d_model=32,
+        n_heads=2,
+        n_kv_heads=1,
+        d_ff=64,
+        vocab_size=128,
+        head_dim=16,
+    )
+
+
+def _two_pod_session(**kw) -> Session:
+    topo, _ = make_tpu_fleet_topology(pods=2, hosts_per_pod=1)
+    return Session(topology=topo, **kw)
+
+
+def _start_fleet(s: Session):
+    s.start_pilot_data(
+        service_url="sharedfs://cluster:pod0/s0", affinity="cluster:pod0"
+    )
+    s.start_pilot_data(
+        service_url="sharedfs://cluster:pod1/s1", affinity="cluster:pod1"
+    )
+    p0 = s.start_pilot(resource_url="sim://cluster:pod0:host0", slots=1)
+    p1 = s.start_pilot(resource_url="sim://cluster:pod1:host0", slots=1)
+    p0.wait_active(), p1.wait_active()
+    return p0, p1
+
+
+# ------------------------------------------------------------ one-shot DAG
+def test_trainer_submits_whole_dag_upfront():
+    with _two_pod_session() as s:
+        _start_fleet(s)
+        tr = PilotTrainer(tiny_cfg(), s, run_name="m-dag", **TINY)
+        tr.stage_data(affinities=["cluster:pod0", "cluster:pod1"])
+        chunks = tr.submit_dag()
+        # all three chunk CUs exist before any result is collected, and the
+        # tail of the chain cannot be done yet (its ckpt producer is still
+        # unsealed) — submission really was one shot, not submit-wait
+        assert len(chunks) == 3
+        assert not chunks[-1][3].done()
+        for _, _, _, cu in chunks:
+            assert cu.result(timeout=300)["losses"]
+        # every chunk's output sealed: the checkpoint chain is complete
+        assert all(cu.output.sealed for _, _, _, cu in chunks)
+
+
+@pytest.mark.parametrize("mode", ["sync", "async"])
+def test_oneshot_dag_trains_in_both_modes(mode):
+    with _two_pod_session(scheduler_mode=mode) as s:
+        _start_fleet(s)
+        tr = PilotTrainer(tiny_cfg(), s, run_name=f"m-{mode}", **TINY)
+        tr.stage_data(affinities=["cluster:pod0", "cluster:pod1"])
+        summary = tr.run()
+        assert summary["steps"] == TINY["total_steps"]
+        assert summary["improved"], summary
+        assert len(tr.ckpt_dus) == summary["chunks"] + 1
+
+
+def test_sync_async_training_trajectories_identical():
+    """The streaming shard reader cuts step-indexed windows, so the data a
+    chunk sees cannot depend on scheduling mode — byte-identical losses."""
+
+    def run(mode):
+        with _two_pod_session(scheduler_mode=mode) as s:
+            _start_fleet(s)
+            tr = PilotTrainer(tiny_cfg(), s, run_name=f"m-par-{mode}", **TINY)
+            tr.stage_data(affinities=["cluster:pod0", "cluster:pod1"])
+            return [h["losses"] for h in tr.run()["history"]]
+
+    assert run("sync") == run("async")
+
+
+# ------------------------------------------------- healed checkpoint chain
+def test_checkpoint_chain_heals_and_survives_pilot_kill():
+    """Kill a pilot mid-run: the chunk replays from the surviving
+    checkpoint replica (replication_factor=2 + ReplicaManager), the run
+    completes, and the FULL step count is restorable from the catalog."""
+    with _two_pod_session(enable_fault_manager=True, heartbeat_timeout_s=0.5) as s:
+        p0, p1 = _start_fleet(s)
+        tr = PilotTrainer(tiny_cfg(), s, run_name="m-kill", ckpt_replication=2, **TINY)
+        tr.stage_data(affinities=["cluster:pod0", "cluster:pod1"])
+        killer = threading.Timer(1.0, p0.fail)
+        killer.start()
+        try:
+            summary = tr.run(timeout_per_chunk=600)
+        finally:
+            killer.cancel()
+        assert summary["improved"], summary
+        # the dead pilot is not the only one that ever ran a chunk
+        assert p1.id in summary["pilots_used"]
+        # the checkpoint catalog restores the final step from a replica
+        # that survived the kill
+        ck = Checkpointer(s, run_name="m-kill")
+        assert ck.latest_step() == TINY["total_steps"]
+        step, params, opt = ck.restore()
+        assert step == TINY["total_steps"]
+        assert "embed" in params and opt is not None
+
+
+# ------------------------------------------------- tier-cached serving
+def test_serving_cold_start_hits_tier_cache():
+    """Repeated weight loads at one site promote the checkpoint DU into
+    the site's mem-tier cache; later replicas stage from the hot copy."""
+    topo = Topology()
+    topo.register("tier:site0", bandwidth=10e6, latency=0.01)
+    topo.register("tier:site1", bandwidth=10e6, latency=0.01)
+    with Session(
+        topology=topo,
+        tier_cache_bytes=64 * 1024 * 1024,
+        tier_auto_promote=False,  # drained explicitly: deterministic
+    ) as s:
+        cold = s.start_pilot_data(
+            service_url="sharedfs://tier:site1/cold", affinity="tier:site1"
+        )
+        pilot = s.start_pilot(resource_url="sim://tier:site0", slots=1)
+        pilot.wait_active()
+        weights = {"w": np.arange(4096, dtype=np.float32), "b": np.ones(8)}
+        ck = Checkpointer(s, run_name="m-serve")
+        du = ck.save(0, weights, target=cold)
+
+        def load_weights(cu_ctx, weights_du):
+            p = params_from_input(cu_ctx, weights_du)
+            return float(p["w"].sum() + p["b"].sum())
+
+        FUNCTIONS.register("m-serve-load", load_weights)
+        expect = float(weights["w"].sum() + weights["b"].sum())
+        tm = s.tier_manager
+        for _ in range(2):  # two cold-start loads at site0
+            cu = s.submit_cu(
+                executable="m-serve-load",
+                args=(du.id,),
+                input_data=[du],
+                pilot=pilot,
+            )
+            assert cu.result(timeout=60) == expect
+        tm.drain_promotions()
+        assert tm.promotions_total >= 1
+        cache_ids = {pd.id for pd in tm.cache_pds.values()}
+        assert cache_ids & set(du.locations), (
+            f"ckpt DU not promoted into a mem-tier cache: {du.locations}"
+        )
+        # the NEXT replica's weight load still verifies end-to-end
+        cu = s.submit_cu(
+            executable="m-serve-load",
+            args=(du.id,),
+            input_data=[du],
+            pilot=pilot,
+        )
+        assert cu.result(timeout=60) == expect
+
+
+# ------------------------------------- speculative prefetch while Waiting
+def test_waiting_chunk_prefetch_overlaps_producer_compute():
+    """A CU parked Waiting on its checkpoint producer gets its READY shard
+    input staged toward the predicted winner while the producer is still
+    running — the stage-in no longer serializes behind the chain."""
+    topo = Topology()
+    topo.register("ov:site0", bandwidth=2e6, latency=0.01)
+    topo.register("ov:site1", bandwidth=2e6, latency=0.01)
+    with Session(topology=topo, scheduler_mode="async", time_scale=0.05) as s:
+        s.start_pilot_data(service_url="sharedfs://ov:site1/data", affinity="ov:site1")
+        pilot = s.start_pilot(resource_url="sim://ov:site0", slots=1)
+        pilot.wait_active()
+        shard = s.submit_du(
+            name="ov-shard",
+            files={"x.bin": b"\x01" * (256 * 1024)},
+            chunk_size=32 * 1024,
+        )
+        FUNCTIONS.register("ov-produce", lambda cu_ctx: cu_ctx.write_output("w", b"k"))
+        FUNCTIONS.register(
+            "ov-consume",
+            lambda cu_ctx: sum(
+                len(cu_ctx.read_input(d.id, rel))
+                for d in cu_ctx.input_dus()
+                for rel in d.manifest
+            ),
+        )
+        # consumer needs BOTH the big ready shard and the producer's output
+        producer = s.submit_cu(
+            executable="ov-produce",
+            sim_compute_s=20.0,  # 1s wall at time_scale=0.05
+            output_data=[_desc("ov-ckpt")],
+        )
+        t_done = {}
+        producer.add_done_callback(lambda f: t_done.setdefault("t", time.monotonic()))
+        consumer = s.submit_cu(
+            executable="ov-consume",
+            input_data=[shard, producer.output],
+        )
+        assert consumer.result(timeout=120) == 256 * 1024 + 1
+        ts = s.ctx.transfer_service
+        spec = [
+            r
+            for r in ts.records()
+            if r.du_id == shard.id and r.dst_pd == pilot.sandbox.id
+        ]
+        assert spec, "shard never staged into the winner sandbox"
+        assert "t" in t_done
+        # the earliest shard transfer began BEFORE the producer finished:
+        # stage-in overlapped the producer's (simulated) compute
+        assert min(r.wall_start for r in spec) < t_done["t"], (
+            f"no overlap: first shard transfer at "
+            f"{min(r.wall_start for r in spec)}, producer done {t_done['t']}"
+        )
+
+
+def _desc(name):
+    from repro.core import DataUnitDescription
+
+    return DataUnitDescription(name=name)

@@ -1,12 +1,13 @@
-"""End-to-end integration: training driven THROUGH the Pilot-API —
-data-affinity placement, checkpoint-DU chains, fault recovery, elasticity."""
+"""End-to-end integration: training driven THROUGH the Pilot-API v2 —
+one-shot DAG submission, data-affinity placement, checkpoint-DU chains,
+fault recovery, elasticity."""
 
 import threading
 
 import pytest
 
 from repro.configs import get_config
-from repro.core import PilotManager, make_tpu_fleet_topology
+from repro.core import Session, make_tpu_fleet_topology
 from repro.training.trainer import PilotTrainer
 
 TINY = dict(
@@ -36,20 +37,21 @@ def tiny_cfg():
 
 
 @pytest.fixture()
-def mgr():
+def sess():
     topo, _ = make_tpu_fleet_topology(pods=2, hosts_per_pod=1)
-    m = PilotManager(topology=topo, enable_heartbeat_monitor=True, heartbeat_timeout_s=0.5)
-    yield m
-    m.shutdown()
+    with Session(
+        topology=topo, enable_heartbeat_monitor=True, heartbeat_timeout_s=0.5
+    ) as s:
+        yield s
 
 
-def test_end_to_end_training_improves_loss(mgr):
-    mgr.start_pilot_data(
+def test_end_to_end_training_improves_loss(sess):
+    sess.start_pilot_data(
         service_url="sharedfs://cluster:pod0/scratch", affinity="cluster:pod0"
     )
-    p = mgr.start_pilot(resource_url="sim://cluster:pod0:host0", slots=1)
+    p = sess.start_pilot(resource_url="sim://cluster:pod0:host0", slots=1)
     p.wait_active()
-    tr = PilotTrainer(tiny_cfg(), mgr, run_name="t-e2e", **TINY)
+    tr = PilotTrainer(tiny_cfg(), sess, run_name="t-e2e", **TINY)
     tr.stage_data(affinities=["cluster:pod0"])
     summary = tr.run()
     assert summary["steps"] == TINY["total_steps"]
@@ -60,18 +62,18 @@ def test_end_to_end_training_improves_loss(mgr):
     assert "embed" in params
 
 
-def test_training_distributes_by_affinity(mgr):
+def test_training_distributes_by_affinity(sess):
     """Shards placed at two sites → chunks run on the co-located pilots."""
-    mgr.start_pilot_data(
+    sess.start_pilot_data(
         service_url="sharedfs://cluster:pod0/s0", affinity="cluster:pod0"
     )
-    mgr.start_pilot_data(
+    sess.start_pilot_data(
         service_url="sharedfs://cluster:pod1/s1", affinity="cluster:pod1"
     )
-    p0 = mgr.start_pilot(resource_url="sim://cluster:pod0:host0", slots=1)
-    p1 = mgr.start_pilot(resource_url="sim://cluster:pod1:host0", slots=1)
+    p0 = sess.start_pilot(resource_url="sim://cluster:pod0:host0", slots=1)
+    p1 = sess.start_pilot(resource_url="sim://cluster:pod1:host0", slots=1)
     p0.wait_active(), p1.wait_active()
-    tr = PilotTrainer(tiny_cfg(), mgr, run_name="t-aff", **TINY)
+    tr = PilotTrainer(tiny_cfg(), sess, run_name="t-aff", **TINY)
     tr.stage_data(affinities=["cluster:pod0", "cluster:pod1"])
     summary = tr.run()
     assert summary["improved"]
@@ -79,16 +81,16 @@ def test_training_distributes_by_affinity(mgr):
     assert len(summary["pilots_used"]) == 2, summary["pilots_used"]
 
 
-def test_training_survives_pilot_failure(mgr):
+def test_training_survives_pilot_failure(sess):
     """Kill the only active pilot mid-run: the heartbeat monitor requeues
     the chunk; a standby pilot resumes from the checkpoint DU."""
-    mgr.start_pilot_data(
+    sess.start_pilot_data(
         service_url="sharedfs://cluster:pod0/s", affinity="cluster:pod0"
     )
-    p0 = mgr.start_pilot(resource_url="sim://cluster:pod0:host0", slots=1)
-    p1 = mgr.start_pilot(resource_url="sim://cluster:pod1:host0", slots=1)
+    p0 = sess.start_pilot(resource_url="sim://cluster:pod0:host0", slots=1)
+    p1 = sess.start_pilot(resource_url="sim://cluster:pod1:host0", slots=1)
     p0.wait_active(), p1.wait_active()
-    tr = PilotTrainer(tiny_cfg(), mgr, run_name="t-ft", **TINY)
+    tr = PilotTrainer(tiny_cfg(), sess, run_name="t-ft", **TINY)
     tr.stage_data(affinities=["cluster:pod0"])
 
     killer = threading.Timer(1.0, p0.fail)
@@ -102,16 +104,17 @@ def test_training_survives_pilot_failure(mgr):
     assert p1.id in summary["pilots_used"]
 
 
-def test_elastic_scale_up_mid_run(mgr):
-    """A pilot added mid-run picks up later chunks (elastic scaling)."""
-    mgr.start_pilot_data(
+def test_elastic_scale_up_mid_run(sess):
+    """A pilot added mid-run picks up later chunks (elastic scaling) —
+    even though the WHOLE DAG was submitted before the pilot existed."""
+    sess.start_pilot_data(
         service_url="sharedfs://cluster:pod0/s", affinity="cluster:pod0"
     )
-    p0 = mgr.start_pilot(resource_url="sim://cluster:pod0:host0", slots=1)
+    p0 = sess.start_pilot(resource_url="sim://cluster:pod0:host0", slots=1)
     p0.wait_active()
     tr = PilotTrainer(
         tiny_cfg(),
-        mgr,
+        sess,
         run_name="t-elastic",
         total_steps=8,
         chunk_steps=2,
@@ -125,7 +128,7 @@ def test_elastic_scale_up_mid_run(mgr):
     added = {}
 
     def add_pilot():
-        p_new = mgr.start_pilot(resource_url="sim://cluster:pod0:host0", slots=1)
+        p_new = sess.start_pilot(resource_url="sim://cluster:pod0:host0", slots=1)
         added["pilot"] = p_new
         # freeze the original so the new pilot must take over
         p0.cancel()
