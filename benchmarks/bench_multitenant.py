@@ -1,0 +1,278 @@
+"""Multi-tenant QoS benchmark: 1 flooding heavy tenant + N light tenants.
+
+Three runs of the same light workload (one short CU per light tenant on a
+shared 3-pilot farm), replayed on the simulated transfer/compute clock:
+
+  uncontended — the light tenants have the farm to themselves: the
+                baseline per-CU latency.
+  fair        — a heavy tenant floods HEAVY_N short CUs first, but is
+                registered with a ``cu_slots`` admission quota: surplus
+                work parks in the AdmissionController and drip-feeds as
+                earlier CUs finish, so the shared queue stays shallow.
+  flood       — the same flood with NO quota (informational contrast):
+                every heavy CU is admitted instantly and the light tenants
+                queue behind the whole backlog.
+
+Per-light-CU latency is replayed from the recorded schedule: the sum of
+simulated durations of same-pilot CUs that started between the light CU's
+submission and its own start, plus its own simulated duration — i.e. the
+queue wait it actually experienced on its 1-slot pilot, on the virtual
+clock.  The CI-gated claim is the tentpole acceptance bound: light p99
+under the quota-fair flood stays within 1.5x the uncontended p99.
+
+A second mini-scenario exercises tenant-aware eviction: a rival tenant
+fills a shared edge PD and requests room while another tenant's pinned
+working set lives there — evictions must happen (the requestor's own and
+unpinned redundant chunks) yet never touch the pinned replica.  Emitted as
+a claim row, gated like the recovery-path claims.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Optional
+
+from repro.core import (
+    CoordinationStore,
+    CUState,
+    DataUnit,
+    DataUnitDescription,
+    FUNCTIONS,
+    PilotData,
+    PilotDataDescription,
+    PilotManager,
+    ResourceQuota,
+    RuntimeContext,
+    Session,
+    TierManager,
+    Topology,
+    TransferService,
+)
+
+from .common import Timer, emit, modeled_makespan
+
+SITE = "mt:site0"
+N_PILOTS = 3
+N_LIGHT = 3
+LIGHT_SIM = 0.5
+HEAVY_SIM = 0.05
+HEAVY_QUOTA_SLOTS = 2
+TIME_SCALE = 0.05  # real sleep per simulated second: keeps ordering honest
+
+CHUNK = 16 * 1024
+DU_BYTES = 4 * CHUNK
+
+
+def _topology() -> Topology:
+    topo = Topology()
+    topo.register(SITE, bandwidth=30e6, latency=0.01)
+    return topo
+
+
+def _noop(cu_ctx):
+    return "ok"
+
+
+def _run_contention(
+    n_heavy: int, heavy_quota: Optional[int]
+) -> Dict[str, object]:
+    FUNCTIONS.register("mt-bench-noop", _noop)
+    mgr = PilotManager(topology=_topology(), time_scale=TIME_SCALE)
+    try:
+        pilots = [
+            mgr.start_pilot(resource_url=f"sim://{SITE}/p{i}", slots=1)
+            for i in range(N_PILOTS)
+        ]
+        for p in pilots:
+            p.wait_active()
+        heavies = []
+        if n_heavy:
+            quota = (
+                ResourceQuota(cu_slots=heavy_quota) if heavy_quota else None
+            )
+            heavy = Session(manager=mgr, tenant="heavy", quota=quota)
+            heavies = [
+                heavy.submit_cu(
+                    executable="mt-bench-noop", sim_compute_s=HEAVY_SIM
+                )
+                for _ in range(n_heavy)
+            ]
+        lights, submit_wall = [], []
+        light_sessions = [
+            Session(manager=mgr, tenant=f"light{i}") for i in range(N_LIGHT)
+        ]
+        for ls in light_sessions:
+            submit_wall.append(time.monotonic())
+            lights.append(
+                ls.submit_cu(
+                    executable="mt-bench-noop", sim_compute_s=LIGHT_SIM
+                )
+            )
+        with Timer() as t:
+            done = mgr.wait(timeout=300)
+        assert done, "workload did not drain"
+        every = heavies + lights
+        assert all(c.state == CUState.DONE for c in every)
+
+        def sim_of(fut) -> float:
+            tm = mgr.store.hget(f"cu:{fut.id}", "timings") or {}
+            return tm.get("sim_stage_s", 0.0) + tm.get("sim_compute_s", 0.0)
+
+        # replay each light CU's latency from the recorded schedule
+        latencies: List[float] = []
+        for wall, lf in zip(submit_wall, lights):
+            mine = lf.timings.run_start
+            waited = sum(
+                sim_of(o)
+                for o in every
+                if o.id != lf.id
+                and o.pilot_id == lf.pilot_id
+                and wall <= o.timings.run_start < mine
+            )
+            latencies.append(waited + sim_of(lf))
+        makespan = modeled_makespan([sim_of(c) for c in every], N_PILOTS)
+        adm = mgr.cds.admission
+        return {
+            "latencies": latencies,
+            "p99": max(latencies),
+            "makespan": makespan,
+            "parked_total": adm.parked_total,
+            "wall": t.wall,
+        }
+    finally:
+        mgr.shutdown()
+
+
+def _run_eviction_scenario() -> Dict[str, object]:
+    ctx = RuntimeContext(store=CoordinationStore(), topology=_topology())
+    TransferService(ctx)
+    tm = TierManager(ctx, auto_promote=False)
+    base = ctx.register(
+        PilotData(
+            PilotDataDescription(
+                service_url=f"sharedfs://{SITE}/base", affinity=SITE
+            ),
+            ctx,
+        )
+    )
+    edge = ctx.register(
+        PilotData(
+            PilotDataDescription(
+                service_url=f"mem://{SITE}/edge", affinity=SITE
+            ),
+            ctx,
+        )
+    )
+
+    def mk_du(name: str, tenant: str) -> DataUnit:
+        du = DataUnit(
+            DataUnitDescription(
+                name=name,
+                files={"x": name[:1].encode() * DU_BYTES},
+                chunk_size=CHUNK,
+                tenant=tenant,
+            ),
+            ctx.store,
+        )
+        return ctx.register(du)
+
+    own = [mk_du(f"own{i}", "alpha") for i in range(2)]
+    pinned = mk_du("pinned", "beta")
+    loose = mk_du("loose", "beta")
+    for du in [*own, pinned, loose]:
+        base.put_du(du)
+        edge.copy_du_from(du, base)
+    ctx.store.hset("cu:beta-live", "state", CUState.RUNNING)
+    tm.pins.pin(pinned.id, "beta-live")
+    # alpha asks for more than its own redundant bytes: its replicas go
+    # first, then beta's UNPINNED one — never the pinned working set
+    freed = tm.make_room(edge, 3 * DU_BYTES, tenant="alpha")
+    result = {
+        "freed": freed,
+        "evictions": len(tm.evictions),
+        "cross": tm.cross_tenant_evictions_total,
+        "cross_pinned": tm.cross_tenant_pinned_evictions,
+        "pinned_intact": (
+            pinned.id in edge.du_ids() and pinned.has_full_coverage()
+        ),
+    }
+    tm.stop()
+    return result
+
+
+def run(quick: bool = False) -> List[str]:
+    rows: List[str] = []
+    n_heavy = 18 if quick else 48
+    base = _run_contention(n_heavy=0, heavy_quota=None)
+    fair = _run_contention(n_heavy=n_heavy, heavy_quota=HEAVY_QUOTA_SLOTS)
+    flood = _run_contention(n_heavy=n_heavy, heavy_quota=None)
+
+    rows.append(
+        emit(
+            "multitenant.light.uncontended.p99_latency",
+            base["p99"] * 1e6,
+            f"p99={base['p99']:.2f}s",
+        )
+    )
+    rows.append(
+        emit(
+            "multitenant.light.fair.p99_latency",
+            fair["p99"] * 1e6,
+            f"p99={fair['p99']:.2f}s;parked={fair['parked_total']}",
+        )
+    )
+    rows.append(
+        emit(
+            "multitenant.light.flood.p99_latency",
+            flood["p99"] * 1e6,
+            f"p99={flood['p99']:.2f}s;no-quota contrast",
+        )
+    )
+    rows.append(
+        emit(
+            "multitenant.fair.makespan",
+            fair["makespan"] * 1e6,
+            f"T={fair['makespan']:.2f}s;n={n_heavy}+{N_LIGHT}",
+        )
+    )
+    bound = 1.5 * base["p99"]
+    ok = fair["p99"] <= bound
+    rows.append(
+        emit(
+            "multitenant.claim.light_p99_bound",
+            fair["p99"] * 1e6,
+            f"{fair['p99']:.2f}s<=1.5x{base['p99']:.2f}s:{ok}",
+        )
+    )
+    # admission really gated the heavy tenant in the fair run
+    gated = fair["parked_total"] >= n_heavy - HEAVY_QUOTA_SLOTS
+    rows.append(
+        emit(
+            "multitenant.claim.heavy_backlog_parked",
+            float(fair["parked_total"]),
+            f"parked={fair['parked_total']}>={n_heavy - HEAVY_QUOTA_SLOTS}"
+            f":{gated}",
+        )
+    )
+    ev = _run_eviction_scenario()
+    ev_ok = (
+        ev["evictions"] > 0
+        and ev["cross"] >= 1
+        and ev["cross_pinned"] == 0
+        and ev["pinned_intact"]
+    )
+    rows.append(
+        emit(
+            "multitenant.claim.no_cross_tenant_pinned_eviction",
+            float(ev["evictions"]),
+            f"evictions={ev['evictions']};cross={ev['cross']};"
+            f"cross_pinned={ev['cross_pinned']};"
+            f"pinned_intact={ev['pinned_intact']}:{ev_ok}",
+        )
+    )
+    return rows
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    run(quick=True)

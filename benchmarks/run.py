@@ -27,6 +27,9 @@ can archive a perf trajectory artifact per run.
   bench_store        — coordination-store write throughput: sharded
                        (striped locks + queued dispatch + group-commit
                        WAL) vs legacy single-lock mode, 1 and N writers
+  bench_multitenant  — QoS under tenant contention: light-tenant p99
+                       uncontended vs quota-fair vs unquota'd flood, plus
+                       the tenant-aware-eviction pinned-set claim
   bench_cost_model   — §6.1 calculus vs oracle + replication degree
   bench_roofline     — assignment §Roofline terms from dry-run artifacts
 """
@@ -61,6 +64,7 @@ def main() -> None:
         bench_dataflow,
         bench_faults,
         bench_mlstack,
+        bench_multitenant,
         bench_placement,
         bench_replication,
         bench_roofline,
@@ -82,6 +86,7 @@ def main() -> None:
         "tiering": lambda: bench_tiering.run(),
         "mlstack": lambda: bench_mlstack.run(quick=args.quick),
         "store": lambda: bench_store.run(),
+        "multitenant": lambda: bench_multitenant.run(quick=args.quick),
         "cost_model": lambda: bench_cost_model.run(),
         "roofline": lambda: bench_roofline.run(),
     }

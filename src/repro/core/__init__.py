@@ -82,12 +82,19 @@ from .replication import (
 )
 from .scheduler import AsyncScheduler, SchedulerEvent
 from .services import (
+    AdmissionController,
     ComputeDataService,
     DependencyTracker,
     PilotComputeService,
     PilotDataService,
 )
 from .session import Session
+from .tenancy import (
+    DEFAULT_TENANT,
+    ResourceQuota,
+    Tenant,
+    TenantRegistry,
+)
 from .tiering import (
     EvictionPolicy,
     PinRegistry,
@@ -120,8 +127,9 @@ __all__ = [
     "PilotCompute", "PilotComputeDescription", "PilotData", "PilotDataDescription",
     "PilotState", "QuotaExceeded", "RuntimeContext",
     "DemandReplicator", "replicate_group", "replicate_sequential",
-    "ComputeDataService", "DependencyTracker",
+    "AdmissionController", "ComputeDataService", "DependencyTracker",
     "PilotComputeService", "PilotDataService",
+    "DEFAULT_TENANT", "ResourceQuota", "Tenant", "TenantRegistry",
     "Session", "CUFuture", "DUFuture", "gather",
     "FutureError", "FutureTimeoutError",
     "ComputeFailedError", "DataUnitFailedError",

@@ -622,7 +622,19 @@ class PilotAgent:
                 if waits <= MAX_QUOTA_WAITS and not self._dead.is_set():
                     if cu._cas_state(CUState.STAGING, CUState.PENDING):
                         time.sleep(max(self.ctx.poll_s, 0.01))  # pace
-                        store.push(GLOBAL_QUEUE, {"cu": cu.id, "dup": False})
+                        admission = getattr(ctx, "admission", None)
+                        if admission is not None:
+                            # re-enter tenant admission: a tenant whose
+                            # own resident bytes caused the pressure
+                            # parks there instead of hot-looping through
+                            # the global queue (starvation valve); every
+                            # other case pushes back to the global queue
+                            # exactly as before
+                            admission.requeue(cu)
+                        else:
+                            store.push(
+                                GLOBAL_QUEUE, {"cu": cu.id, "dup": False}
+                            )
                         return
                 raise
             cu.timings.stage_end = time.monotonic()

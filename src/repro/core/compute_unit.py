@@ -92,6 +92,9 @@ class ComputeUnitDescription:
     est_compute_s: float = 0.0
     #: estimated simulated compute seconds for DES benchmarks
     sim_compute_s: float = 0.0
+    #: owning tenant (multi-tenant QoS: admission quotas, fair-share
+    #: placement, tenant-aware eviction); "default" = unlimited/neutral
+    tenant: str = "default"
 
     def to_json(self) -> Dict[str, Any]:
         d = dataclasses.asdict(self)
@@ -156,6 +159,9 @@ class ComputeUnit:
         store.hset(f"cu:{self.id}", "state", CUState.NEW)
         store.hset(f"cu:{self.id}", "desc", description.to_json())
         store.hset(f"cu:{self.id}", "pilot", None)
+        # tenant is read store-side by admission/placement/preemption so
+        # they never need a live handle
+        store.hset(f"cu:{self.id}", "tenant", description.tenant)
         # store-side attempt counter: orphan recovery must be able to bump
         # retries even when no live ComputeUnit handle exists (a crash-
         # looping pilot would otherwise requeue the same CU forever)

@@ -109,10 +109,14 @@ class DataUnitDescription:
     #: (derived from ``size_hint``/``chunk_size``); overrides ``ready_chunks``
     #: when set and a size hint is available
     ready_fraction: Optional[float] = None
+    #: owning tenant (multi-tenant QoS: sandbox-byte quotas and
+    #: tenant-aware eviction); "default" = unlimited/neutral
+    tenant: str = "default"
 
     def to_json(self) -> Dict:
         return {
             "name": self.name,
+            "tenant": self.tenant,
             "files": sorted(self.files),
             "affinity": self.affinity,
             "size_hint": self.size_hint,
@@ -210,6 +214,9 @@ class DataUnit:
         store.hset(f"du:{self.id}", "state", DUState.NEW)
         store.hset(f"du:{self.id}", "name", description.name)
         store.hset(f"du:{self.id}", "affinity", description.affinity)
+        # tenant is read store-side (eviction ordering, byte accounting,
+        # transfer attribution) so no live handle is ever required
+        store.hset(f"du:{self.id}", "tenant", description.tenant)
         store.hset(f"du:{self.id}", "locations", [])
         store.hset(f"du:{self.id}", "manifest", dict(self._manifest))
         store.hset(f"du:{self.id}", "checksums", dict(self._checksums))

@@ -101,6 +101,7 @@ class PilotManager:
             auto_promote=tier_auto_promote,
         )
         self._session = None  # lazy Pilot-API v2 facade (see .session)
+        self._sessions: list = []  # every attached Session (incl. facade)
         self.heartbeat_monitor: Optional[HeartbeatMonitor] = None
         self.straggler_mitigator: Optional[StragglerMitigator] = None
         self.fault_manager: Optional[FaultManager] = None
@@ -147,6 +148,18 @@ class PilotManager:
             self._session = Session(manager=self)
         return self._session
 
+    # every Session registers here so shutdown() can drain their
+    # dispatcher threads before the store goes away (a session attached
+    # via Session(manager=...) used to outlive the store's dispatcher,
+    # leaving its futures waiting on events that never arrive)
+    def _attach_session(self, session) -> None:
+        if session not in self._sessions:
+            self._sessions.append(session)
+
+    def _detach_session(self, session) -> None:
+        if session in self._sessions:
+            self._sessions.remove(session)
+
     # ------------------------------------------------ deprecated v1 shims
     def submit_du(self, **kw) -> "DataUnit":
         """Deprecated Pilot-API v1 entry point (kept as a thin shim)."""
@@ -190,6 +203,15 @@ class PilotManager:
         return out
 
     def shutdown(self) -> None:
+        # teardown order matters: every attached session's future
+        # dispatcher drains FIRST (they consume store events), then the
+        # scheduler reactor, then cds.cancel() — which stops the
+        # dependency tracker and admission controller pumps — and only
+        # then the store itself closes its event dispatcher.
+        for sess in list(self._sessions):
+            with contextlib.suppress(Exception):
+                sess._dispatcher.stop()
+        self._sessions.clear()
         if self._session is not None:
             with contextlib.suppress(Exception):
                 self._session._dispatcher.stop()

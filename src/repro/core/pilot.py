@@ -69,6 +69,12 @@ class RuntimeContext:
     #: attached lazily by the TierManager (avoids an import cycle): owns
     #: tier classification, access stats, and quota-driven eviction
     tier_manager: Optional[Any] = None
+    #: attached lazily by the AdmissionController (avoids an import
+    #: cycle): per-tenant QoS gate between CU release and placement
+    admission: Optional[Any] = None
+    #: attached lazily alongside the admission controller: tenant
+    #: identities, quotas, and fair-share usage accounting
+    tenant_registry: Optional[Any] = None
 
     def sleep_sim(self, sim_seconds: float) -> None:
         if self.time_scale > 0 and sim_seconds > 0:
@@ -170,6 +176,12 @@ class PilotData:
         with self._lock:
             return sorted(self._dus)
 
+    def du_bytes(self) -> Dict[str, int]:
+        """Accounting snapshot: du_id -> bytes this PD holds for it (the
+        per-tenant resident-byte quotas sum these across live PDs)."""
+        with self._lock:
+            return dict(self._dus)
+
     def has_du(self, du_id: str) -> bool:
         """True iff this PD holds a FULL replica (every chunk) of the DU.
 
@@ -227,7 +239,14 @@ class PilotData:
                 need = nbytes - avail
             tm = self.ctx.tier_manager
             freed = (
-                tm.make_room(self, need, exclude_du=du.id)
+                tm.make_room(
+                    self,
+                    need,
+                    exclude_du=du.id,
+                    # requestor identity: a tenant's pressure reclaims its
+                    # OWN redundant chunks before touching anyone else's
+                    tenant=getattr(du.description, "tenant", None),
+                )
                 if tm is not None
                 else 0
             )

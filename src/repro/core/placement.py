@@ -26,7 +26,7 @@ import abc
 import dataclasses
 import random
 import threading
-from typing import Callable, Dict, List, Sequence
+from typing import Callable, Dict, List, Optional, Sequence
 
 from .affinity import match_affinity
 from .compute_unit import ComputeUnit
@@ -114,11 +114,14 @@ class PlacementEngine:
         full replicas; partial holdings only pay for the remainder)."""
         t_stage = 0.0
         ts = self.ctx.transfer_service
+        tenant = getattr(cu.description, "tenant", None)
         for du_id in cu.description.input_data:
             du = self.ctx.lookup(du_id)
             if pilot.sandbox.has_du(du.id):
                 continue  # pilot-level cache hit
-            t_stage += ts.estimate_stage_cost(du, pilot.affinity, pilot.sandbox)
+            t_stage += ts.estimate_stage_cost(
+                du, pilot.affinity, pilot.sandbox, tenant=tenant
+            )
         return t_stage
 
     def _chunk_presence(self, cu: ComputeUnit, pilot: PilotCompute) -> tuple:
@@ -220,6 +223,14 @@ class PlacementStrategy(abc.ABC):
     #: strategies that rank on Candidate.tier_bw set this True so the
     #: engine computes it (it costs an extra per-chunk holder scan)
     uses_tier_bw: bool = False
+    #: runtime context, attached by :meth:`bind` — tenant-aware
+    #: strategies read the TenantRegistry and queue state through it
+    ctx: Optional[RuntimeContext] = None
+
+    def bind(self, ctx: RuntimeContext) -> None:
+        """Attach the runtime context (called once by the CDS).  The base
+        implementation just stores it; cost-only strategies ignore it."""
+        self.ctx = ctx
 
     @abc.abstractmethod
     def rank(
@@ -317,6 +328,109 @@ class RoundRobinStrategy(PlacementStrategy):
             start = self._next % len(ordered)
             self._next += 1
         return ordered[start:] + ordered[:start]
+
+
+def _queued_cu_ids(store, queue_name: str) -> List[str]:
+    return [
+        item["cu"] if isinstance(item, dict) else item
+        for item in store.qpeek(queue_name)
+    ]
+
+
+@register_strategy("weighted-fair-share")
+class WeightedFairShareStrategy(PlacementStrategy):
+    """Tenant-fair §6.1: cost plus a same-tenant backlog penalty.
+
+    Each candidate's score is T_Q + T_X plus a penalty proportional to how
+    many of the *submitting tenant's own* CUs already sit in that pilot's
+    queue, divided by the tenant's fair-share weight.  A flooding tenant
+    therefore spreads itself across pilots (its own backlog repels it)
+    instead of monopolizing one queue after another, while a light tenant
+    — with no backlog anywhere — ranks on pure cost and slips in front of
+    the flood.  Weighted round-robin across tenants, emergent rather than
+    scheduled: higher weight → smaller penalty → denser packing allowed.
+
+    Degenerates to exactly the ``cost`` ordering when the registry is
+    absent or every queued CU belongs to the submitting tenant's own
+    single-tenant world."""
+
+    def __init__(self, penalty_s: float = 0.05) -> None:
+        #: seconds of score penalty per own-tenant queued CU at weight 1.0
+        self.penalty_s = penalty_s
+
+    def rank(self, cu, candidates):
+        ctx = self.ctx
+        registry = getattr(ctx, "tenant_registry", None) if ctx else None
+        if registry is None:
+            return sorted(candidates, key=lambda c: (c.score, c.pilot.id))
+        tenant = getattr(cu.description, "tenant", None) or "default"
+        weight = registry.weight(tenant)
+        store = ctx.store
+
+        def penalty(c: Candidate) -> float:
+            own = 0
+            for cu_id in _queued_cu_ids(store, c.pilot.queue_name):
+                holder = store.hget(f"cu:{cu_id}", "tenant") or "default"
+                if holder == tenant:
+                    own += 1
+            return own * self.penalty_s / weight
+
+        return sorted(
+            candidates, key=lambda c: (c.score + penalty(c), c.pilot.id)
+        )
+
+
+@register_strategy("priority")
+class PriorityStrategy(PlacementStrategy):
+    """Priority-discounted §6.1: queue wait counts only the work of
+    tenants at equal-or-higher priority.  Lower-priority queued CUs are
+    bypassable (the admission controller's queued-only preemption can
+    displace them), so a high-priority CU ranks pilots as if that backlog
+    were absent — it optimizes for where IT will start soonest, and the
+    preemption step in ``ComputeDataService.place`` then makes the
+    assumption real.  Ties (and the registry-less case) fall back to the
+    plain cost ordering."""
+
+    def __init__(self, avg_cu_estimate_s: float = 0.05) -> None:
+        self.avg_cu_estimate_s = avg_cu_estimate_s
+
+    def _cu_estimate(self, cu_id: str) -> float:
+        try:
+            d = self.ctx.lookup(cu_id).description
+            return max(
+                d.sim_compute_s, d.est_compute_s, self.avg_cu_estimate_s
+            )
+        except KeyError:
+            return self.avg_cu_estimate_s
+
+    def rank(self, cu, candidates):
+        ctx = self.ctx
+        registry = getattr(ctx, "tenant_registry", None) if ctx else None
+        if registry is None:
+            return sorted(candidates, key=lambda c: (c.score, c.pilot.id))
+        tenant = getattr(cu.description, "tenant", None) or "default"
+        my_pri = registry.get(tenant).priority
+        store = ctx.store
+
+        def discounted_tq(c: Candidate) -> float:
+            tq = 0.0
+            for cu_id in _queued_cu_ids(store, c.pilot.queue_name):
+                holder = store.hget(f"cu:{cu_id}", "tenant") or "default"
+                if registry.get(holder).priority >= my_pri:
+                    tq += self._cu_estimate(cu_id)
+            for cu_id in c.pilot.running_cus():
+                # running work is never preemptible: it always counts
+                tq += self._cu_estimate(cu_id)
+            return tq / max(1, c.pilot.slots)
+
+        return sorted(
+            candidates,
+            key=lambda c: (
+                discounted_tq(c) + c.t_stage,
+                c.score,
+                c.pilot.id,
+            ),
+        )
 
 
 @register_strategy("random")

@@ -203,6 +203,11 @@ class AsyncScheduler:
             self._on_published(ev.subject)
         elif ev.kind == "cu-state" and ev.value in CUState.TERMINAL:
             self.cds.recheck_delayed()
+            # a slot freed up tenant-side too: re-admit parked CUs on the
+            # reactor thread (the admission pump also drains — poke is
+            # idempotent — but reacting here keeps async-mode admission
+            # latency event-driven instead of cross-thread)
+            self.cds.admission.poke()
         elif ev.kind == "pilot-state" and ev.value in (
             "Active", "Suspect", "Failed"
         ):

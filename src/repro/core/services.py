@@ -21,9 +21,10 @@ The CDS scheduler implements the paper's placement loop verbatim (§5):
 
 from __future__ import annotations
 
+import collections
 import threading
 import time
-from typing import Callable, Dict, List, Optional, Set
+from typing import Callable, Deque, Dict, List, Optional, Set, Tuple
 
 from .agent import GLOBAL_QUEUE
 from .compute_unit import ComputeUnit, ComputeUnitDescription, CUState
@@ -38,6 +39,7 @@ from .pilot import (
     PilotState,
     RuntimeContext,
 )
+from .tenancy import DEFAULT_TENANT, TenantRegistry
 from .transfer import TransferService
 
 
@@ -181,7 +183,10 @@ class DependencyTracker:
         if cu._cas_state(CUState.WAITING, CUState.PENDING):
             with self._lock:
                 self.release_log.append(cu_id)
-            self.ctx.store.push("cds:incoming", cu_id)
+            # release lands on cds:incoming via the tenant admission gate
+            # (pass-through for the default tenant, so the release_log
+            # ordering witness is unchanged in single-tenant runs)
+            self.cds.admission.submit(cu)
 
     def _du_failed(self, du_id: str) -> None:
         with self._lock:
@@ -255,6 +260,282 @@ class DependencyTracker:
         self._pump.stop()
 
 
+class AdmissionController:
+    """Per-tenant QoS gate between CU release and placement.
+
+    Every path that used to push a Pending CU straight onto
+    ``cds:incoming`` — submission with met dependencies, a
+    DependencyTracker release, the agent's sandbox-backpressure requeue —
+    now routes through :meth:`submit`/:meth:`requeue`.  A tenant over its
+    :class:`~repro.core.tenancy.ResourceQuota` (CU slots, resident
+    sandbox bytes) has its CUs *parked*: state stays ``Pending``, no
+    retry attempt or quota-wait is burned, and the CU re-enters placement
+    — weighted-fair-share ordered across starved tenants — as the
+    tenant's earlier CUs turn terminal (observed via the same
+    StoreEventPump machinery the DependencyTracker rides).
+
+    With only the bare default tenant (unlimited quota) the controller is
+    a deterministic synchronous pass-through, so single-tenant callers
+    observe the exact pre-QoS release order (the sync ≡ async decision
+    witnesses stay valid).
+
+    The controller also implements *queued-only preemption*: when a CU of
+    a strictly higher-priority tenant would otherwise fall to the global
+    queue, one queued (never running) CU of the lowest-priority tenant is
+    atomically removed from its pilot queue (``qremove`` doubles as the
+    did-any-agent-claim-it CAS) and parked at the front of its tenant's
+    line; the high-priority CU takes the vacated queue position.
+    """
+
+    def __init__(self, cds: "ComputeDataService"):
+        self.cds = cds
+        self.ctx = cds.ctx
+        if self.ctx.tenant_registry is None:
+            self.ctx.tenant_registry = TenantRegistry(self.ctx)
+        self.registry: TenantRegistry = self.ctx.tenant_registry
+        self.ctx.admission = self
+        self._lock = threading.Lock()
+        #: tenant -> parked CU ids, oldest first (FIFO within a tenant)
+        self._parked: Dict[str, Deque[str]] = {}
+        #: CU ids admitted in order (observability / fairness tests)
+        self.admission_log: List[str] = []
+        self.parked_total = 0
+        #: audit of queued-CU preemptions: {"cu", "tenant", "by",
+        #: "by_tenant", "pilot"}
+        self.preemptions: List[Dict] = []
+        # capacity returns on terminal CU transitions: drain parked work
+        # on the pump thread (same subscribe → queue → thread shape as the
+        # DependencyTracker, so no store mutation runs on the dispatcher)
+        self._pump = StoreEventPump(
+            self.ctx.store,
+            handler=self._on_cu_event,
+            prefix="cu:",
+            accept=lambda ev: (
+                ev.op == "hset"
+                and ev.field == "state"
+                and ev.value in CUState.TERMINAL
+            ),
+            name="admission-gate",
+        )
+
+    # ------------------------------------------------------------ admission
+    def _estimate(self, cu: ComputeUnit) -> float:
+        d = cu.description
+        return max(d.sim_compute_s, d.est_compute_s, self.cds.avg_cu_estimate_s)
+
+    def _tenant_of(self, cu: ComputeUnit) -> str:
+        return getattr(cu.description, "tenant", None) or DEFAULT_TENANT
+
+    def _over_quota(self, tenant: str, resident: Optional[int]) -> bool:
+        """Quota check for admitting ONE more CU of ``tenant``.  Callers
+        compute ``resident`` outside the controller lock (it scans PDs and
+        reads the store) and only when a byte quota is actually set."""
+        quota = self.registry.get(tenant).quota
+        if (
+            quota.cu_slots is not None
+            and self.registry.inflight(tenant) >= quota.cu_slots
+        ):
+            return True
+        if (
+            quota.sandbox_bytes is not None
+            and resident is not None
+            and resident >= quota.sandbox_bytes
+        ):
+            return True
+        return False
+
+    def _resident(self, tenant: str) -> Optional[int]:
+        quota = self.registry.get(tenant).quota
+        if quota.sandbox_bytes is None:
+            return None
+        return self.registry.resident_bytes(tenant)
+
+    def submit(self, cu: ComputeUnit) -> bool:
+        """Admit ``cu`` to placement or park it; True iff admitted now.
+
+        Admission pushes onto ``cds:incoming`` exactly as the pre-QoS
+        release paths did; parking leaves the CU ``Pending`` off every
+        queue with a store-side ``admission: parked`` marker."""
+        tenant = self._tenant_of(cu)
+        resident = self._resident(tenant)
+        with self._lock:
+            queue = self._parked.get(tenant)
+            if (queue and len(queue) > 0) or self._over_quota(tenant, resident):
+                # earlier parked CUs keep FIFO precedence within a tenant
+                self._parked.setdefault(
+                    tenant, collections.deque()
+                ).append(cu.id)
+                self.parked_total += 1
+                parked = True
+            else:
+                self.registry.note_admitted(tenant, cu.id, self._estimate(cu))
+                self.admission_log.append(cu.id)
+                parked = False
+        if parked:
+            self.ctx.store.hset(f"cu:{cu.id}", "admission", "parked")
+            return False
+        self.ctx.store.hset(f"cu:{cu.id}", "admission", "admitted")
+        self.ctx.store.push("cds:incoming", cu.id)
+        return True
+
+    def requeue(self, cu: ComputeUnit) -> bool:
+        """Backpressure re-entry from the agent claim path: the CU hit
+        sandbox quota pressure mid-staging and went back to ``Pending``.
+        Re-check its tenant's quota — if the tenant itself is now over (it
+        caused the pressure), park instead of hot-looping through the
+        global queue; otherwise hand it straight back to the global queue
+        exactly as the pre-QoS path did."""
+        tenant = self._tenant_of(cu)
+        resident = self._resident(tenant)
+        with self._lock:
+            self.registry.note_removed(tenant, cu.id)
+            if self._over_quota(tenant, resident):
+                # oldest work re-admits first: park at the FRONT
+                self._parked.setdefault(
+                    tenant, collections.deque()
+                ).appendleft(cu.id)
+                self.parked_total += 1
+                parked = True
+            else:
+                self.registry.note_admitted(tenant, cu.id, 0.0)
+                parked = False
+        if parked:
+            self.ctx.store.hset(f"cu:{cu.id}", "admission", "parked")
+            return False
+        self.ctx.store.push(GLOBAL_QUEUE, {"cu": cu.id, "dup": False})
+        return True
+
+    # ---------------------------------------------------------------- drain
+    def _on_cu_event(self, ev: StoreEvent) -> None:
+        cu_id = ev.key.split(":", 1)[1]
+        tenant = (
+            self.ctx.store.hget(f"cu:{cu_id}", "tenant") or DEFAULT_TENANT
+        )
+        self.registry.note_removed(tenant, cu_id)
+        self.poke()
+
+    def poke(self) -> int:
+        """Drain parked CUs that now fit their tenants' quotas; returns
+        how many were admitted.  Starved tenants go first: candidates are
+        ordered by (priority desc, weighted service received asc) — the
+        deficit ordering that makes fair-share weights meaningful across
+        competing backlogs.  Safe to call from any thread."""
+        admitted = 0
+        while True:
+            released = self._release_one()
+            if released is None:
+                return admitted
+            cu_id, state_ok = released
+            if state_ok:
+                self.ctx.store.hset(f"cu:{cu_id}", "admission", "admitted")
+                self.ctx.store.push("cds:incoming", cu_id)
+            admitted += 1
+
+    def _release_one(self) -> Optional[Tuple[str, bool]]:
+        """Pop the most deserving parked CU whose tenant has room.  The
+        quota reads that touch the store (resident bytes) run before the
+        lock is taken; the pick itself is an in-memory decision."""
+        with self._lock:
+            tenants = [t for t, q in self._parked.items() if q]
+        residents = {t: self._resident(t) for t in tenants}
+        order = sorted(
+            tenants,
+            key=lambda t: (
+                -self.registry.get(t).priority,
+                self.registry.deficit_key(t),
+                t,
+            ),
+        )
+        with self._lock:
+            for tenant in order:
+                queue = self._parked.get(tenant)
+                if not queue:
+                    continue
+                if self._over_quota(tenant, residents.get(tenant)):
+                    continue
+                cu_id = queue.popleft()
+                try:
+                    cu = self.ctx.lookup(cu_id)
+                except KeyError:
+                    return cu_id, False
+                self.registry.note_admitted(
+                    tenant, cu_id, self._estimate(cu)
+                )
+                self.admission_log.append(cu_id)
+                return cu_id, True
+        return None
+
+    # ----------------------------------------------------------- preemption
+    def preemption_enabled(self, cu: ComputeUnit) -> bool:
+        """Preemption is attempted only when this CU's tenant outranks
+        SOME registered tenant — default single-tenant workloads never
+        pay the queue scan (and keep their decision order bit-exact)."""
+        if not self.registry.multi_tenant:
+            return False
+        my = self.registry.get(self._tenant_of(cu)).priority
+        return my > self.registry.min_priority()
+
+    def preempt_queued_for(self, cu: ComputeUnit, pilots) -> Optional[object]:
+        """Evict one *queued* lower-priority CU to make room for ``cu``.
+
+        Scans pilot queues (never running slots, never the global queue —
+        removing a global entry frees no pilot capacity) for CUs of
+        strictly lower-priority tenants, preferring the lowest-priority,
+        most-recently-queued victim.  ``qremove`` returning True is the
+        proof no agent claimed the victim; the victim parks at the front
+        of its tenant's line (state still ``Pending``, nothing burned)
+        and the caller pushes ``cu`` to the vacated pilot queue.
+        Returns that pilot, or None when nothing was preemptible."""
+        store = self.ctx.store
+        my_tenant = self._tenant_of(cu)
+        my_pri = self.registry.get(my_tenant).priority
+        victims: List[Tuple[int, int, object, Dict, str]] = []
+        for pilot in pilots:
+            if pilot.state not in PilotState.PLACEABLE:
+                continue
+            for pos, item in enumerate(store.qpeek(pilot.queue_name)):
+                vid = item["cu"] if isinstance(item, dict) else item
+                vt = store.hget(f"cu:{vid}", "tenant") or DEFAULT_TENANT
+                if vt == my_tenant:
+                    continue
+                vp = self.registry.get(vt).priority
+                if vp < my_pri:
+                    victims.append((vp, -pos, pilot, item, vt))
+        # lowest priority first; within a queue, the most recently queued
+        # (it has waited least — minimal disruption)
+        victims.sort(key=lambda v: (v[0], v[1]))
+        for vp, _negpos, pilot, item, vt in victims:
+            if not store.qremove(pilot.queue_name, item):
+                continue  # an agent won the race: victim is running
+            vid = item["cu"] if isinstance(item, dict) else item
+            with self._lock:
+                self.registry.note_removed(vt, vid)
+                self._parked.setdefault(
+                    vt, collections.deque()
+                ).appendleft(vid)
+                self.parked_total += 1
+                self.preemptions.append(
+                    {
+                        "cu": vid,
+                        "tenant": vt,
+                        "by": cu.id,
+                        "by_tenant": my_tenant,
+                        "pilot": pilot.id,
+                    }
+                )
+            store.hset(f"cu:{vid}", "admission", "preempted")
+            return pilot
+        return None
+
+    # -------------------------------------------------------------- control
+    def parked(self) -> Dict[str, List[str]]:
+        with self._lock:
+            return {t: list(q) for t, q in self._parked.items() if q}
+
+    def stop(self) -> None:
+        self._pump.stop()
+
+
 class ComputeDataService:
     """Workload manager: late-binds CUs/DUs to pilots by affinity (§5)."""
 
@@ -276,6 +557,8 @@ class ComputeDataService:
             strategy if isinstance(strategy, PlacementStrategy)
             else make_strategy(strategy)
         )
+        # tenant-aware strategies read the registry/store through the ctx
+        self.strategy.bind(ctx)
         self._pilots: List[PilotCompute] = []
         self._pds: List[PilotData] = []
         self._cus: List[ComputeUnit] = []
@@ -296,6 +579,10 @@ class ComputeDataService:
         #: DU-readiness gate (dataflow semantics) — shared by both
         #: execution modes, so sync and async release CUs identically
         self.deps = DependencyTracker(self)
+        #: per-tenant QoS gate — every release path (submission, dep
+        #: release, backpressure requeue) funnels through it; with only
+        #: the default tenant it is a deterministic pass-through
+        self.admission = AdmissionController(self)
         self._thread: Optional[threading.Thread] = None
         if start_loop:
             # Legacy sync mode: a polling loop owns placement.  In async
@@ -466,8 +753,10 @@ class ComputeDataService:
                     pass  # speculative staging must never fail a submit
         else:
             cu._set_state(CUState.PENDING)
-            # Asynchronous interface (§4.2): enqueue and return immediately.
-            self.ctx.store.push("cds:incoming", cu.id)
+            # Asynchronous interface (§4.2): enqueue and return
+            # immediately — through the tenant admission gate, which
+            # parks over-quota tenants instead of failing them.
+            self.admission.submit(cu)
         return cu
 
     def compute_units(self) -> List[ComputeUnit]:
@@ -594,6 +883,15 @@ class ComputeDataService:
                     }
                 )
             return None
+        # Step 4 QoS refinement: before falling to the global queue, a
+        # higher-priority tenant may displace one *queued* (never
+        # running) CU of a lower-priority tenant and take its slot in
+        # line.  Default single-tenant workloads never enter this branch.
+        if self.admission.preemption_enabled(cu):
+            target = self.admission.preempt_queued_for(cu, pilots)
+            if target is not None:
+                self._push_to_pilot(cu, target)
+                return target
         # Step 4: global queue — first pilot with a slot pulls it.
         self.ctx.store.push(GLOBAL_QUEUE, {"cu": cu.id, "dup": False})
         return None
@@ -699,5 +997,6 @@ class ComputeDataService:
     def cancel(self) -> None:
         self._stop.set()
         self.deps.stop()
+        self.admission.stop()
         if self._thread is not None:
             self._thread.join(timeout=2.0)

@@ -38,6 +38,7 @@ from .compute_unit import ComputeUnitDescription
 from .data_unit import DataUnit, DataUnitDescription
 from .futures import CUFuture, DUFuture, FutureDispatcher, gather
 from .pilot import PilotCompute, PilotData
+from .tenancy import DEFAULT_TENANT, ResourceQuota
 
 #: anything submit_cu accepts as a data reference
 DataRef = Union[str, DataUnit, DUFuture, DataUnitDescription]
@@ -51,9 +52,26 @@ class Session:
     manager (``Session(manager=mgr)`` / ``mgr.session``).  A standalone
     session owns its manager and shuts it down on ``close()``/context exit;
     an attached session leaves the manager running.
+
+    A session is also the unit of *tenancy*: ``tenant=`` names the owner,
+    ``priority=`` / ``quota=`` register its QoS class with the manager's
+    :class:`~repro.core.tenancy.TenantRegistry`.  Every DU/CU submitted
+    through this session is stamped with the session tenant (unless the
+    description already names one), which is what admission control,
+    fair-share placement and tenant-aware eviction key on.  Single-tenant
+    callers need zero changes: the default tenant keeps the exact pre-QoS
+    behavior.
     """
 
-    def __init__(self, manager: Optional[Any] = None, **manager_kwargs: Any):
+    def __init__(
+        self,
+        manager: Optional[Any] = None,
+        *,
+        tenant: str = DEFAULT_TENANT,
+        priority: int = 0,
+        quota: Optional[ResourceQuota] = None,
+        **manager_kwargs: Any,
+    ):
         if manager is not None and manager_kwargs:
             raise ValueError("pass either manager= or manager kwargs, not both")
         if manager is None:
@@ -64,8 +82,16 @@ class Session:
         else:
             self._owns_manager = False
         self.manager = manager
+        self.tenant = tenant
+        if tenant != DEFAULT_TENANT or priority != 0 or quota is not None:
+            # re-registering the same tenant name updates its QoS class
+            # (latest wins) — two sessions may share one tenant
+            manager.cds.admission.registry.register(
+                tenant, priority=priority, quota=quota
+            )
         self._dispatcher = FutureDispatcher(manager.store)
         self._closed = False
+        manager._attach_session(self)
 
     # ----------------------------------------------------------- delegation
     @property
@@ -139,6 +165,16 @@ class Session:
         return self.cds.decisions()
 
     # ----------------------------------------------------------------- data
+    def _stamp_tenant(self, desc: Any) -> Any:
+        """Stamp the session tenant onto a DU/CU description in place.
+
+        A description that already names a non-default tenant wins — it
+        was set deliberately (e.g. submitting on another tenant's behalf).
+        """
+        if desc.tenant == DEFAULT_TENANT and self.tenant != DEFAULT_TENANT:
+            desc.tenant = self.tenant
+        return desc
+
     def submit_du(
         self,
         desc: Optional[DataUnitDescription] = None,
@@ -153,7 +189,7 @@ class Session:
             desc = DataUnitDescription(**kw)
         elif kw:
             raise ValueError("pass a description or kwargs, not both")
-        du = self.cds.submit_data_unit(desc, target=target)
+        du = self.cds.submit_data_unit(self._stamp_tenant(desc), target=target)
         return DUFuture(du, self.store, dispatcher=self._dispatcher)
 
     def create_du(
@@ -167,7 +203,7 @@ class Session:
             desc = DataUnitDescription(**kw)
         elif kw:
             raise ValueError("pass a description or kwargs, not both")
-        du = self.cds.create_data_unit(desc)
+        du = self.cds.create_data_unit(self._stamp_tenant(desc))
         return DUFuture(du, self.store, dispatcher=self._dispatcher)
 
     def create_streaming_du(
@@ -185,7 +221,7 @@ class Session:
             raise ValueError("pass a description or kwargs, not both")
         if not desc.streaming:
             raise ValueError("create_streaming_du needs streaming=True")
-        du = self.cds.create_data_unit(desc)
+        du = self.cds.create_data_unit(self._stamp_tenant(desc))
         return DUFuture(du, self.store, dispatcher=self._dispatcher)
 
     # -------------------------------------------------------------- compute
@@ -252,13 +288,14 @@ class Session:
                 raise ValueError(
                     "pass a ComputeUnitDescription or kwargs, not both"
                 )
-            cu = self.cds.submit_compute_unit(desc)
+            cu = self.cds.submit_compute_unit(self._stamp_tenant(desc))
             outs = [
                 DUFuture(self._du_handle(i), self.store, dispatcher=self._dispatcher)
                 for i in desc.output_data
             ]
             return CUFuture(cu, self.store, outputs=outs, dispatcher=self._dispatcher)
         out_futures = [self._resolve_output(o) for o in output_data]
+        kw.setdefault("tenant", self.tenant)
         cud = ComputeUnitDescription(
             input_data=[self._resolve_input(i) for i in input_data],
             output_data=[o.id for o in out_futures],
@@ -282,7 +319,12 @@ class Session:
         if self._closed:
             return
         self._closed = True
+        # drain this session's future-dispatcher thread *before* the
+        # manager (and ultimately the store's event dispatcher) can go
+        # away — a dispatcher outliving the store deadlocks futures
+        # waiting on events that will never be delivered
         self._dispatcher.stop()
+        self.manager._detach_session(self)
         if self._owns_manager:
             self.manager.shutdown()
 

@@ -228,6 +228,9 @@ class Victim:
     nbytes: int
     last_access: int  # monotonic access counter (0 = never accessed)
     access_count: int
+    #: owning tenant — tenant-aware make_room reclaims the requestor's
+    #: own redundant chunks before touching anyone else's
+    tenant: str = "default"
 
 
 class EvictionPolicy(abc.ABC):
@@ -341,6 +344,13 @@ class TierManager:
         self.evictions: Deque[Dict[str, Any]] = collections.deque(maxlen=1000)
         self.evictions_total = 0
         self.evicted_bytes_total = 0
+        #: evictions where the requesting tenant reclaimed ANOTHER
+        #: tenant's (redundant, unpinned) chunks — only after its own
+        #: were exhausted
+        self.cross_tenant_evictions_total = 0
+        #: cross-tenant evictions that touched a pinned DU: guarded to be
+        #: impossible (victim discovery excludes them); bench-gated == 0
+        self.cross_tenant_pinned_evictions = 0
         #: bounded audit tail of (du_id, cache_pd_id) promotions
         self.promotions: Deque[tuple] = collections.deque(maxlen=1000)
         self.promotions_total = 0
@@ -450,7 +460,10 @@ class TierManager:
         return pd._du_objs.get(du_id)
 
     def evictable_victims(
-        self, pd: PilotData, exclude_du: Optional[str] = None
+        self,
+        pd: PilotData,
+        exclude_du: Optional[str] = None,
+        tenant: Optional[str] = None,
     ) -> List[Victim]:
         """Chunk replicas in ``pd`` that are safe to drop.
 
@@ -460,8 +473,15 @@ class TierManager:
         a live consumer, leased as an in-flight transfer source, being
         staged into ``pd`` right now, or when dropping this (full) replica
         would take the DU below its ``replication_factor``.
+
+        ``tenant`` names the requestor (the tenant whose write needs the
+        space): the streaming-frontier carve-out below — the only path
+        that may touch a *pinned* DU's chunks — is then restricted to the
+        requestor's own DUs, so one tenant's pressure can never reclaim
+        even the consumed prefix of ANOTHER tenant's pinned working set.
         """
         ts = self.ctx.transfer_service
+        store = self.ctx.store
         # one barrier + one stats copy up front (PD-L002: per-DU
         # access_stats() calls would flush the dispatcher once per DU,
         # and make_room() calls us with _evict_lock held)
@@ -474,9 +494,14 @@ class TierManager:
             du = self._du_handle(pd, du_id)
             if du is None:
                 continue
+            du_tenant = store.hget(f"du:{du_id}", "tenant") or "default"
             frontier: Optional[int] = None
             if self.pins.pinned(du_id):
                 if not du.streaming:
+                    continue
+                if tenant is not None and du_tenant != tenant:
+                    # another tenant's pinned streaming working set is
+                    # off-limits entirely, consumed prefix included
                     continue
                 # streamed chunks are evictable only PAST the slowest live
                 # consumer's read frontier: consumed prefix chunks may be
@@ -525,27 +550,49 @@ class TierManager:
                     nbytes=nbytes,
                     last_access=last,
                     access_count=count,
+                    tenant=du_tenant,
                 )
             )
         return out
 
     def make_room(
-        self, pd: PilotData, need: int, exclude_du: Optional[str] = None
+        self,
+        pd: PilotData,
+        need: int,
+        exclude_du: Optional[str] = None,
+        tenant: Optional[str] = None,
     ) -> int:
         """Reclaim at least ``need`` bytes in ``pd`` by evicting redundant
         chunk replicas in policy order; returns bytes actually freed (may
         be less when the invariants forbid further eviction — the caller
         then raises ``QuotaExceeded`` exactly as before).
-        """
+
+        ``tenant`` names the requestor: its OWN redundant chunks are
+        reclaimed (in policy order) before any other tenant's are touched,
+        so one tenant's cache pressure is absorbed by its own working set
+        first.  Cross-tenant evictions — still invariant-guarded: never a
+        pinned DU, never a last copy — are counted separately for audit.
+        With ``tenant=None`` (or a single-tenant world, where every victim
+        shares the requestor's tenant) the ordering is exactly the
+        pre-tenancy policy ranking."""
         if need <= 0:
             return 0
         freed = 0
         # candidate discovery barriers on the store dispatcher, so it must
         # run before _evict_lock is taken (PD-L002: the dispatcher may be
         # delivering a callback that wants this same lock)
-        candidates = self.evictable_victims(pd, exclude_du=exclude_du)
+        candidates = self.evictable_victims(
+            pd, exclude_du=exclude_du, tenant=tenant
+        )
         with self._evict_lock:
-            victims = self.policy.rank(pd, candidates)
+            if tenant is not None:
+                own = [v for v in candidates if v.tenant == tenant]
+                others = [v for v in candidates if v.tenant != tenant]
+                victims = self.policy.rank(pd, own) + self.policy.rank(
+                    pd, others
+                )
+            else:
+                victims = self.policy.rank(pd, candidates)
             for v in victims:
                 if freed >= need:
                     break
@@ -566,6 +613,13 @@ class TierManager:
                 if nbytes:
                     self.evictions_total += 1
                     self.evicted_bytes_total += nbytes
+                    cross = tenant is not None and v.tenant != tenant
+                    if cross:
+                        self.cross_tenant_evictions_total += 1
+                        if self.pins.pinned(v.du_id):
+                            # guarded against upstream — this counter
+                            # staying 0 is the bench-gated isolation claim
+                            self.cross_tenant_pinned_evictions += 1
                     self.evictions.append(
                         {
                             "pd": pd.id,
@@ -573,6 +627,8 @@ class TierManager:
                             "chunks": len(take),
                             "nbytes": nbytes,
                             "policy": self.policy.name,
+                            "tenant": v.tenant,
+                            "requestor": tenant or "",
                         }
                     )
         return freed

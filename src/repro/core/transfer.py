@@ -113,6 +113,10 @@ class TransferService:
         self._src_leases: Dict[Tuple[str, str], int] = {}
         #: monotonic stamp for du:access records (tier access statistics)
         self._access_seq = itertools.count(1)
+        #: per-tenant transfer attribution (sim seconds / bytes moved),
+        #: keyed by the DU's owning tenant — fairness accounting
+        self._tenant_sim: Dict[str, float] = {}
+        self._tenant_bytes: Dict[str, int] = {}
 
     # ------------------------------------------------------------- costing
     def simulated_transfer_time(
@@ -152,13 +156,36 @@ class TransferService:
         return match_affinity(pd.affinity, location) or pd.affinity == location
 
     def record(self, rec: TransferRecord) -> None:
+        # attribute the transfer to the DU's owning tenant (store-side
+        # lookup BEFORE taking our lock — no store op under a held lock)
+        tenant = (
+            self.ctx.store.hget(f"du:{rec.du_id}", "tenant") or "default"
+        )
         with self._lock:
             self._records.append(rec)
             self._sim_now += rec.sim_seconds
+            self._tenant_sim[tenant] = (
+                self._tenant_sim.get(tenant, 0.0) + rec.sim_seconds
+            )
+            self._tenant_bytes[tenant] = (
+                self._tenant_bytes.get(tenant, 0) + rec.nbytes
+            )
 
     def records(self) -> List[TransferRecord]:
         with self._lock:
             return list(self._records)
+
+    def per_tenant_transfer(self) -> Dict[str, Dict[str, float]]:
+        """Per-tenant transfer totals ({tenant: {"sim_seconds", "bytes"}})
+        — the fairness accounting the multi-tenant bench reports on."""
+        with self._lock:
+            return {
+                t: {
+                    "sim_seconds": self._tenant_sim.get(t, 0.0),
+                    "bytes": float(self._tenant_bytes.get(t, 0)),
+                }
+                for t in set(self._tenant_sim) | set(self._tenant_bytes)
+            }
 
     def total_sim_seconds(self) -> float:
         with self._lock:
@@ -576,29 +603,48 @@ class TransferService:
         return by_label[best_label], False
 
     def estimate_stage_cost(
-        self, du: DataUnit, location: str, sandbox: PilotData
+        self,
+        du: DataUnit,
+        location: str,
+        sandbox: PilotData,
+        tenant: Optional[str] = None,
     ) -> float:
         """Simulated cost of making ``du`` available at ``location``: 0 for
         linkable full replicas and fully-cached sandboxes, else the striped
         multi-source fetch cost of the *missing* chunks only (max over the
         parallel per-source waves).  Memoized like :meth:`resolve_access`.
-        """
+
+        With a ``tenant``, the cost is scaled by that tenant's share of
+        the contended bandwidth (its fair-share weight over all active
+        tenants' weights): competing tenants see each other's traffic in
+        the placement cost model.  The scaling applies AFTER the memoized
+        lookup, so the cache stays tenant-neutral (one entry per
+        (du, location, sandbox), valid for every requester)."""
         ver = du.locations_version
         key = (du.id, location, sandbox.id)
+        cost: Optional[float] = None
         with self._lock:
             hit = self._estimate_cache.get(key)
             if hit is not None and hit[0] == ver:
                 self.cache_hits += 1
-                return hit[1]
-            self.cache_misses += 1
-        _, linked = self.resolve_access(du, location)
-        if linked:
-            cost = 0.0
-        else:
-            groups = self.plan_chunk_fetch(du, sandbox, location)
-            cost = max((g.sim_seconds for g in groups), default=0.0)
-        with self._lock:
-            self._estimate_cache[key] = (ver, cost)
+                cost = hit[1]
+            else:
+                self.cache_misses += 1
+        if cost is None:
+            _, linked = self.resolve_access(du, location)
+            if linked:
+                cost = 0.0
+            else:
+                groups = self.plan_chunk_fetch(du, sandbox, location)
+                cost = max((g.sim_seconds for g in groups), default=0.0)
+            with self._lock:
+                self._estimate_cache[key] = (ver, cost)
+        if tenant is not None and cost > 0:
+            registry = getattr(self.ctx, "tenant_registry", None)
+            if registry is not None:
+                share = registry.bw_share(tenant)
+                if share < 1.0:
+                    cost = cost / max(share, 1e-9)
         return cost
 
     def stage_in(

@@ -1,0 +1,477 @@
+"""Multi-tenant QoS: admission control, quota parking, fair-share drain,
+queued-only preemption, tenant-aware eviction, and the single-tenant
+backward-compat guarantee.
+
+The tenancy layer must be invisible to single-tenant callers (the default
+tenant is a strict pass-through preserving the pre-QoS release order) and
+must never convert quota pressure into burned retries: a parked CU stays
+``Pending`` with zero attempts until its tenant has room again.
+"""
+
+import threading
+import time
+
+import pytest
+
+from repro.core import (
+    CoordinationStore,
+    CUState,
+    DataUnit,
+    DataUnitDescription,
+    FUNCTIONS,
+    PilotData,
+    PilotDataDescription,
+    PilotManager,
+    ResourceQuota,
+    RuntimeContext,
+    Session,
+    TierManager,
+    Topology,
+    TransferService,
+)
+from repro.core.tenancy import DEFAULT_TENANT
+
+SITE = "grid:site0"
+CHUNK = 64
+DU_BYTES = 4 * CHUNK
+
+
+def _topo(*labels) -> Topology:
+    topo = Topology()
+    for lbl in labels or (SITE,):
+        topo.register(lbl, bandwidth=30e6, latency=0.01)
+    return topo
+
+
+def _register_probe():
+    """``mt-probe`` records finish order and live concurrency per tag."""
+    state = {
+        "lock": threading.Lock(),
+        "live": {},
+        "max_live": {},
+        "finished": [],
+    }
+
+    def probe(cu_ctx, tag="?"):
+        with state["lock"]:
+            state["live"][tag] = state["live"].get(tag, 0) + 1
+            state["max_live"][tag] = max(
+                state["max_live"].get(tag, 0), state["live"][tag]
+            )
+        time.sleep(0.02)
+        with state["lock"]:
+            state["live"][tag] -= 1
+            state["finished"].append((tag, cu_ctx.cu.id))
+        return tag
+
+    FUNCTIONS.register("mt-probe", probe)
+    return state
+
+
+def _wait_until(predicate, timeout=10.0):
+    deadline = time.monotonic() + timeout
+    while time.monotonic() < deadline:
+        if predicate():
+            return True
+        time.sleep(0.01)
+    return predicate()
+
+
+# ------------------------------------------------- single-tenant passthrough
+@pytest.mark.parametrize("mode", ["sync", "async"])
+def test_default_tenant_is_exact_passthrough(mode):
+    """Single-tenant callers need zero changes: nothing parks, nothing
+    preempts, and every submitted CU flows through admission in order."""
+    _register_probe()
+    with Session(topology=_topo(), scheduler_mode=mode) as s:
+        p = s.start_pilot(resource_url=f"sim://{SITE}", slots=2)
+        p.wait_active()
+        cus = [
+            s.submit_cu(executable="mt-probe", kwargs={"tag": "d"})
+            for _ in range(4)
+        ]
+        assert [c.result(timeout=30) for c in cus] == ["d"] * 4
+        adm = s.cds.admission
+        assert not adm.registry.multi_tenant
+        assert adm.parked_total == 0
+        assert adm.preemptions == []
+        assert adm.parked() == {}
+        # every CU passed the gate, synchronously, in submission order
+        assert adm.admission_log == [c.id for c in cus]
+        for c in cus:
+            assert s.store.hget(f"cu:{c.id}", "admission") == "admitted"
+            assert c.description.tenant == DEFAULT_TENANT
+
+
+def test_session_stamps_tenant_on_dus_and_cus():
+    mgr = PilotManager(topology=_topo())
+    try:
+        ten = Session(manager=mgr, tenant="acme", priority=3)
+        _register_probe()
+        p = ten.start_pilot(resource_url=f"sim://{SITE}", slots=1)
+        p.wait_active()
+        du = ten.submit_du(name="in", files={"x": b"z" * 64})
+        cu = ten.submit_cu(
+            executable="mt-probe", kwargs={"tag": "a"}, input_data=[du]
+        )
+        assert cu.result(timeout=30) == "a"
+        assert mgr.store.hget(f"du:{du.id}", "tenant") == "acme"
+        assert mgr.store.hget(f"cu:{cu.id}", "tenant") == "acme"
+        reg = mgr.cds.admission.registry
+        assert reg.get("acme").priority == 3
+        assert reg.multi_tenant
+        ten.close()
+    finally:
+        mgr.shutdown()
+
+
+# --------------------------------------------------------- quota admission
+def test_cu_slot_quota_parks_without_burning_retries():
+    """A tenant over its cu_slots quota has surplus CUs *parked*: they stay
+    Pending with zero attempts (no retry burned, no quota_waits), run at
+    most quota-wide, and all finish as capacity turns over."""
+    release = threading.Event()
+
+    def blocker(cu_ctx):
+        release.wait(timeout=30)
+        return "blocked"
+
+    FUNCTIONS.register("mt-blocker", blocker)
+    state = _register_probe()
+    mgr = PilotManager(topology=_topo())
+    try:
+        ten = Session(
+            manager=mgr, tenant="capped", quota=ResourceQuota(cu_slots=1)
+        )
+        p = ten.start_pilot(resource_url=f"sim://{SITE}", slots=4)
+        p.wait_active()
+        first = ten.submit_cu(executable="mt-blocker")
+        assert _wait_until(
+            lambda: mgr.store.hget(f"cu:{first.id}", "state")
+            == CUState.RUNNING
+        )
+        cus = [
+            ten.submit_cu(executable="mt-probe", kwargs={"tag": "c"})
+            for _ in range(5)
+        ]
+        adm = mgr.cds.admission
+        # the blocker holds the single quota slot: every probe parked,
+        # Pending, off every queue, zero attempts — deterministic because
+        # no terminal event can drain the park while the blocker runs
+        assert adm.parked()["capped"] == [c.id for c in cus]
+        assert adm.parked_total == 5
+        for c in cus:
+            assert mgr.store.hget(f"cu:{c.id}", "state") == CUState.PENDING
+            assert mgr.store.hget(f"cu:{c.id}", "admission") == "parked"
+            assert int(mgr.store.hget(f"cu:{c.id}", "attempts", 0)) == 0
+        release.set()
+        assert first.result(timeout=30) == "blocked"
+        assert [c.result(timeout=60) for c in cus] == ["c"] * 5
+        # quota-wide concurrency bound held despite 4 free pilot slots
+        assert state["max_live"]["c"] == 1
+        # nothing was ever retried or counted as quota backpressure
+        for c in cus:
+            assert c.cu.attempts <= 1
+            assert int(mgr.store.hget(f"cu:{c.id}", "quota_waits", 0)) == 0
+        # FIFO within the tenant: admission order == submission order
+        ids = {c.id for c in cus}
+        admitted = [i for i in adm.admission_log if i in ids]
+        assert admitted == [c.id for c in cus]
+        ten.close()
+    finally:
+        release.set()
+        mgr.shutdown()
+
+
+def test_requeue_parks_only_when_own_tenant_over_quota():
+    """The agent's sandbox-backpressure requeue re-enters admission: a
+    tenant over its own byte quota parks (front of its line) instead of
+    hot-looping through the global queue; an under-quota tenant goes
+    straight back to the global queue as before."""
+    _register_probe()
+    mgr = PilotManager(topology=_topo())
+    try:
+        ten = Session(
+            manager=mgr,
+            tenant="fat",
+            quota=ResourceQuota(sandbox_bytes=10 * DU_BYTES),
+        )
+        ten.start_pilot_data(service_url=f"mem://{SITE}/pd", affinity=SITE)
+        p = ten.start_pilot(resource_url=f"sim://{SITE}", slots=1)
+        p.wait_active()
+        # one staged DU makes the tenant's resident bytes non-zero
+        du = ten.submit_du(name="resident", files={"x": b"r" * DU_BYTES})
+        cu = ten.submit_cu(executable="mt-probe", kwargs={"tag": "f"})
+        assert cu.result(timeout=30) == "f"
+        adm = mgr.cds.admission
+        assert adm.registry.resident_bytes("fat") >= DU_BYTES
+        # tighten the quota below what is resident: requeue must park
+        adm.registry.register(
+            "fat", quota=ResourceQuota(sandbox_bytes=DU_BYTES)
+        )
+        handle = mgr.ctx.lookup(cu.id)
+        before = adm.parked_total
+        assert adm.requeue(handle) is False  # over quota: parked, front
+        assert adm.parked_total == before + 1
+        assert adm.parked()["fat"][0] == cu.id
+        assert mgr.store.hget(f"cu:{cu.id}", "admission") == "parked"
+        # loosen the quota: the same requeue now passes straight through
+        adm.registry.register(
+            "fat", quota=ResourceQuota(sandbox_bytes=10 * DU_BYTES)
+        )
+        adm._parked["fat"].clear()
+        assert adm.requeue(handle) is True
+        assert du.result(timeout=10).sealed
+        ten.close()
+    finally:
+        mgr.shutdown()
+
+
+# ------------------------------------------------------ starvation freedom
+def test_light_tenant_not_starved_by_flooding_tenant():
+    """A capped heavy tenant flooding the system cannot starve a light
+    tenant submitted afterwards: every light CU finishes before the heavy
+    backlog drains."""
+    state = _register_probe()
+    mgr = PilotManager(topology=_topo())
+    try:
+        heavy = Session(
+            manager=mgr, tenant="heavy", quota=ResourceQuota(cu_slots=2)
+        )
+        light = Session(manager=mgr, tenant="light")
+        p = heavy.start_pilot(resource_url=f"sim://{SITE}", slots=2)
+        p.wait_active()
+        hs = [
+            heavy.submit_cu(executable="mt-probe", kwargs={"tag": "h"})
+            for _ in range(12)
+        ]
+        ls = [
+            light.submit_cu(executable="mt-probe", kwargs={"tag": "l"})
+            for _ in range(3)
+        ]
+        assert [c.result(timeout=120) for c in ls] == ["l"] * 3
+        assert [c.result(timeout=120) for c in hs] == ["h"] * 12
+        assert state["max_live"]["h"] <= 2
+        order = [tag for tag, _ in state["finished"]]
+        last_light = max(i for i, t in enumerate(order) if t == "l")
+        last_heavy = max(i for i, t in enumerate(order) if t == "h")
+        assert last_light < last_heavy, order
+        heavy.close(), light.close()
+    finally:
+        mgr.shutdown()
+
+
+# ------------------------------------------------------ queued preemption
+def test_high_priority_preempts_queued_not_running():
+    """A starved high-priority tenant takes a queue slot from the lowest
+    priority tenant's *queued* CU (qremove is the claim-race CAS); the
+    running CU is never touched and the victim re-admits later, nothing
+    burned."""
+    release = threading.Event()
+
+    def blocker(cu_ctx):
+        release.wait(timeout=30)
+        return "blocked"
+
+    FUNCTIONS.register("mt-blocker-2", blocker)
+    _register_probe()
+    mgr = PilotManager(topology=_topo())
+    try:
+        low = Session(manager=mgr, tenant="low", priority=0)
+        high = Session(manager=mgr, tenant="high", priority=5)
+        p = low.start_pilot(resource_url=f"sim://{SITE}", slots=1)
+        p.wait_active()
+        running = low.submit_cu(executable="mt-blocker-2")
+        assert _wait_until(
+            lambda: mgr.store.hget(f"cu:{running.id}", "state")
+            == CUState.RUNNING
+        )
+        # direct-bound: these sit on the pilot queue behind the blocker
+        q1 = low.submit_cu(
+            executable="mt-probe", kwargs={"tag": "q"}, pilot=p
+        )
+        q2 = low.submit_cu(
+            executable="mt-probe", kwargs={"tag": "q"}, pilot=p
+        )
+        assert _wait_until(lambda: mgr.store.qlen(p.queue_name) >= 2)
+        adm = mgr.cds.admission
+        hp = high.submit_cu(executable="mt-probe", kwargs={"tag": "hp"})
+        assert _wait_until(lambda: len(adm.preemptions) == 1)
+        ev = adm.preemptions[0]
+        # most-recently-queued victim of the lowest-priority tenant;
+        # the running blocker was never a candidate
+        assert ev["cu"] == q2.id
+        assert ev["tenant"] == "low" and ev["by_tenant"] == "high"
+        assert ev["by"] == hp.id and ev["pilot"] == p.id
+        assert mgr.store.hget(f"cu:{q2.id}", "admission") == "preempted"
+        assert mgr.store.hget(f"cu:{q2.id}", "state") == CUState.PENDING
+        # the high-priority CU took the vacated queue position
+        queued = [
+            i["cu"] if isinstance(i, dict) else i
+            for i in mgr.store.qpeek(p.queue_name)
+        ]
+        assert hp.id in queued and q2.id not in queued
+        release.set()
+        assert running.result(timeout=30) == "blocked"
+        assert hp.result(timeout=30) == "hp"
+        # the victim re-admitted from park and completed; zero burned
+        assert q1.result(timeout=30) == "q"
+        assert q2.result(timeout=30) == "q"
+        assert int(mgr.store.hget(f"cu:{q2.id}", "quota_waits", 0)) == 0
+        low.close(), high.close()
+    finally:
+        release.set()
+        mgr.shutdown()
+
+
+def test_no_preemption_between_equal_priority_tenants():
+    _register_probe()
+    mgr = PilotManager(topology=_topo())
+    try:
+        a = Session(manager=mgr, tenant="a", priority=1)
+        b = Session(manager=mgr, tenant="b", priority=1)
+        p = a.start_pilot(resource_url=f"sim://{SITE}", slots=1)
+        p.wait_active()
+        cus = [
+            s.submit_cu(executable="mt-probe", kwargs={"tag": t})
+            for s, t in ((a, "a"), (b, "b"), (a, "a"), (b, "b"))
+        ]
+        assert [c.result(timeout=30) for c in cus] == ["a", "b", "a", "b"]
+        assert mgr.cds.admission.preemptions == []
+        a.close(), b.close()
+    finally:
+        mgr.shutdown()
+
+
+# -------------------------------------------------- tenant-aware eviction
+def _mk_ctx(*labels):
+    ctx = RuntimeContext(store=CoordinationStore(), topology=_topo(*labels))
+    TransferService(ctx)
+    return ctx
+
+
+def _mk_pd(ctx, url, affinity, quota=1 << 40):
+    pd = PilotData(
+        PilotDataDescription(
+            service_url=url, affinity=affinity, size_quota=quota
+        ),
+        ctx,
+    )
+    return ctx.register(pd)
+
+
+def _mk_du(ctx, name, fill, tenant):
+    du = DataUnit(
+        DataUnitDescription(
+            name=name,
+            files={"x": fill * DU_BYTES},
+            chunk_size=CHUNK,
+            tenant=tenant,
+        ),
+        ctx.store,
+    )
+    return ctx.register(du)
+
+
+def test_eviction_prefers_requestors_own_chunks():
+    """Under tenant-aware make_room, a tenant's space request is served
+    from its OWN redundant chunks first; the rival's replica survives when
+    evicting own bytes suffices."""
+    ctx = _mk_ctx("t:s0", "t:s1")
+    tm = TierManager(ctx, auto_promote=False)
+    base = _mk_pd(ctx, "sharedfs://t:s0/base", "t:s0")
+    edge = _mk_pd(ctx, "mem://t:s1/edge", "t:s1")
+    mine = _mk_du(ctx, "mine", b"A", tenant="alpha")
+    theirs = _mk_du(ctx, "theirs", b"B", tenant="beta")
+    base.put_du(mine), base.put_du(theirs)
+    edge.copy_du_from(mine, base)
+    edge.copy_du_from(theirs, base)
+    freed = tm.make_room(edge, DU_BYTES, tenant="alpha")
+    assert freed >= DU_BYTES
+    assert mine.id not in edge.du_ids()
+    assert theirs.id in edge.du_ids()  # rival untouched: own bytes sufficed
+    assert tm.cross_tenant_evictions_total == 0
+    tm.stop()
+
+
+def test_eviction_never_drops_another_tenants_pinned_working_set():
+    """Another tenant's pinned DU is off-limits even when the requestor
+    needs more than its own bytes: make_room frees what it legally can and
+    the pinned replica survives (the caller then backpressures)."""
+    ctx = _mk_ctx("t:s0", "t:s1")
+    tm = TierManager(ctx, auto_promote=False)
+    base = _mk_pd(ctx, "sharedfs://t:s0/base", "t:s0")
+    edge = _mk_pd(ctx, "mem://t:s1/edge", "t:s1")
+    mine = _mk_du(ctx, "mine", b"A", tenant="alpha")
+    pinned = _mk_du(ctx, "pinned", b"B", tenant="beta")
+    base.put_du(mine), base.put_du(pinned)
+    edge.copy_du_from(mine, base)
+    edge.copy_du_from(pinned, base)
+    # a live consumer of tenant beta pins its working set
+    ctx.store.hset("cu:beta-live", "state", CUState.RUNNING)
+    tm.pins.pin(pinned.id, "beta-live")
+    freed = tm.make_room(edge, 3 * DU_BYTES, tenant="alpha")
+    assert freed == DU_BYTES  # only alpha's own redundant chunks
+    assert pinned.id in edge.du_ids()
+    assert pinned.has_full_coverage()
+    assert tm.cross_tenant_pinned_evictions == 0
+    # the audit trail attributes every eviction to owner + requestor
+    for entry in tm.evictions:
+        assert entry["tenant"] == "alpha"
+        assert entry["requestor"] == "alpha"
+    # the tenant fence aside, the pin alone already protects it on the
+    # single-tenant path too
+    assert all(v.du_id != pinned.id for v in tm.evictable_victims(edge))
+    tm.stop()
+
+
+def test_cross_tenant_eviction_allowed_for_unpinned_redundant_chunks():
+    """Tenant-awareness is an ordering + pin fence, not a hard partition:
+    with no own bytes left, another tenant's UNPINNED redundant replica is
+    fair game (counted in the audit)."""
+    ctx = _mk_ctx("t:s0", "t:s1")
+    tm = TierManager(ctx, auto_promote=False)
+    base = _mk_pd(ctx, "sharedfs://t:s0/base", "t:s0")
+    edge = _mk_pd(ctx, "mem://t:s1/edge", "t:s1")
+    theirs = _mk_du(ctx, "theirs", b"B", tenant="beta")
+    base.put_du(theirs)
+    edge.copy_du_from(theirs, base)
+    freed = tm.make_room(edge, DU_BYTES, tenant="alpha")
+    assert freed >= DU_BYTES
+    assert tm.cross_tenant_evictions_total >= 1
+    assert tm.cross_tenant_pinned_evictions == 0
+    tm.stop()
+
+
+# ------------------------------------------------------- teardown ordering
+def test_close_session_with_parked_waiting_cus():
+    """Closing a session (and its manager) while CUs are parked Waiting on
+    a never-produced DU must drain cleanly: dispatcher and admission
+    threads stop before the store dispatcher, no hang, no error."""
+    _register_probe()
+    s = Session(topology=_topo())
+    p = s.start_pilot(resource_url=f"sim://{SITE}", slots=1)
+    p.wait_active()
+    hole = s.create_du(name="never-produced")
+    waiting = s.submit_cu(
+        executable="mt-probe", kwargs={"tag": "w"}, input_data=[hole]
+    )
+    assert _wait_until(
+        lambda: s.store.hget(f"cu:{waiting.id}", "state") == CUState.WAITING
+    )
+    s.close()  # must not hang or raise
+    assert s.manager._sessions == []
+
+
+def test_close_attached_sessions_drained_by_manager_shutdown():
+    """Sessions attached via Session(manager=...) are tracked: manager
+    shutdown drains their dispatcher threads even when the caller forgot
+    to close them (the pre-fix leak)."""
+    mgr = PilotManager(topology=_topo())
+    s1 = Session(manager=mgr, tenant="x")
+    s2 = Session(manager=mgr, tenant="y")
+    assert s1 in mgr._sessions and s2 in mgr._sessions
+    mgr.shutdown()  # must stop both dispatchers before the store closes
+    assert mgr._sessions == []
+    assert not s1._dispatcher._pump._thread.is_alive()
+    assert not s2._dispatcher._pump._thread.is_alive()

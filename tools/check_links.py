@@ -1,0 +1,137 @@
+#!/usr/bin/env python3
+"""Docs link checker (stdlib only) — CI's docs job runs this.
+
+Two classes of reference are verified across README.md, ROADMAP.md and
+docs/*.md:
+
+1. **Markdown links** ``[text](target)`` — a relative target must exist
+   on disk (external ``http(s)://`` / ``mailto:`` targets are skipped),
+   and a ``#fragment`` pointing into a markdown file must match one of
+   that file's heading anchors (GitHub slug rules).
+2. **Source pointers** — backtick code spans that look like repo paths
+   (``src/repro/core/session.py``, ``benchmarks/run.py``,
+   ``tests/test_pdlint.py`` …) must resolve, so a doc can never name a
+   module that was moved or deleted.  Spans containing globs, spaces or
+   placeholder braces are ignored.
+
+Exit 0 when everything resolves; otherwise print one ``file:line:``
+diagnostic per broken reference and exit 1.
+"""
+
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+from typing import Iterator, List, Tuple
+
+REPO = Path(__file__).resolve().parent.parent
+
+#: code-span path roots worth verifying (a span must start with one)
+PATH_ROOTS = (
+    "src/",
+    "tests/",
+    "benchmarks/",
+    "examples/",
+    "docs/",
+    "tools/",
+    ".github/",
+)
+
+LINK_RE = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)\)")
+CODE_SPAN_RE = re.compile(r"`([^`]+)`")
+HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$")
+
+
+def doc_files() -> List[Path]:
+    files = [REPO / "README.md", REPO / "ROADMAP.md"]
+    files += sorted((REPO / "docs").glob("*.md"))
+    return [f for f in files if f.exists()]
+
+
+def github_slug(heading: str) -> str:
+    """The anchor GitHub generates for a heading line."""
+    text = re.sub(r"`([^`]*)`", r"\1", heading).strip().lower()
+    text = re.sub(r"[^\w\s-]", "", text, flags=re.UNICODE)
+    return re.sub(r"\s+", "-", text)
+
+
+def anchors_of(md: Path) -> set:
+    slugs, seen = set(), {}
+    for line in md.read_text(encoding="utf-8").splitlines():
+        m = HEADING_RE.match(line)
+        if not m:
+            continue
+        slug = github_slug(m.group(1))
+        n = seen.get(slug, 0)
+        seen[slug] = n + 1
+        slugs.add(slug if n == 0 else f"{slug}-{n}")
+    return slugs
+
+
+def iter_lines_outside_fences(md: Path) -> Iterator[Tuple[int, str]]:
+    fenced = False
+    for lineno, line in enumerate(
+        md.read_text(encoding="utf-8").splitlines(), start=1
+    ):
+        if line.lstrip().startswith("```"):
+            fenced = not fenced
+            continue
+        if not fenced:
+            yield lineno, line
+
+
+def check_file(md: Path) -> List[str]:
+    errors: List[str] = []
+    rel = md.relative_to(REPO)
+    for lineno, line in iter_lines_outside_fences(md):
+        for m in LINK_RE.finditer(line):
+            target = m.group(1)
+            if target.startswith(("http://", "https://", "mailto:")):
+                continue
+            path_part, _, fragment = target.partition("#")
+            if path_part:
+                dest = (md.parent / path_part).resolve()
+            else:
+                dest = md.resolve()  # same-file fragment
+            if not dest.exists():
+                errors.append(
+                    f"{rel}:{lineno}: broken link target {target!r}"
+                )
+                continue
+            if fragment and dest.suffix == ".md":
+                if fragment not in anchors_of(dest):
+                    errors.append(
+                        f"{rel}:{lineno}: no heading for anchor "
+                        f"{target!r}"
+                    )
+        for m in CODE_SPAN_RE.finditer(line):
+            span = m.group(1)
+            if not span.startswith(PATH_ROOTS):
+                continue
+            # skip globs, placeholders, multi-token commands, sets
+            if any(ch in span for ch in "{}*<>… ") or span.endswith("."):
+                continue
+            if not (REPO / span).exists():
+                errors.append(
+                    f"{rel}:{lineno}: source pointer `{span}` "
+                    "does not resolve"
+                )
+    return errors
+
+
+def main() -> int:
+    all_errors: List[str] = []
+    files = doc_files()
+    for md in files:
+        all_errors.extend(check_file(md))
+    if all_errors:
+        print("\n".join(all_errors))
+        print(f"\n{len(all_errors)} broken reference(s)", file=sys.stderr)
+        return 1
+    print(f"checked {len(files)} files: all links and pointers resolve")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
